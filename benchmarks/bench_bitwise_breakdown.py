@@ -1,0 +1,89 @@
+"""Paper Figures 3 & 5: element-wise delta distributions and per-bit-position
+XOR contribution breakdown, within-family vs cross-family.
+
+Fig 3: Δw of fine-tunes against their own base are small/bell-shaped; against
+a different family's base they are wide.
+Fig 5: within-family XOR flips concentrate in the low mantissa bits (sign ~
+never flips); cross-family flips are near-uniform (except 1-2 exponent bits).
+"""
+
+from __future__ import annotations
+
+import ml_dtypes
+import numpy as np
+
+from benchmarks.common import Ctx, emit
+from repro.formats.safetensors import SafetensorsFile
+
+
+def _flat_floats(path: str, cap: int = 2_000_000) -> np.ndarray:
+    out = []
+    n = 0
+    with SafetensorsFile(path) as sf:
+        for ti in sf.infos:
+            if ti.dtype_str != "BF16":
+                continue
+            v = sf.tensor(ti.name).reshape(-1)
+            out.append(np.array(v))
+            n += v.size
+            if n >= cap:
+                break
+    return np.concatenate(out)[:cap]
+
+
+def _bit_position_fractions(a: np.ndarray, b: np.ndarray) -> list:
+    """Fraction of total flipped bits at each of the 16 BF16 positions
+    (index 0 = sign, 1-8 = exponent, 9-15 = mantissa)."""
+    x = np.bitwise_xor(a, b)
+    counts = [(int(((x >> (15 - i)) & 1).sum())) for i in range(16)]
+    total = max(sum(counts), 1)
+    return [round(c / total, 4) for c in counts]
+
+
+def run(ctx: Ctx) -> dict:
+    bases = [rid for rid, k in ctx.manifest if k == "base"]
+    fts = {}
+    for rid, k in ctx.manifest:
+        if k == "finetune":
+            fam = rid.split("-")[-2][-1] if False else rid
+            fts.setdefault(rid.split("/")[0][4], []).append(rid)  # userN-... -> family N
+
+    b0 = _flat_floats(ctx.model_file(bases[0]))
+    b1 = _flat_floats(ctx.model_file(bases[1]))
+    ft_fam0 = _flat_floats(ctx.model_file(fts["0"][0]))
+
+    f32 = lambda u16: u16.view(ml_dtypes.bfloat16).astype(np.float32)
+    delta_within = f32(ft_fam0) - f32(b0)
+    delta_cross = f32(ft_fam0) - f32(b1)
+
+    within_bits = _bit_position_fractions(ft_fam0, b0)
+    cross_bits = _bit_position_fractions(ft_fam0, b1)
+
+    return {
+        "fig3_delta_std": {
+            "within_family": float(np.std(delta_within)),
+            "cross_family": float(np.std(delta_cross)),
+            "ratio": round(float(np.std(delta_cross) / max(np.std(delta_within), 1e-12)), 2),
+        },
+        "fig3_delta_zero_fraction": {
+            "within_family": round(float((delta_within == 0).mean()), 4),
+            "cross_family": round(float((delta_cross == 0).mean()), 4),
+        },
+        "fig5_bit_fraction_within": within_bits,
+        "fig5_bit_fraction_cross": cross_bits,
+        "fig5_claims": {
+            # sign bit almost never flips within family
+            "sign_flip_within": within_bits[0],
+            "sign_flip_cross": cross_bits[0],
+            # low-mantissa (last 4 bits) dominance within family
+            "low_mantissa_share_within": round(sum(within_bits[12:]), 4),
+            "low_mantissa_share_cross": round(sum(cross_bits[12:]), 4),
+            "within_concentrated": sum(within_bits[12:]) > 0.5,
+            "cross_uniformish": max(cross_bits[2:]) < 0.25,
+        },
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import build_ctx
+    emit("bitwise_breakdown", run(build_ctx()))

@@ -1,0 +1,72 @@
+"""Paper Figures 4, 11, 12: bit-distance clustering, Monte-Carlo expected-
+distance heatmap, and threshold sensitivity (accuracy / precision / recall /
+F1 over candidate thresholds — the paper picks 4 at 93.5% accuracy)."""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import Ctx, emit
+from repro.core.bitdistance import calibration_heatmap
+from repro.core.clustering import pairwise_bit_distances
+
+
+def run(ctx: Ctx) -> dict:
+    # ---------- Fig 4: clustering over full-weight repos -------------------
+    paths, fam_labels = [], []
+    for rid, kind in ctx.manifest:
+        if kind in ("base", "finetune", "checkpoint", "reupload"):
+            paths.append(ctx.model_file(rid))
+            # family id is encoded in the repo naming convention of the corpus
+            digits = [c for c in rid.split("/")[0] if c.isdigit()]
+            fam_labels.append(digits[0] if digits else "?")
+    D = pairwise_bit_distances(paths, sample_elems=32768)
+    n = len(paths)
+
+    # ---------- Fig 12: threshold sensitivity ------------------------------
+    sweep = {}
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    same = np.array([fam_labels[i] == fam_labels[j] for i, j in pairs])
+    dist = np.array([D[i, j] for i, j in pairs])
+    for thr in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0):
+        pred = dist <= thr
+        tp = int((pred & same).sum())
+        fp = int((pred & ~same).sum())
+        fn = int((~pred & same).sum())
+        tn = int((~pred & ~same).sum())
+        prec = tp / max(tp + fp, 1)
+        rec = tp / max(tp + fn, 1)
+        acc = (tp + tn) / max(len(pairs), 1)
+        f1 = 2 * prec * rec / max(prec + rec, 1e-9)
+        sweep[str(thr)] = {"accuracy": round(acc, 4), "precision": round(prec, 4),
+                           "recall": round(rec, 4), "f1": round(f1, 4)}
+
+    # ---------- Fig 11: MC heatmap -----------------------------------------
+    cal = calibration_heatmap(n=20000)
+    within = D[np.isfinite(D) & (D > 0)]
+
+    return {
+        "n_models": n,
+        "fig4": {
+            "within_family_mean_distance": round(float(dist[same].mean()), 3) if same.any() else None,
+            "cross_family_mean_distance": round(float(dist[~same & np.isfinite(dist)].mean()), 3)
+                                           if (~same & np.isfinite(dist)).any() else None,
+            "separation_ok": bool(dist[same].max() < dist[~same & np.isfinite(dist)].min())
+                             if same.any() and (~same & np.isfinite(dist)).any() else None,
+        },
+        "fig12_threshold_sweep": sweep,
+        "threshold4_accuracy": sweep["4.0"]["accuracy"],
+        "fig11_heatmap": {
+            "sigma_w": cal.sigma_w_grid,
+            "sigma_delta": cal.sigma_delta_grid,
+            "expected_bits": [[round(float(x), 2) for x in row] for row in cal.heatmap],
+            "within_family_range": [round(x, 2) for x in cal.within_family_range],
+        },
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import build_ctx
+    emit("clustering", run(build_ctx()))

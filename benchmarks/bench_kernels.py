@@ -1,0 +1,83 @@
+"""Kernel-layer benchmark: BitX encode/decode + bit-distance throughput.
+
+Measures the host (numpy, paper-C++-equivalent) path and the jitted jnp path
+on this CPU, and reports the ANALYTIC TPU-v5e bound for the Pallas kernels —
+they are memory-bound by construction, so the bound is bytes-moved/HBM-BW:
+
+* bitx encode (bf16): read 2×2 B/elem + write 2×1 B planes = 6 B/elem
+  ⇒ v5e bound ≈ 819e9/6 ≈ 136.5 G elem/s ≈ 273 GB/s of model bytes.
+* hamming: read 2×2 B/elem = 4 B/elem ⇒ ≈ 204.75 G elem/s.
+
+Pallas-in-interpret-mode timings are NOT reported (Python emulation —
+meaningless); correctness of the Pallas kernels vs these same reference paths
+is covered by tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, emit
+from repro.core.bitdistance import hamming_total_arrays
+from repro.core.bitx import merge_planes_xor_np, xor_delta_planes_np
+from repro.kernels import ref
+from repro.launch.mesh import HW
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    if hasattr(r, "block_until_ready"):
+        r.block_until_ready()
+    elif isinstance(r, (list, tuple)) and hasattr(r[0], "block_until_ready"):
+        r[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(ctx=None) -> dict:
+    n = 16 * 2**20  # 16M elements = 32 MB bf16
+    rng = np.random.RandomState(0)
+    base = rng.randint(0, 2**16, n).astype(np.uint16)
+    ft = (base ^ rng.randint(0, 16, n).astype(np.uint16))
+    jb, jf = jnp.asarray(base).reshape(-1, 1024), jnp.asarray(ft).reshape(-1, 1024)
+
+    t_np_enc = _time(xor_delta_planes_np, base, ft, reps=3)
+    planes = xor_delta_planes_np(base, ft)
+    t_np_dec = _time(merge_planes_xor_np, planes, base, reps=3)
+    t_np_ham = _time(hamming_total_arrays, base, ft, reps=3)
+
+    enc_j = jax.jit(ref.xor_split_planes)
+    ham_j = jax.jit(ref.hamming_total)
+    t_j_enc = _time(enc_j, jb, jf)
+    t_j_ham = _time(ham_j, jb, jf)
+
+    mb = n * 2 / 2**20
+    out = {
+        "elements": n,
+        "model_MB": round(mb, 1),
+        "host_numpy": {
+            "bitx_encode_MBps": round(mb / t_np_enc, 1),
+            "bitx_decode_MBps": round(mb / t_np_dec, 1),
+            "hamming_MBps": round(mb / t_np_ham, 1),
+        },
+        "jit_cpu": {
+            "bitx_encode_MBps": round(mb / t_j_enc, 1),
+            "hamming_MBps": round(mb / t_j_ham, 1),
+        },
+        "tpu_v5e_analytic_bound": {
+            "bitx_encode_GBps": round(HW.HBM_BW / 6 * 2 / 1e9, 1),   # model bytes/s
+            "hamming_GBps": round(HW.HBM_BW / 4 * 2 / 1e9, 1),
+            "note": "memory-bound VPU kernels; bound = HBM BW / bytes-per-elem",
+        },
+    }
+    return out
+
+
+if __name__ == "__main__":
+    emit("kernels", run())

@@ -1,0 +1,62 @@
+"""Paper Figure 8: data reduction ratio vs number of ingested models.
+
+Four curves over the same upload order: FileDedup only, ChunkDedup (FastCDC),
+FileDedup+ZipNN, and zLLM. The claim under test: zLLM's curve keeps improving
+as same-family models arrive (family-aware delta compression), converging
+well above the baselines; ZipNN plateaus early (local-only redundancy).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+
+from benchmarks.common import Ctx, corpus_bytes, emit
+from repro.core.chunkdedup import ChunkDedup, FastCDC
+from repro.core.dedup import FileDedup
+from repro.core.pipeline import ZLLMStore
+
+
+def run(ctx: Ctx) -> dict:
+    order = list(ctx.manifest)
+    # interleave-ish upload order is already bases-first (hub-realistic)
+    fd = FileDedup()
+    cd = ChunkDedup(FastCDC(min_size=4096, avg_size=16384, max_size=65536))
+    s_zipnn = ZLLMStore("/tmp/repro-f8-zipnn", use_bitx=False, use_tensor_dedup=False)
+    s_zllm = ZLLMStore("/tmp/repro-f8-zllm")
+    for root in ("/tmp/repro-f8-zipnn", "/tmp/repro-f8-zllm"):
+        shutil.rmtree(root, ignore_errors=True)
+    s_zipnn = ZLLMStore("/tmp/repro-f8-zipnn", use_bitx=False, use_tensor_dedup=False)
+    s_zllm = ZLLMStore("/tmp/repro-f8-zllm")
+
+    curves = {"model_count": [], "file_dedup": [], "chunk_dedup": [],
+              "zipnn_filededup": [], "zllm": []}
+    for i, (rid, kind) in enumerate(order):
+        p = ctx.model_file(rid)
+        fd.scan_file(p, rid)
+        cd.scan_file(p, rid)
+        s_zipnn.ingest_repo(ctx.repo_path(rid), rid)
+        s_zllm.ingest_repo(ctx.repo_path(rid), rid)
+        if (i + 1) % max(1, len(order) // 12) == 0 or i == len(order) - 1:
+            curves["model_count"].append(i + 1)
+            curves["file_dedup"].append(round(fd.stats.reduction_ratio, 4))
+            curves["chunk_dedup"].append(round(cd.stats.reduction_ratio, 4))
+            curves["zipnn_filededup"].append(round(s_zipnn.stats.reduction_ratio, 4))
+            curves["zllm"].append(round(s_zllm.stats.reduction_ratio, 4))
+
+    final = {k: v[-1] for k, v in curves.items() if k != "model_count"}
+    return {
+        "curves": curves,
+        "final": final,
+        # paper: zLLM 49.5% vs ZipNN-family 34.6% vs chunk ~12% vs file 3.8%
+        "zllm_beats_zipnn": final["zllm"] > final["zipnn_filededup"],
+        "zipnn_beats_chunk": final["zipnn_filededup"] > final["chunk_dedup"],
+        "chunk_beats_file": final["chunk_dedup"] > final["file_dedup"],
+        "relative_improvement_over_zipnn": round(
+            (final["zllm"] - final["zipnn_filededup"]) / max(1 - final["zipnn_filededup"], 1e-9), 4),
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import build_ctx
+    emit("reduction_vs_count", run(build_ctx()))

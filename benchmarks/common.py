@@ -1,0 +1,105 @@
+"""Shared benchmark plumbing: corpus construction + result emission.
+
+Every bench module exposes ``run(ctx) -> dict``; ``benchmarks.run`` drives
+them all against one shared synthetic corpus (built once per scale), prints
+CSV-ish result lines and writes JSON records under experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.corpus import CorpusSpec, make_corpus
+
+EXPERIMENTS = Path(__file__).resolve().parents[1] / "experiments"
+BENCH_OUT = EXPERIMENTS / "bench"
+
+
+@dataclass
+class Ctx:
+    corpus_root: str
+    manifest: List[Tuple[str, str]]
+    spec: CorpusSpec
+
+    def repo_path(self, rid: str) -> str:
+        return os.path.join(self.corpus_root, rid)
+
+    def model_file(self, rid: str) -> str:
+        return os.path.join(self.corpus_root, rid, "model.safetensors")
+
+    def repos(self, kinds=None):
+        for rid, kind in self.manifest:
+            if kinds is None or kind in kinds:
+                yield rid, kind
+
+
+def bench_spec(scale: str = "default") -> CorpusSpec:
+    if scale == "small":
+        return CorpusSpec(n_families=2, finetunes_per_family=3, reuploads_per_family=1,
+                          lora_per_family=1, vocab_expanded_per_family=1,
+                          checkpoints_per_family=1, n_layers=2, d_model=128,
+                          d_ff=256, vocab=512, seed=11)
+    if scale == "large":
+        return CorpusSpec(n_families=4, finetunes_per_family=10, reuploads_per_family=2,
+                          lora_per_family=3, vocab_expanded_per_family=1,
+                          checkpoints_per_family=3, n_layers=6, d_model=384,
+                          d_ff=1024, vocab=4096, seed=11)
+    return CorpusSpec(n_families=4, finetunes_per_family=6, reuploads_per_family=1,
+                      lora_per_family=2, vocab_expanded_per_family=1,
+                      checkpoints_per_family=2, n_layers=4, d_model=256,
+                      d_ff=512, vocab=2048, seed=11)
+
+
+def build_ctx(scale: str = "default", root: Optional[str] = None) -> Ctx:
+    spec = bench_spec(scale)
+    root = root or f"/tmp/repro-bench-corpus-{scale}"
+    marker = os.path.join(root, "manifest.json")
+    if os.path.exists(marker):
+        manifest = [tuple(x) for x in json.load(open(marker))]
+    else:
+        shutil.rmtree(root, ignore_errors=True)
+        manifest = make_corpus(root, spec)
+    return Ctx(root, manifest, spec)
+
+
+def corpus_bytes(ctx: Ctx) -> int:
+    total = 0
+    for rid, _ in ctx.manifest:
+        total += os.path.getsize(ctx.model_file(rid))
+    return total
+
+
+def emit(name: str, results: Dict) -> None:
+    BENCH_OUT.mkdir(parents=True, exist_ok=True)
+    (BENCH_OUT / f"{name}.json").write_text(json.dumps(results, indent=1, default=str))
+    flat = _flatten(results)
+    for k, v in flat.items():
+        print(f"{name},{k},{v}")
+
+
+def _flatten(d: Dict, prefix: str = "") -> Dict:
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, key + "."))
+        elif isinstance(v, (list, tuple)) and len(v) > 8:
+            out[key] = f"<{len(v)} values>"
+        else:
+            out[key] = v
+    return out
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,168 @@
+"""Synthetic Hugging-Face-like corpus generator.
+
+The container has no network access, so the paper's 1,742-repo evaluation runs
+on a synthetic hub whose statistics are calibrated to the paper's measured
+ranges: base weights w ~ N(0, σw²) with σw ∈ [0.015, 0.05], fine-tune deltas
+Δw ~ N(0, σΔ²) with σΔ ∈ [0, 0.02] (§4.2), per-tensor "untouched" probability
+(frozen embeddings/norms under PEFT — the TensorDedup signal), exact
+re-uploads (FileDedup, Table 2), vocab-expanded variants (the Fig.-9
+embedding mismatch), LoRA-adapter repos (§5.1: 22% of repos, ~0.1% of bytes)
+and training-checkpoint chains (the framework's own storage workload).
+
+Every repo is a directory with model.safetensors (+ config.json, README.md —
+a configurable fraction of READMEs omit base_model to exercise the
+bit-distance fallback).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import ml_dtypes
+import numpy as np
+
+from repro.formats import safetensors as st
+
+__all__ = ["CorpusSpec", "make_corpus", "make_base_tensors", "make_finetune"]
+
+BF16 = ml_dtypes.bfloat16
+
+
+@dataclass
+class CorpusSpec:
+    n_families: int = 4
+    finetunes_per_family: int = 6
+    reuploads_per_family: int = 1      # exact duplicates (FileDedup hits)
+    lora_per_family: int = 2           # small adapter-only repos
+    vocab_expanded_per_family: int = 1
+    checkpoints_per_family: int = 0    # training-run chain off the base
+    # model shape (kept llama-like but small; scale via layer/width)
+    n_layers: int = 4
+    d_model: int = 128
+    d_ff: int = 256
+    vocab: int = 512
+    sigma_w: float = 0.02
+    sigma_delta: float = 0.005
+    untouched_prob: float = 0.3        # per-tensor chance a fine-tune keeps it
+    metadata_prob: float = 0.5         # fraction of fine-tunes with base_model declared
+    dtype: str = "bfloat16"            # bfloat16 | float32
+    seed: int = 0
+
+
+def _np_dtype(name: str):
+    return BF16 if name == "bfloat16" else np.float32
+
+
+def make_base_tensors(spec: CorpusSpec, rng: np.random.RandomState) -> Dict[str, np.ndarray]:
+    d, f, V = spec.d_model, spec.d_ff, spec.vocab
+    dt = _np_dtype(spec.dtype)
+    t: Dict[str, np.ndarray] = {}
+    t["model.embed_tokens.weight"] = (rng.randn(V, d) * spec.sigma_w).astype(dt)
+    for i in range(spec.n_layers):
+        p = f"model.layers.{i}."
+        t[p + "input_layernorm.weight"] = np.ones(d, dt)
+        t[p + "self_attn.q_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+        t[p + "self_attn.k_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+        t[p + "self_attn.v_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+        t[p + "self_attn.o_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+        t[p + "post_attention_layernorm.weight"] = np.ones(d, dt)
+        t[p + "mlp.gate_proj.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
+        t[p + "mlp.up_proj.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
+        t[p + "mlp.down_proj.weight"] = (rng.randn(d, f) * spec.sigma_w).astype(dt)
+    t["model.norm.weight"] = np.ones(d, dt)
+    t["lm_head.weight"] = (rng.randn(V, d) * spec.sigma_w).astype(dt)
+    return t
+
+
+def make_finetune(base: Dict[str, np.ndarray], spec: CorpusSpec,
+                  rng: np.random.RandomState,
+                  sigma_delta: Optional[float] = None) -> Dict[str, np.ndarray]:
+    sd = spec.sigma_delta if sigma_delta is None else sigma_delta
+    out = {}
+    for name, arr in base.items():
+        if rng.rand() < spec.untouched_prob or sd == 0.0:
+            out[name] = arr.copy()           # bit-identical tensor (dedup hit)
+        else:
+            delta = (rng.randn(*arr.shape) * sd).astype(np.float32)
+            out[name] = (arr.astype(np.float32) + delta).astype(arr.dtype)
+    return out
+
+
+def _write_repo(root: str, repo_id: str, tensors: Dict[str, np.ndarray],
+                base_model: Optional[str], declare_base: bool,
+                architecture: str = "LlamaForCausalLM") -> str:
+    repo_dir = os.path.join(root, repo_id)
+    os.makedirs(repo_dir, exist_ok=True)
+    st.save_file(tensors, os.path.join(repo_dir, "model.safetensors"))
+    cfg = {"architectures": [architecture], "torch_dtype": "bfloat16"}
+    readme = f"# {repo_id}\n"
+    if base_model and declare_base:
+        readme = f"---\nbase_model: {base_model}\n---\n" + readme
+    with open(os.path.join(repo_dir, "config.json"), "w") as f:
+        json.dump(cfg, f)
+    with open(os.path.join(repo_dir, "README.md"), "w") as f:
+        f.write(readme)
+    return repo_dir
+
+
+def make_corpus(root: str, spec: CorpusSpec) -> List[Tuple[str, str]]:
+    """Generate the corpus. Returns [(repo_id, kind)] in upload order:
+    bases first (as on the real hub), then variants interleaved."""
+    rng = np.random.RandomState(spec.seed)
+    os.makedirs(root, exist_ok=True)
+    manifest: List[Tuple[str, str]] = []
+    bases: Dict[str, Dict[str, np.ndarray]] = {}
+
+    for fam in range(spec.n_families):
+        base_id = f"org{fam}/base-model-{fam}"
+        base = make_base_tensors(spec, rng)
+        bases[base_id] = base
+        _write_repo(root, base_id, base, None, False)
+        manifest.append((base_id, "base"))
+
+    for fam in range(spec.n_families):
+        base_id = f"org{fam}/base-model-{fam}"
+        base = bases[base_id]
+        for v in range(spec.finetunes_per_family):
+            rid = f"user{fam}-{v}/ft-{fam}-{v}"
+            ft = make_finetune(base, spec, rng)
+            declare = rng.rand() < spec.metadata_prob
+            _write_repo(root, rid, ft, base_id, declare)
+            manifest.append((rid, "finetune"))
+        for r in range(spec.reuploads_per_family):
+            rid = f"mirror{fam}-{r}/base-reupload-{fam}-{r}"
+            _write_repo(root, rid, base, base_id, True)
+            manifest.append((rid, "reupload"))
+        for l in range(spec.lora_per_family):
+            rid = f"peft{fam}-{l}/lora-{fam}-{l}"
+            rank = 4
+            lora = {}
+            for i in range(spec.n_layers):
+                p = f"base_model.model.layers.{i}.self_attn.q_proj"
+                lora[p + ".lora_A.weight"] = (rng.randn(rank, spec.d_model) * 0.02).astype(np.float32)
+                lora[p + ".lora_B.weight"] = np.zeros((spec.d_model, rank), np.float32)
+            _write_repo(root, rid, lora, base_id, True, architecture="PeftModel")
+            manifest.append((rid, "lora"))
+        for x in range(spec.vocab_expanded_per_family):
+            rid = f"user{fam}x/ft-vocab-{fam}-{x}"
+            ft = make_finetune(base, spec, rng)
+            extra = 16
+            for key in ("model.embed_tokens.weight", "lm_head.weight"):
+                old = ft[key]
+                new_rows = (rng.randn(extra, old.shape[1]) * spec.sigma_w).astype(old.dtype)
+                ft[key] = np.concatenate([old, new_rows], axis=0)
+            _write_repo(root, rid, ft, base_id, True)
+            manifest.append((rid, "vocab_expanded"))
+        prev = base
+        for ck in range(spec.checkpoints_per_family):
+            rid = f"run{fam}/checkpoint-{(ck + 1) * 100}"
+            prev = make_finetune(prev, spec, rng, sigma_delta=spec.sigma_delta / 4)
+            _write_repo(root, rid, prev, base_id, True)
+            manifest.append((rid, "checkpoint"))
+
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest

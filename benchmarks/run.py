@@ -1,0 +1,95 @@
+"""Benchmark driver: one bench per paper table/figure, all against one shared
+synthetic corpus (see benchmarks/corpus.py for the calibration rationale).
+
+    PYTHONPATH=src python -m benchmarks.run [--scale small|default|large]
+
+Prints ``bench,key,value`` CSV lines and writes JSON records under
+experiments/bench/. Paper mapping:
+
+    dedup_levels        -> Tables 2 & 5
+    throughput          -> Table 4
+    reduction_vs_count  -> Figure 8
+    bitwise_breakdown   -> Figures 3 & 5
+    compression_methods -> Figure 10
+    clustering          -> Figures 4, 11, 12
+    kernels             -> (ours) Pallas-kernel throughput + v5e bounds
+    checkpoint_chain    -> (ours) the framework's own storage workload
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_bitwise_breakdown, bench_clustering,
+                        bench_compression_methods, bench_dedup_levels,
+                        bench_kernels, bench_reduction_vs_count,
+                        bench_throughput)
+from benchmarks.common import build_ctx, emit
+
+
+def bench_checkpoint_chain(ctx) -> dict:
+    """Framework integration: a training run's checkpoint chain through zLLM."""
+    import os
+    import shutil
+    from repro.configs import get_config
+    from repro.core.pipeline import ZLLMStore
+    from repro.train.trainer import TrainConfig, Trainer
+
+    root = "/tmp/repro-bench-ckpt"
+    shutil.rmtree(root, ignore_errors=True)
+    store = ZLLMStore(os.path.join(root, "store"))
+    cfg = TrainConfig(arch=get_config("qwen2-7b", smoke=True), seq_len=64,
+                      global_batch=8, steps=12, ckpt_every=3,
+                      run_dir=os.path.join(root, "run"), async_checkpoint=False)
+    t = Trainer(cfg, store=store, run_id="bench-run")
+    t.run()
+    per_ckpt = [{"file": r.filename, "reduction": round(r.reduction, 4),
+                 "codec_mix": {"bitx": r.n_bitx, "dedup": r.n_dedup,
+                               "zipnn": r.n_zipnn}} for r in store.results]
+    return {"n_checkpoints": len(per_ckpt),
+            "chain_reduction_ratio": round(store.stats.reduction_ratio, 4),
+            "per_checkpoint": per_ckpt,
+            "final_loss": round(t.history[-1]["loss"], 4)}
+
+
+BENCHES = [
+    ("dedup_levels", bench_dedup_levels.run),
+    ("throughput", bench_throughput.run),
+    ("reduction_vs_count", bench_reduction_vs_count.run),
+    ("bitwise_breakdown", bench_bitwise_breakdown.run),
+    ("compression_methods", bench_compression_methods.run),
+    ("clustering", bench_clustering.run),
+    ("kernels", lambda ctx: bench_kernels.run()),
+    ("checkpoint_chain", bench_checkpoint_chain),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="default", choices=["small", "default", "large"])
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ctx = build_ctx(args.scale)
+    print(f"# corpus: {len(ctx.manifest)} repos at {ctx.corpus_root} (scale={args.scale})")
+    only = set(args.only.split(",")) if args.only else None
+    failed = []
+    for name, fn in BENCHES:
+        if only and name not in only:
+            continue
+        t1 = time.time()
+        try:
+            emit(name, fn(ctx))
+            print(f"# {name}: ok in {time.time()-t1:.1f}s")
+        except Exception as e:  # report all, fail at end
+            failed.append((name, repr(e)))
+            print(f"# {name}: FAILED {e!r}")
+    print(f"# total {time.time()-t0:.1f}s; {len(failed)} failures")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

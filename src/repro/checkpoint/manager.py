@@ -1,0 +1,216 @@
+"""Checkpoint manager: atomic safetensors checkpoints stored THROUGH the zLLM
+pipeline — the paper's storage layer as a first-class training-framework
+feature.
+
+Every checkpoint of a run is a same-family variant of the run's first
+checkpoint (exactly the structure the paper exploits for fine-tuned models),
+so the manager:
+
+* serializes the params (+ optionally optimizer state) to one safetensors
+  file in insertion order (tmp + fsync + rename = atomic commit; a manifest
+  records step + content hash),
+* ingests it into a ``ZLLMStore`` — FileDedup across identical saves,
+  TensorDedup across steps (frozen tensors are zero-payload), BitX against
+  the run's base checkpoint,
+* optionally drops the plain file afterwards (``keep_plain=False``) so the
+  run directory holds only the compressed containers,
+* restores ELASTICALLY: tensors are stored unsharded, so a checkpoint taken
+  on a 16×16 mesh restores onto any other mesh / device count via
+  ``jax.device_put`` with the new shardings.
+
+``save_async`` moves serialization+ingest off the training thread (the step
+only blocks on the previous save's completion — single-buffered write-behind).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dedup import sha256_bytes
+from repro.core.pipeline import ZLLMStore
+from repro.formats import safetensors as st
+
+__all__ = ["CheckpointManager"]
+
+_ML_BF16 = None
+
+
+def _to_numpy(x) -> Tuple[np.ndarray, Optional[str]]:
+    """Host array + optional safetensors dtype-tag override (for bf16)."""
+    global _ML_BF16
+    arr = np.asarray(x)
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16), "BF16"
+    return arr, None
+
+
+class CheckpointManager:
+    def __init__(self, run_dir: str, *, store: Optional[ZLLMStore] = None,
+                 run_id: str = "run", keep_plain: bool = True,
+                 save_optimizer: bool = True):
+        self.run_dir = run_dir
+        os.makedirs(run_dir, exist_ok=True)
+        self.store = store
+        self.run_id = run_id
+        self.keep_plain = keep_plain
+        self.save_optimizer = save_optimizer
+        self._async_thread: Optional[threading.Thread] = None
+        self._async_err: Optional[BaseException] = None
+        # first checkpoint of the run = BitX base; a RESUMED run rediscovers
+        # its base from the store so post-resume checkpoints keep chaining
+        self._base_key: Optional[str] = None
+        if store is not None:
+            self._base_key = store.base_key_of.get(run_id)
+
+    # ------------------------------------------------------------------
+    def _flatten(self, params: Dict, opt_state: Optional[Dict]) -> Dict[str, Any]:
+        flat = {f"params/{k}": v for k, v in params.items()}
+        if opt_state is not None and self.save_optimizer:
+            import jax
+            leaves = jax.tree_util.tree_leaves_with_path(opt_state)
+            for path, leaf in leaves:
+                key = "opt/" + "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+                flat[key] = leaf
+        return flat
+
+    def _unflatten(self, flat: Dict[str, np.ndarray], opt_template=None):
+        params = {k[len("params/"):]: v for k, v in flat.items() if k.startswith("params/")}
+        opt = None
+        if opt_template is not None:
+            import jax
+            leaves_p = jax.tree_util.tree_leaves_with_path(opt_template)
+            vals = []
+            for path, leaf in leaves_p:
+                key = "opt/" + "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+                v = flat[key]
+                if hasattr(leaf, "dtype") and np.asarray(leaf).dtype != v.dtype:
+                    v = v.astype(np.asarray(leaf).dtype)
+                vals.append(v)
+            opt = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(opt_template), vals)
+        return params, opt
+
+    # ------------------------------------------------------------------
+    def ckpt_path(self, step: int) -> str:
+        return os.path.join(self.run_dir, f"checkpoint-{step:08d}.safetensors")
+
+    def save(self, step: int, params: Dict, opt_state: Optional[Dict] = None) -> str:
+        flat = self._flatten(params, opt_state)
+        tensors, tags = {}, {}
+        for k, v in flat.items():
+            arr, tag = _to_numpy(v)
+            tensors[k] = arr
+            if tag:
+                tags[k] = tag
+        path = self.ckpt_path(step)
+        st.save_file(tensors, path, metadata={"step": str(step), "run_id": self.run_id},
+                     dtype_tags=tags)
+        digest = sha256_bytes(open(path, "rb").read())
+        manifest = {"step": step, "file": os.path.basename(path), "sha256": digest,
+                    "time": time.time()}
+        mpath = os.path.join(self.run_dir, "manifest.json")
+        entries = []
+        if os.path.exists(mpath):
+            entries = json.load(open(mpath))
+        entries = [e for e in entries if e["step"] != step] + [manifest]
+        tmp = mpath + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(sorted(entries, key=lambda e: e["step"]), f, indent=1)
+        os.replace(tmp, mpath)
+
+        if self.store is not None:
+            fname = f"checkpoint-{step:08d}.safetensors"
+            self.store.ingest_file(path, self.run_id, fname,
+                                   declared_base=self._base_key)
+            if self._base_key is None:
+                self._base_key = f"{self.run_id}/{fname}"
+            if not self.keep_plain:
+                os.remove(path)
+        return path
+
+    def save_async(self, step: int, params: Dict, opt_state: Optional[Dict] = None):
+        """Write-behind save. Blocks only if the previous save is still running."""
+        self.wait()
+        import jax
+        # snapshot to host BEFORE returning control (params may be donated/updated)
+        host_params = {k: np.asarray(v) for k, v in params.items()}
+        host_opt = jax.tree.map(np.asarray, opt_state) if opt_state is not None else None
+
+        def work():
+            try:
+                self.save(step, host_params, host_opt)
+            except BaseException as e:  # surfaced on next wait()
+                self._async_err = e
+
+        self._async_thread = threading.Thread(target=work, daemon=True)
+        self._async_thread.start()
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+        if self._async_err is not None:
+            err, self._async_err = self._async_err, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def steps(self):
+        mpath = os.path.join(self.run_dir, "manifest.json")
+        if not os.path.exists(mpath):
+            return []
+        return [e["step"] for e in json.load(open(mpath))]
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return max(s) if s else None
+
+    def restore(self, step: Optional[int] = None, opt_template=None,
+                verify: bool = True):
+        """Returns (step, params numpy dict, opt_state or None). Reads the
+        plain file when kept, else reconstructs from the zLLM store."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        fname = f"checkpoint-{step:08d}.safetensors"
+        path = self.ckpt_path(step)
+        if not os.path.exists(path):
+            assert self.store is not None, "no plain file and no store"
+            data = self.store.retrieve_file(self.run_id, fname, verify=verify)
+            tmp = path + ".restore"
+            with open(tmp, "w+b") as f:
+                f.write(data)
+            flat = st.load_file(tmp)
+            infos, _, _ = st.read_header(tmp)
+            os.remove(tmp)
+        else:
+            flat = st.load_file(path)
+            infos, _, _ = st.read_header(path)
+        # re-tag BF16 views
+        tag_by_name = {ti.name: ti.dtype_str for ti in infos}
+        out = {}
+        for k, v in flat.items():
+            if tag_by_name.get(k) == "BF16":
+                import ml_dtypes
+                v = v.view(ml_dtypes.bfloat16)
+            out[k] = v
+        params, opt = self._unflatten(out, opt_template)
+        return step, params, opt
+
+    def restore_sharded(self, mesh, shardings: Dict, step: Optional[int] = None,
+                        opt_template=None, opt_shardings=None):
+        """Elastic restore: device_put host tensors with NEW shardings (any mesh)."""
+        import jax
+        step, params, opt = self.restore(step, opt_template)
+        if params is None:
+            return None, None, None
+        params = {k: jax.device_put(v, shardings[k]) for k, v in params.items()}
+        if opt is not None and opt_shardings is not None:
+            opt = jax.tree.map(lambda x, s: jax.device_put(x, s), opt, opt_shardings)
+        return step, params, opt

@@ -1,0 +1,375 @@
+"""zLLM end-to-end storage reduction pipeline (paper §4.4, Fig. 7).
+
+Ingest path per uploaded repo:
+
+  ① FileDedup      — sha256 whole-file prefilter; duplicates become refs.
+  ② TensorDedup    — per-tensor hashes against the global tensor pool;
+                     repeated tensors become zero-payload "dedup" records.
+  ③a Model tree    — base-model lineage from config.json / README metadata.
+  ③b Bit distance  — when metadata is missing: shape-signature prefilter +
+                     sampled bit distance against registered bases (≤ a few
+                     comparisons), threshold 4 bits/element.
+  ③c BitX          — unique tensors of family-matched models are XOR-delta'd
+                     against the aligned base tensor and byte-plane split.
+  ④ zstd           — entropy stage per plane. No-family models fall back to
+                     ZipNN byte-plane coding; non-float tensors to raw zstd.
+
+Retrieval reconstructs the original safetensors file BIT-EXACTLY (the stored
+header blob + decoded tensors in serialization order, verified against the
+ingest-time file hash).
+
+This module is also the storage backend of the training framework: the
+checkpoint manager (`repro.checkpoint`) ingests every checkpoint through a
+``ZLLMStore``, so checkpoint chains dedup + delta-compress against their run's
+first checkpoint exactly like fine-tuned models against a base.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import os
+import struct
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bitx import BitXReader, BitXWriter
+from repro.core.clustering import FamilyRegistry
+from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes
+from repro.formats.modelcard import parse_repo_metadata
+from repro.formats.safetensors import STR_TO_DTYPE, SafetensorsFile
+
+__all__ = ["ZLLMStore", "IngestResult", "StoreStats"]
+
+_FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
+
+
+@dataclass
+class IngestResult:
+    repo_id: str
+    filename: str
+    raw_bytes: int
+    stored_bytes: int
+    file_dedup_hit: bool = False
+    base_id: Optional[str] = None
+    base_source: str = ""            # "metadata" | "bitdistance" | ""
+    n_tensors: int = 0
+    n_dedup: int = 0
+    n_bitx: int = 0
+    n_zipnn: int = 0
+    n_raw: int = 0
+    ingest_seconds: float = 0.0
+
+    @property
+    def reduction(self) -> float:
+        return 1.0 - self.stored_bytes / self.raw_bytes if self.raw_bytes else 0.0
+
+
+@dataclass
+class StoreStats:
+    raw_bytes: int = 0
+    stored_bytes: int = 0
+    n_files: int = 0
+    n_file_dedup: int = 0
+    ingest_seconds: float = 0.0
+
+    @property
+    def reduction_ratio(self) -> float:
+        return 1.0 - self.stored_bytes / self.raw_bytes if self.raw_bytes else 0.0
+
+    @property
+    def ingest_throughput_mbps(self) -> float:
+        return (self.raw_bytes / 2**20) / self.ingest_seconds if self.ingest_seconds else 0.0
+
+
+class ZLLMStore:
+    """Content-addressed zLLM store rooted at a directory."""
+
+    def __init__(self, root: str, *, threshold: float = 4.0, zstd_level: int = 3,
+                 sample_elems: int = 65536, use_bitx: bool = True,
+                 use_tensor_dedup: bool = True):
+        self.root = root
+        os.makedirs(os.path.join(root, "containers"), exist_ok=True)
+        self.zstd_level = zstd_level
+        self.use_bitx = use_bitx
+        self.use_tensor_dedup = use_tensor_dedup
+        self.file_dedup = FileDedup()
+        self.tensor_dedup = TensorDedup()
+        self.families = FamilyRegistry(threshold=threshold, sample_elems=sample_elems)
+        self.stats = StoreStats()
+        # indexes
+        self.file_index: Dict[str, Dict] = {}        # "repo/file" -> record
+        self.file_hash_to_key: Dict[str, str] = {}   # file sha256 -> first "repo/file"
+        self.tensor_locations: Dict[str, Tuple[str, int]] = {}  # tensor hash -> (key, record idx)
+        self.base_paths: Dict[str, str] = {}         # base_id -> source path (for alignment)
+        self.base_key_of: Dict[str, str] = {}        # base_id -> "repo/file" container key
+        self.metadata_base: Dict[str, str] = {}      # repo_id -> declared base id
+        self.results: List[IngestResult] = []
+
+    # ------------------------------------------------------------------
+    # Ingest
+    # ------------------------------------------------------------------
+    def ingest_repo(self, repo_dir: str, repo_id: Optional[str] = None) -> List[IngestResult]:
+        repo_id = repo_id or os.path.basename(os.path.normpath(repo_dir))
+        meta = parse_repo_metadata(repo_dir)
+        if meta.get("base_model"):
+            self.metadata_base[repo_id] = meta["base_model"]
+        out = []
+        for fname in sorted(os.listdir(repo_dir)):
+            if fname.endswith(".safetensors"):
+                out.append(self.ingest_file(os.path.join(repo_dir, fname), repo_id, fname))
+        return out
+
+    def ingest_file(self, path: str, repo_id: str, filename: Optional[str] = None,
+                    declared_base: Optional[str] = None) -> IngestResult:
+        filename = filename or os.path.basename(path)
+        key = f"{repo_id}/{filename}"
+        raw_size = os.path.getsize(path)
+        t0 = time.perf_counter()
+
+        # ① FileDedup
+        fhash, is_new_file = self.file_dedup.scan_file(path, key)
+        if not is_new_file:
+            res = IngestResult(repo_id, filename, raw_size, 0, file_dedup_hit=True,
+                               ingest_seconds=time.perf_counter() - t0)
+            self.file_index[key] = {"kind": "file_dedup", "ref": self.file_hash_to_key[fhash],
+                                    "file_hash": fhash, "raw_size": raw_size}
+            self._account(res)
+            self.stats.n_file_dedup += 1
+            return res
+        self.file_hash_to_key[fhash] = key
+
+        # ③a/③b family resolution (before encoding, so BitX knows its base)
+        base_id, base_source = self._resolve_base(repo_id, path, declared_base)
+        base_tensors = self._base_tensor_map(base_id) if base_id else {}
+
+        writer = BitXWriter(level=self.zstd_level)
+        res = IngestResult(repo_id, filename, raw_size, 0, base_id=base_id,
+                           base_source=base_source)
+
+        with SafetensorsFile(path) as sf:
+            header_blob = self._read_header_blob(path)
+            for ti in sf.infos:
+                res.n_tensors += 1
+                raw = sf.tensor_bytes(ti.name)
+                thash = self.tensor_dedup.hash_tensor(raw)
+                dup = self.use_tensor_dedup and thash in self.tensor_locations
+                self.tensor_dedup.stats.observe(ti.nbytes, not dup)
+                if dup:
+                    # ② zero-payload reference into the global tensor pool
+                    writer.add_dedup(ti.name, ti.dtype_str, ti.shape, thash, ti.nbytes)
+                    res.n_dedup += 1
+                    continue
+                arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
+                base = base_tensors.get(ti.name)
+                if (self.use_bitx and base is not None and ti.dtype_str in _FLOAT_TAGS
+                        and base[0] == ti.dtype_str and base[1] == ti.shape):
+                    base_arr, base_hash = base[2](), base[3]
+                    writer.add_bitx(ti.name, ti.dtype_str, ti.shape,
+                                    base_arr.reshape(-1), arr.reshape(-1),
+                                    base_hash, thash)
+                    res.n_bitx += 1
+                elif ti.dtype_str in _FLOAT_TAGS:
+                    writer.add_zipnn(ti.name, ti.dtype_str, ti.shape, arr, thash)
+                    res.n_zipnn += 1
+                else:
+                    writer.add_raw(ti.name, ti.dtype_str, ti.shape, bytes(raw), thash)
+                    res.n_raw += 1
+                # first location wins: a base tensor's hash must keep pointing
+                # at its standalone (zipnn/raw) record, never at a later BitX
+                # record that references the same hash as ITS base (cycle)
+                self.tensor_locations.setdefault(thash, (key, len(writer.records) - 1))
+
+        writer.file_metadata.update({
+            "repo_id": repo_id, "filename": filename, "file_hash": fhash,
+            "base_id": base_id or "", "raw_size": raw_size,
+            "header_blob_z": base64.b64encode(zlib.compress(header_blob)).decode(),
+        })
+        cpath = self._container_path(key)
+        os.makedirs(os.path.dirname(cpath), exist_ok=True)
+        stored = writer.write(cpath)
+        res.stored_bytes = stored
+        res.ingest_seconds = time.perf_counter() - t0
+
+        self.file_index[key] = {"kind": "container", "path": cpath, "file_hash": fhash,
+                                "raw_size": raw_size, "base_id": base_id or ""}
+        # register as a family base iff stored standalone (no base of its own)
+        if base_id is None:
+            self.families.register(repo_id, path)
+            self.base_paths.setdefault(repo_id, path)
+            self.base_paths[key] = path
+            self.base_key_of.setdefault(repo_id, key)
+            self.base_key_of[key] = key
+        self._account(res)
+        return res
+
+    # ------------------------------------------------------------------
+    def _resolve_base(self, repo_id: str, path: str,
+                      declared_base: Optional[str] = None) -> Tuple[Optional[str], str]:
+        # explicit caller hint (e.g. the checkpoint manager naming its run's
+        # first checkpoint) takes precedence, then repo metadata, then the
+        # bit-distance fallback — the declared id must already be ingested +
+        # standalone to serve as a base
+        for declared, src in ((declared_base, "declared"),
+                              (self.metadata_base.get(repo_id), "metadata")):
+            if declared and declared in self.base_paths:
+                return declared, src
+        m = self.families.match(path)
+        if m is not None:
+            return m[0], "bitdistance"
+        return None, ""
+
+    def _base_tensor_map(self, base_id: str) -> Dict[str, Tuple]:
+        """name -> (dtype_str, shape, lazy loader, tensor hash) for the base."""
+        path = self.base_paths.get(base_id)
+        if path is None:
+            return {}
+        if not os.path.exists(path):
+            # the ingest-time source was dropped (e.g. keep_plain=False
+            # checkpoints) — materialize the base from its own container
+            key = self.base_key_of.get(base_id)
+            if key is None:
+                return {}
+            cache_dir = os.path.join(self.root, "basecache")
+            os.makedirs(cache_dir, exist_ok=True)
+            cpath = os.path.join(cache_dir, key.replace("/", "__"))
+            if not os.path.exists(cpath):
+                repo, fname = key.split("/", 1)
+                data = self.retrieve_file(repo, fname, verify=False)
+                with open(cpath, "wb") as f:
+                    f.write(data)
+            path = cpath
+            self.base_paths[base_id] = path
+        out = {}
+        sf = SafetensorsFile(path)
+        for ti in sf.infos:
+            def loader(sf=sf, name=ti.name):
+                return sf.tensor(name)
+            thash = self.tensor_dedup.hash_tensor(sf.tensor_bytes(ti.name))
+            out[ti.name] = (ti.dtype_str, ti.shape, loader, thash)
+        return out
+
+    @staticmethod
+    def _read_header_blob(path: str) -> bytes:
+        with open(path, "rb") as f:
+            (hlen,) = struct.unpack("<Q", f.read(8))
+            f.seek(0)
+            return f.read(8 + hlen)
+
+    def _container_path(self, key: str) -> str:
+        return os.path.join(self.root, "containers", key + ".bitx")
+
+    def _account(self, res: IngestResult):
+        self.results.append(res)
+        self.stats.raw_bytes += res.raw_bytes
+        self.stats.stored_bytes += res.stored_bytes
+        self.stats.n_files += 1
+        self.stats.ingest_seconds += res.ingest_seconds
+
+    # ------------------------------------------------------------------
+    # Retrieval
+    # ------------------------------------------------------------------
+    def retrieve_file(self, repo_id: str, filename: str, out_path: Optional[str] = None,
+                      verify: bool = True) -> bytes:
+        """Reconstruct the original safetensors file bit-exactly."""
+        key = f"{repo_id}/{filename}"
+        rec = self.file_index[key]
+        if rec["kind"] == "file_dedup":
+            ref_repo, ref_file = rec["ref"].split("/", 1)
+            data = self.retrieve_file(ref_repo, ref_file, verify=False)
+        else:
+            data = self._decode_container(rec["path"])
+        if verify:
+            assert sha256_bytes(data) == rec["file_hash"], f"retrieval hash mismatch for {key}"
+        if out_path:
+            with open(out_path, "wb") as f:
+                f.write(data)
+        return data
+
+    def _decode_container(self, cpath: str) -> bytes:
+        reader = BitXReader.open(cpath)
+        header_blob = zlib.decompress(
+            base64.b64decode(reader.file_metadata["header_blob_z"]))
+        chunks = [header_blob]
+        for idx, r in enumerate(reader.records):
+            arr = reader.decode_tensor(idx, self._resolve_tensor_hash,
+                                       self._resolve_tensor_hash)
+            chunks.append(np.ascontiguousarray(arr).tobytes())
+        return b"".join(chunks)
+
+    def _resolve_tensor_hash(self, thash: str, _depth: int = 0) -> np.ndarray:
+        """Fetch a tensor from the pool by content hash (dedup/bitx deps)."""
+        if _depth > 4:
+            raise RuntimeError(f"tensor resolution cycle at {thash[:12]}")
+        key, idx = self.tensor_locations[thash]
+        rec = self.file_index[key]
+        reader = BitXReader.open(rec["path"])
+        resolver = lambda h: self._resolve_tensor_hash(h, _depth + 1)
+        return reader.decode_tensor(idx, resolver, resolver)
+
+    # ------------------------------------------------------------------
+    # Index persistence: the store survives process restarts (ingest state,
+    # tensor pool, family registry) — a new process can keep ingesting or
+    # serve retrievals immediately.
+    # ------------------------------------------------------------------
+    def save_index(self) -> str:
+        def sig_key(sig):
+            return json.dumps([[d, list(sh)] for d, sh in sig])
+        idx = {
+            "stats": vars(self.stats),
+            "file_index": self.file_index,
+            "file_hash_to_key": self.file_hash_to_key,
+            "tensor_locations": {k: list(v) for k, v in self.tensor_locations.items()},
+            "base_paths": self.base_paths,
+            "base_key_of": self.base_key_of,
+            "metadata_base": self.metadata_base,
+            "file_dedup_index": self.file_dedup.index,
+            "families": {sig_key(sig): v for sig, v in self.families.by_sig.items()},
+            "n_file_dedup": self.stats.n_file_dedup,
+        }
+        path = os.path.join(self.root, "index.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(idx, f)
+        os.replace(tmp, path)
+        return path
+
+    def load_index(self) -> bool:
+        path = os.path.join(self.root, "index.json")
+        if not os.path.exists(path):
+            return False
+        idx = json.load(open(path))
+        for k, v in idx["stats"].items():
+            setattr(self.stats, k, v)
+        self.file_index = idx["file_index"]
+        self.file_hash_to_key = idx["file_hash_to_key"]
+        self.tensor_locations = {k: tuple(v) for k, v in idx["tensor_locations"].items()}
+        self.base_paths = idx["base_paths"]
+        self.base_key_of = idx["base_key_of"]
+        self.metadata_base = idx["metadata_base"]
+        self.file_dedup.index = idx["file_dedup_index"]
+        def sig_unkey(k):
+            return tuple((d, tuple(sh)) for d, sh in json.loads(k))
+        self.families.by_sig = {sig_unkey(k): [tuple(x) for x in v]
+                                for k, v in idx["families"].items()}
+        return True
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict:
+        return {
+            "n_files": self.stats.n_files,
+            "raw_bytes": self.stats.raw_bytes,
+            "stored_bytes": self.stats.stored_bytes,
+            "reduction_ratio": round(self.stats.reduction_ratio, 4),
+            "file_dedup_hits": self.stats.n_file_dedup,
+            "tensor_dedup": {
+                "unique_hashes": self.tensor_dedup.stats.n_unique,
+                "reduction_ratio": round(self.tensor_dedup.stats.reduction_ratio, 4),
+            },
+            "bitdistance_comparisons": self.families.comparisons,
+            "ingest_throughput_MBps": round(self.stats.ingest_throughput_mbps, 1),
+        }

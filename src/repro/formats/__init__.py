@@ -1,0 +1,1 @@
+"""Model serialization formats (dependency-free safetensors, model cards)."""

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the zLLM storage layer (+ beyond-paper compute).
+
+Storage-path kernels (the paper's hot loops, DESIGN.md §3):
+  bitx_xor.py     — fused XOR + byte-plane split/merge (BitX encode/decode)
+  hamming.py      — fused XOR + popcount + two-stage reduce (bit distance)
+  byte_planes.py  — ZipNN byte-plane shuffle (the no-family fallback)
+
+Beyond-paper compute kernel (EXPERIMENTS.md §Perf):
+  flash_attention.py — fwd flash attention, VMEM-resident score blocks
+
+Each kernel pairs with a pure-jnp oracle in ``ref.py``; ``ops.py`` is the
+public jit'd API. On non-TPU backends kernels run in interpret mode; tests
+sweep shapes/dtypes asserting exact (bit ops) or tight-tolerance (attention)
+agreement with the oracles.
+"""

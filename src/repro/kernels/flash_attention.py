@@ -1,0 +1,137 @@
+"""Pallas TPU flash-attention kernel (forward) — the beyond-paper §Perf lever
+for the attention-memory-bound training/prefill cells.
+
+The dry-run hotspot analysis (launch/hlo_hotspots.py) shows that XLA-compiled
+chunked attention writes every (chunk_q × chunk_kv) score block to HBM (XLA
+cannot fuse through the two dots), making train_4k/prefill_32k memory-bound:
+~6 HBM visits × 4 B per score element. This kernel keeps the score block in
+VMEM: per (q-block, kv-sweep) the only HBM traffic is the q/k/v tiles and the
+output tile — the classic flash-attention traffic model.
+
+Grid: (batch·heads, nq). Each program owns one (block_q × D) query tile and
+sweeps the KV sequence in (block_kv × D) tiles with an online-softmax
+accumulator held in VMEM scratch. Causality and sliding windows are applied
+via position masks computed from the grid indices.
+
+VMEM budget per core (v5e ~16 MiB): q tile 128·128·4 + k/v tiles 2·512·128·4
++ scores 128·512·4 + acc 128·128·4 ≈ 1 MiB — comfortable; block sizes are
+MXU-aligned multiples of 128.
+
+The backward pass stays with the checkpointed XLA path (recompute-based);
+a fused flash backward is listed as future work in EXPERIMENTS.md §Perf.
+Validated in interpret mode against ``ref.mha_reference`` over shape/dtype
+sweeps (tests/test_flash_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_KV"]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
+                  block_q, block_kv, seq_kv):
+    """One (q-block) program: sweep kv blocks with online softmax.
+
+    q_ref: (block_q, D); k_ref/v_ref: (seq_kv, D) — full K/V rows for this
+    (batch, head); o_ref: (block_q, D).
+    """
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale      # (block_q, D)
+    D = q.shape[-1]
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, D), jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kj * block_kv, block_kv), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kj * block_kv, block_kv), slice(None)))
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bkv)
+        k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    nk = seq_kv // block_kv
+    if causal:
+        # skip kv blocks strictly above the diagonal for this q block
+        nk_eff = jnp.minimum(nk, (qi + 1) * block_q // block_kv + 1)
+    else:
+        nk_eff = nk
+    m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, H, D) (GQA pre-expanded). Returns
+    (B, Sq, H, D). Sq % block_q == 0, Sk % block_kv == 0."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    assert Hk == H, (Hk, H)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    assert Sq % block_q == 0 and Sk % block_kv == 0, (Sq, Sk, block_q, block_kv)
+    scale = 1.0 / (D ** 0.5)
+
+    # fold (B, H) into the leading grid dim; kernel sees one head's rows
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+
+    grid = (B * H, Sq // block_q)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, seq_kv=Sk)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i: (b, i, 0)),
+        grid=grid,
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

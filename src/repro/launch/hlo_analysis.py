@@ -1,0 +1,121 @@
+"""Post-partitioning HLO analysis: collective-traffic accounting.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but NOT collective traffic, so
+we parse the compiled (SPMD-partitioned) HLO text and sum operand bytes of
+every communication op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+Shapes in post-partitioning HLO are *per-device shard* shapes, so the sums are
+per-device collective bytes — exactly the numerator of the roofline collective
+term. Async pairs (``all-gather-start``/``-done``) are counted once at start.
+
+We also count replica-group fan-out per op (axis size of the collective) so
+the roofline can model ring-bandwidth factors ((n-1)/n for all-gather etc.).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+__all__ = ["CollectiveStats", "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one tensor literal: dtype[dims]{layout}  (layout optional, dims optional for scalars)
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\((.*)$"
+)
+_DONE_RE = re.compile(r"(" + "|".join(_COLLECTIVES) + r")-done\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device collective byte totals by op kind."""
+
+    op_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    op_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    ops: List[Tuple[str, int, int]] = field(default_factory=list)  # (kind, bytes, group)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.op_bytes.values())
+
+    def summary(self) -> Dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "by_op": {k: int(v) for k, v in sorted(self.op_bytes.items())},
+            "counts": {k: int(v) for k, v in sorted(self.op_count.items())},
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line and _DONE_RE.search(line):
+            continue  # async completion — counted at start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand bytes: shapes listed inside the call parens
+        operand_text = m.group(2)
+        nbytes = _shape_bytes(operand_text)
+        if nbytes == 0:
+            # operands printed without shapes (short form) — fall back to the
+            # result shape on the lhs of '='
+            lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(kind)[0]
+            nbytes = _shape_bytes(lhs)
+        group = 0
+        g = _GROUPS_RE.search(line)
+        if g:
+            group = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                group = int(g2.group(2))
+        stats.op_bytes[kind] += nbytes
+        stats.op_count[kind] += 1
+        stats.ops.append((kind, nbytes, group))
+    return stats
+
+
+def count_op_kinds(hlo_text: str, prefixes=("fusion", "dot", "convolution", "scatter",
+                                            "gather", "sort", "while")) -> Dict[str, int]:
+    """Rough op-kind census of a compiled module (perf-iteration diagnostics)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        for p in prefixes:
+            if re.search(r"\b" + p + r"\(", rhs):
+                counts[p] += 1
+    return dict(counts)

@@ -1,0 +1,105 @@
+"""Hotspot descent over compiled HLO — the dry-run "profiler" (§Perf loop).
+
+With no real TPU to trace, the perf iteration reasons from the compiled
+artifact: this tool attributes the trip-count-aware cost model's bytes/FLOPs
+to individual instructions and recursively descends into the dominant while
+loop, printing the top contributors at each level — the closest thing to a
+flame graph the dry-run can give.
+
+Usage:
+    python -m repro.launch.hlo_hotspots --arch qwen2-7b --shape train_4k \
+        [--mesh single] [--metric bytes|flops] [--top 5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+from typing import Dict, List
+
+from repro.launch import hlo_cost as H
+
+__all__ = ["hotspots", "descend"]
+
+
+def _metric(c: "H.HloCost", name: str) -> float:
+    if name == "coll":
+        return c.collective_total
+    return getattr(c, name)
+
+
+def _instr_cost(an: "H._Analyzer", comp: str, i: "H.Instr") -> "H.HloCost":
+    one = H._Analyzer.__new__(H._Analyzer)
+    one.comps = dict(an.comps)
+    one.tables = dict(an.tables)
+    one.params, one.consumers, one.roots = an.params, an.consumers, an.roots
+    one.memo = dict(an.memo)
+    one.comps["__one"] = [i]
+    one.tables["__one"] = an.tables[comp]
+    return one.cost("__one")
+
+
+def descend(comps: Dict, an: "H._Analyzer", comp: str, *, metric: str = "bytes",
+            top: int = 5, depth: int = 0, mult: float = 1.0,
+            max_depth: int = 8, out: List[str] = None) -> List[str]:
+    out = out if out is not None else []
+    rows = []
+    for i in comps.get(comp, []):
+        c = _instr_cost(an, comp, i)
+        rows.append((_metric(c, metric), c, i))
+    rows.sort(key=lambda r: -r[0])
+    for val, c, i in rows[:top]:
+        out.append("  " * depth + f"{val * mult:.3e} {metric}  {i.opcode:18s} "
+                   f"{i.line.strip()[:110]}")
+    if rows and rows[0][2].opcode == "while" and depth < max_depth:
+        topi = rows[0][2]
+        bm = re.search(r"body=%?([\w\.\-]+)", topi.line)
+        cm = re.search(r"condition=%?([\w\.\-]+)", topi.line)
+        if bm and cm:
+            trips = an.trip_count(cm.group(1)) or 1
+            out.append("  " * depth + f"--> {bm.group(1)} × {trips}")
+            descend(comps, an, bm.group(1), metric=metric, top=top,
+                    depth=depth + 1, mult=mult * trips, max_depth=max_depth, out=out)
+    return out
+
+
+def hotspots(hlo_text: str, metric: str = "bytes", top: int = 5) -> str:
+    comps, entry = H.parse_module(hlo_text)
+    an = H._Analyzer(comps)
+    an.cost(entry)
+    return "\n".join(descend(comps, an, entry, metric=metric, top=top))
+
+
+def main():
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.launch.dryrun import build_step
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.rules import ShardingRules
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--metric", default="bytes", choices=["bytes", "flops", "coll"])
+    ap.add_argument("--top", type=int, default=5)
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+
+    opts = dict(kv.split("=") for kv in args.variant.split(",") if kv)
+    cfg = get_config(args.arch)
+    cell = SHAPES_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rules = ShardingRules.for_mesh(mesh, fsdp_over_pod=cfg.fsdp_over_pod)
+    fn, sds, in_sh, out_sh = build_step(
+        cfg, cell, mesh, rules, remat_policy=opts.get("remat", "nothing"),
+        grad_dtype=opts.get("grad", "float32"))
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*sds).compile()
+    print(hotspots(compiled.as_text(), args.metric, args.top))
+
+
+if __name__ == "__main__":
+    main()

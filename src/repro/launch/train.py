@@ -1,0 +1,79 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+        --steps 50 --seq 128 --global-batch 8 [--mesh 2,2] \
+        [--store /tmp/run-store] [--resume] [--fail-at 25]
+
+Runs the fault-tolerant trainer on the local devices (CPU here; the same
+code path drives TPU slices — the mesh shape argument maps onto whatever
+`jax.devices()` provides). `--smoke` selects the reduced config of the same
+family; full configs are for real accelerators. Checkpoints go through the
+zLLM store when --store is given.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--run-dir", default="/tmp/repro-train-run")
+    ap.add_argument("--store", default=None, help="zLLM store root for checkpoints")
+    ap.add_argument("--mesh", default=None, help="data,model (e.g. 4,2)")
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--remat", default="nothing", choices=["nothing", "dots", "none"])
+    ap.add_argument("--grad-dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a simulated crash at this step (fault-tolerance demo)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core.pipeline import ZLLMStore
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.train.trainer import (FailureInjector, SimulatedFailure,
+                                     TrainConfig, Trainer)
+
+    arch = get_config(args.arch, smoke=args.smoke)
+    mesh_shape = tuple(int(x) for x in args.mesh.split(",")) if args.mesh else None
+    store = ZLLMStore(args.store) if args.store else None
+
+    cfg = TrainConfig(
+        arch=arch, seq_len=args.seq, global_batch=args.global_batch,
+        microbatches=args.microbatches, steps=args.steps,
+        ckpt_every=args.ckpt_every, run_dir=args.run_dir,
+        resume=not args.no_resume, grad_dtype=args.grad_dtype,
+        remat_policy=args.remat, mesh_shape=mesh_shape,
+        optimizer=OptimizerConfig(name=arch.optimizer, lr=args.lr,
+                                  total_steps=args.steps),
+    )
+    trainer = Trainer(cfg, store=store, run_id=f"{arch.name}-run",
+                      failure=FailureInjector(fail_at_step=args.fail_at))
+    if trainer.resumed_from is not None:
+        print(f"[train] resumed from step {trainer.resumed_from}")
+    try:
+        hist = trainer.run()
+    except SimulatedFailure as e:
+        print(f"[train] {e} — restart with the same command to resume")
+        sys.exit(42)
+    for h in hist[:: max(1, len(hist) // 10)]:
+        print(f"[train] step {h['step']:>6} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.3f} {h['sec']*1e3:.0f} ms")
+    print(f"[train] done: {len(hist)} steps, final loss {hist[-1]['loss']:.4f}")
+    if store is not None:
+        print(f"[train] store: {json.dumps(store.summary())}")
+
+
+if __name__ == "__main__":
+    main()

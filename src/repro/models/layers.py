@@ -1,0 +1,463 @@
+"""Shared neural building blocks for every assigned architecture.
+
+Pure functions over flat parameter dicts (no framework classes): RMS/layer
+norm, RoPE + M-RoPE, attention in three flavours (full-masked for short
+sequences, chunked flash-style for long prefill, shard_map flash-decoding over
+a sequence-sharded KV cache for decode), SwiGLU / GELU MLPs, scatter-based
+top-k MoE dispatch, and a chunked cross-entropy that never materializes the
+full (B, S, V) logits tensor.
+
+Everything lowers through pjit/GSPMD: we only annotate inputs/params and a few
+strategic ``with_sharding_constraint`` points and let propagation do the rest.
+The one exception is decode attention, which uses ``shard_map`` because online
+softmax over a sequence-sharded cache is a reduction GSPMD cannot derive.
+
+TP note on GQA: attention runs with KV expanded to the full H query heads
+(``repeat_kv``) so every attention tensor carries one H dim that shards over
+the "model" axis — Megatron-style KV-head duplication. The expansion is a
+transient compute-side view; decode caches stay at Kv heads and expand locally
+inside the shard_map body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "rope_table",
+    "apply_rope",
+    "apply_mrope",
+    "repeat_kv",
+    "attention",
+    "decode_attention_sp",
+    "swiglu",
+    "gelu_mlp",
+    "moe_block",
+    "chunked_cross_entropy",
+]
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jax.Array, rot_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for integer positions: (..., S) -> (..., S, rot_dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate (x1, x2) half-pairs of the rotary slice. x: (..., rot_dim)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, rope_pct: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S). Partial rotary via rope_pct (phi-4)."""
+    d = x.shape[-1]
+    rot = int(d * rope_pct)
+    rot -= rot % 2
+    cos, sin = rope_table(positions, rot, theta)  # (B, S, rot/2)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    xr = _rotate(x[..., :rot], cos, sin)
+    if rot < d:
+        xr = jnp.concatenate([xr, x[..., rot:].astype(jnp.float32)], axis=-1)
+    return xr.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float,
+    sections: Optional[Tuple[int, int, int]] = None,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the three position streams (t, h, w) drive
+    disjoint frequency sections of the rotary dim.
+
+    x: (B, S, H, D); positions3: (3, B, S); sum(sections) == D // 2. The
+    default split is the published (16, 24, 24) t/h/w ratio scaled to D
+    (exactly (16, 24, 24) at D=128).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    if sections is None:
+        t_sec = half // 4
+        h_sec = (half - t_sec) // 2
+        sections = (t_sec, h_sec, half - t_sec - h_sec)
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))       # (half,)
+    ang = positions3.astype(jnp.float32)[..., None] * freqs                     # (3, B, S, half)
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    pick = jax.nn.one_hot(sel, 3, dtype=jnp.float32)                            # (half, 3)
+    ang = jnp.einsum("tbsf,ft->bsf", ang, pick)                                 # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (train / prefill): chunked flash-style, GQA expanded to H heads
+# ---------------------------------------------------------------------------
+
+def repeat_kv(kv: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, Kv, D) -> (B, S, H, D) by repeating each kv head H/Kv times."""
+    B, S, Kv, D = kv.shape
+    if Kv == n_heads:
+        return kv
+    reps = n_heads // Kv
+    return jnp.repeat(kv, reps, axis=2)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    window: int = 0,
+    chunk_q: int = 1024,
+    chunk_kv: int = 1024,
+    score_dtype=jnp.float32,
+) -> jax.Array:
+    """Memory-bounded attention over H-head q/k/v.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (GQA already expanded by the caller).
+    ``causal`` masks j > i + q_offset; ``window > 0`` additionally masks
+    j <= i + q_offset - window (sliding-window attention, Mixtral).
+
+    Short sequences take the single-block masked path; long sequences scan over
+    q chunks (outer) and kv chunks (inner) with an online-softmax accumulator
+    (flash semantics): peak score memory is O(B·H·chunk_q·chunk_kv), never
+    O(Sq·Sk).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    assert Hk == H, (Hk, H)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    if Sq <= 2048 and Sk <= 2048:
+        s = jnp.einsum("bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32) * scale
+        if causal or window:
+            qi = jnp.arange(Sq)[:, None] + q_offset
+            kj = jnp.arange(Sk)[None, :]
+            mask = jnp.ones((Sq, Sk), bool)
+            if causal:
+                mask &= kj <= qi
+            if window:
+                mask &= kj > qi - window
+            s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+        return out
+
+    chunk_q = min(chunk_q, Sq)
+    chunk_kv = min(chunk_kv, Sk)
+    assert Sq % chunk_q == 0 and Sk % chunk_kv == 0, (Sq, Sk, chunk_q, chunk_kv)
+    nq, nk = Sq // chunk_q, Sk // chunk_kv
+    qc = q.reshape(B, nq, chunk_q, H, D).swapaxes(0, 1)   # (nq, B, cq, H, D)
+    kc = k.reshape(B, nk, chunk_kv, H, D).swapaxes(0, 1)  # (nk, B, ck, H, D)
+    vc = v.reshape(B, nk, chunk_kv, H, D).swapaxes(0, 1)
+
+    def q_chunk_body(_, qi_block):
+        qi, qblk = qi_block  # (B, cq, H, D)
+
+        # flash backward semantics: WITHOUT this checkpoint, scan saves the
+        # (B, H, cq, ckv) score/softmax residuals of EVERY (qi, kj) pair —
+        # the full O(S²) matrix in fp32 — as stacked residuals for the
+        # backward pass. Checkpointing the body keeps only the (m, l, o)
+        # accumulators per step and recomputes scores in the backward.
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_body(acc, kv_block):
+            m, l, o = acc
+            kj, kblk, vblk = kv_block
+            s = jnp.einsum("bqhd,bshd->bhqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal or window:
+                qpos = qi * chunk_q + jnp.arange(chunk_q)[:, None] + q_offset
+                kpos = kj * chunk_kv + jnp.arange(chunk_kv)[None, :]
+                msk = jnp.ones((chunk_q, chunk_kv), bool)
+                if causal:
+                    msk &= kpos <= qpos
+                if window:
+                    msk &= kpos > qpos - window
+                s = jnp.where(msk, s, NEG_INF)
+            if score_dtype != jnp.float32:
+                # store the O(cq·ckv) block compressed between fusions; the
+                # dot accumulates f32, max/exp upcast locally (bf16 max error
+                # ~0.4% of softmax mass — the §Perf memory-term lever)
+                s = s.astype(score_dtype).astype(jnp.float32)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, chunk_q), jnp.float32)
+        o0 = jnp.zeros((B, H, chunk_q, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_body, (m0, l0, o0), (jnp.arange(nk), kc, vc))
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)  # (B, H, cq, D)
+        return None, out.transpose(0, 2, 1, 3)                         # (B, cq, H, D)
+
+    q_chunk_body = jax.checkpoint(q_chunk_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(q_chunk_body, None, (jnp.arange(nq), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: flash-decoding over a sequence-sharded KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention_sp(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    mesh: Mesh,
+    sp_axis: str = "model",
+    batch_axes=None,
+    window: int = 0,
+) -> jax.Array:
+    """One-token attention over a cache whose sequence dim is sharded.
+
+    q: (B, H, D) replicated over ``sp_axis``; k_cache/v_cache: (B, S, Kv, D)
+    sharded P(batch_axes, sp_axis, None, None); cache_len: scalar int32 —
+    number of valid cache entries (positions >= cache_len are masked; with
+    ``window`` > 0 positions <= cache_len - window are also masked).
+
+    This is flash-decoding mapped onto the TPU mesh: each model-axis shard
+    computes a partial online softmax over its local sequence chunk, then the
+    partials merge with one pmax + two psums of (B, H·D)-sized tensors — bytes
+    moved are O(B·H·D), not the O(B·S·Kv·D) cache all-gather GSPMD propagation
+    would produce.
+    """
+    B, H, D = q.shape
+    _, S, Kv, _ = k_cache.shape
+    G = H // Kv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    baxes = tuple(batch_axes) if batch_axes is not None else (None,)
+
+    def local(q, kc, vc, cache_len):
+        # all shapes here are LOCAL shard shapes
+        B, chunk = kc.shape[0], kc.shape[1]
+        idx = jax.lax.axis_index(sp_axis)
+        pos = idx * chunk + jnp.arange(chunk)          # global positions of my chunk
+        qg = q.reshape(B, Kv, G, D)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        valid = pos < cache_len
+        if window:
+            valid &= pos > cache_len - window
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)                        # (B, Kv, G)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", p.astype(vc.dtype), vc,
+                       preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m, sp_axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, sp_axis)
+        o_g = jax.lax.psum(o * corr[..., None], sp_axis)
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(B, H, D).astype(q.dtype)
+
+    cache_spec = P(*(baxes + (sp_axis, None, None)))
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(*(baxes + (None, None))), cache_spec, cache_spec, P()),
+        out_specs=P(*(baxes + (None, None))),
+        check_rep=False,
+    )(q, k_cache, v_cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jnp.einsum("bsd,df->bsf", x, w_in)
+    if b_in is not None:
+        h = h + b_in
+    h = jax.nn.gelu(h)
+    o = jnp.einsum("bsf,fd->bsd", h, w_out)
+    if b_out is not None:
+        o = o + b_out
+    return o
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing with capacity + scatter dispatch (GShard semantics)
+# ---------------------------------------------------------------------------
+
+def moe_block(
+    x: jax.Array,
+    router_w: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    top_k: int = 2,
+    capacity_factor: float = 1.25,
+    n_groups: int = 1,
+    ws=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-dropping top-k MoE with GROUP-LOCAL scatter dispatch.
+
+    x: (B, S, d); router_w: (d, E); expert weights: (E, d, f) / (E, f, d).
+    Returns (output (B, S, d), aux load-balancing loss scalar).
+
+    Tokens flatten into (G, T/G) groups — one group per data-parallel shard
+    (``n_groups`` = DP degree) — and each group dispatches into ITS OWN
+    (E, C_g, d) buffer, C_g = ceil((T/G)·k·cf/E), via a per-group cumsum +
+    scatter-add. The group dim is batch-sharded, so dispatch, expert FFN and
+    combine stay local in the data direction; expert weights are layer-wise
+    all-gathered over the FSDP axis (ZeRO-3), never psum'd.
+
+    The grouping is load-bearing: with one GLOBAL buffer the capacity dim
+    cannot shard (slot ids come from a global cumsum), and GSPMD's only
+    legal strategy keeps every token's expert activation on every shard and
+    all-reduces f32 (E, C_global, f) partials each layer — observed as
+    ~6 TB/device of collective traffic on grok-1 before this restructure.
+    """
+    B, S, d = x.shape
+    E = router_w.shape[-1]
+    T = B * S
+    G = n_groups if n_groups > 0 and T % n_groups == 0 else 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    if ws is not None:
+        xt = ws(xt, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G, Tg, E)
+    gate_w, expert_idx = jax.lax.top_k(probs, top_k)              # (G, Tg, k)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # Switch-style aux loss: E * sum_e (fraction routed to e) * (mean prob e)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    cap = int(max(1, (Tg * top_k * capacity_factor) / E))
+
+    flat_e = expert_idx.reshape(G, Tg * top_k)                    # (G, Tg·k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (G, Tg·k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot                # slots before me
+    slot = jnp.sum(pos_in_e * onehot, axis=-1)                    # (G, Tg·k)
+    keep = slot < cap
+
+    xk = jnp.repeat(xt, top_k, axis=1)                            # (G, Tg·k, d)
+    wk = gate_w.reshape(G, Tg * top_k)
+    e_safe = jnp.where(keep, flat_e, 0)
+    s_safe = jnp.where(keep, slot, 0)
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], e_safe.shape)
+    buf = jnp.zeros((G, E, cap, d), x.dtype)
+    buf = buf.at[g_idx, e_safe, s_safe].add(jnp.where(keep[..., None], xk, 0))
+
+    if ws is not None:
+        # groups over DP; d_model FULL (the weights all-gather over FSDP
+        # instead — the same ZeRO-3 pattern as the dense MLP); d_ff over TP
+        buf = ws(buf, "batch", None, None, None)
+    g = jnp.einsum("gecd,edf->gecf", buf, w_gate)
+    u = jnp.einsum("gecd,edf->gecf", buf, w_up)
+    if ws is not None:
+        g = ws(g, "batch", None, None, "tp")
+        u = ws(u, "batch", None, None, "tp")
+    yb = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, w_down)  # (G, E, C, d)
+    if ws is not None:
+        yb = ws(yb, "batch", None, None, None)
+
+    gathered = yb[g_idx, e_safe, s_safe]                          # (G, Tg·k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0) * wk[..., None].astype(x.dtype)
+    out = jnp.sum(gathered.reshape(G, Tg, top_k, d), axis=2)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy: never materialize (B, S, V)
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(
+    h: jax.Array,
+    w_vocab: jax.Array,
+    labels: jax.Array,
+    *,
+    chunk: int = 256,
+) -> jax.Array:
+    """Mean token CE of h @ w_vocab vs labels, computed in sequence chunks.
+
+    h: (B, S, d); w_vocab: (d, V); labels: (B, S) int32 (< 0 = ignore).
+    Each chunk's logits (B, chunk, V) are transient and rematerialized in the
+    backward pass, so the full (B, S, V) tensor (tens of GB at 150k vocab)
+    never exists. The gold logit is extracted with a one-hot einsum rather
+    than take_along_axis so a vocab-sharded (TP) logits tensor reduces with a
+    psum instead of an all-gather.
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, d).swapaxes(0, 1)       # (n, B, c, d)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)     # (n, B, c)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(hb, lb):
+        logits = jnp.einsum("bcd,dv->bcv", hb, w_vocab, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(lb.clip(0), logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, oh)
+        valid = (lb >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, c = chunk_loss(*xs)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,618 @@
+"""State-space models: Mamba-1 (falcon-mamba-7b) and Mamba-2/SSD hybrid (zamba2-2.7b).
+
+TPU adaptation notes (DESIGN.md §3):
+
+* Mamba-1's selective scan is elementwise-recurrent (VPU work, no MXU). We
+  run it as an outer ``lax.scan`` over sequence chunks with an inner
+  ``associative_scan`` — peak memory O(B·chunk·d_inner·d_state) per device
+  instead of O(B·L·d_inner·d_state), and the chunk boundary states are the
+  only saved activations under remat.
+* Mamba-2 uses the SSD block decomposition: intra-chunk work becomes batched
+  matmuls (MXU-friendly: (c×c) decay-masked attention-like products) and the
+  inter-chunk recurrence is a tiny scan over chunk states. This is the
+  TPU-native reformulation of the CUDA kernel in the Mamba-2 paper.
+* zamba2 interleaves 6-layer Mamba-2 groups with ONE shared transformer block
+  (same weights at every invocation — true weight sharing, 9 invocations for
+  54 layers). Each invocation keeps its own KV cache.
+
+Decode paths carry O(1) recurrent state (conv tail + SSM state) — the reason
+these are the archs that run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.sharding.rules import ParamSpec, ShardingRules, named_sharding, safe_entry
+
+__all__ = ["MambaLM", "Zamba2LM"]
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. x: (B, S, C); w: (C, K); b: (C,)."""
+    K = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32).T[:, None, :],       # (K, 1, C) -> spec below
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[0],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-token depthwise conv. x_t: (B, C); conv_state: (B, K-1, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    out = (out + b.astype(jnp.float32)).astype(x_t.dtype)
+    return out, window[:, 1:]
+
+
+def _param_free_rms(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)).astype(x.dtype)
+
+
+# ===========================================================================
+# Mamba-1 (falcon-mamba-7b)
+# ===========================================================================
+
+class MambaLM:
+    def __init__(self, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                 rules: Optional[ShardingRules] = None, remat_policy: str = "nothing"):
+        assert cfg.ssm is not None and cfg.ssm.version == 1
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.remat_policy = remat_policy
+
+    @property
+    def dt_rank(self) -> int:
+        c = self.cfg
+        return c.ssm.dt_rank or -(-c.d_model // 16)
+
+    def param_templates(self) -> Dict[str, ParamSpec]:
+        c = self.cfg
+        d, V, Ln = c.d_model, c.vocab, c.n_layers
+        DI, N, K, R = c.d_inner, c.ssm.d_state, c.ssm.d_conv, self.dt_rank
+        dt = c.param_dtype
+        out_scale = 0.02 / (2 * Ln) ** 0.5
+        t = {
+            "embed": ParamSpec((V, d), dt, ("tp", None)),
+            "final_norm": ParamSpec((d,), dt, (None,), init="ones"),
+            "lm_head": ParamSpec((d, V), dt, ("fsdp", "tp")),
+        }
+        blk = {
+            "norm": ParamSpec((Ln, d), dt, (None, None), init="ones", stacked=True),
+            "in_proj": ParamSpec((Ln, d, 2 * DI), dt, (None, "fsdp", "tp"), stacked=True),
+            "conv_w": ParamSpec((Ln, DI, K), dt, (None, "tp", None), stacked=True),
+            "conv_b": ParamSpec((Ln, DI), dt, (None, "tp"), init="zeros", stacked=True),
+            "x_proj": ParamSpec((Ln, DI, R + 2 * N), dt, (None, "tp", None), stacked=True),
+            "dt_proj": ParamSpec((Ln, R, DI), dt, (None, None, "tp"), stacked=True),
+            "dt_bias": ParamSpec((Ln, DI), dt, (None, "tp"), init="zeros", stacked=True),
+            # A_log/D in fp32: the recurrence is numerically delicate
+            "A_log": ParamSpec((Ln, DI, N), "float32", (None, "tp", None), init="ones", stacked=True),
+            "D": ParamSpec((Ln, DI), "float32", (None, "tp"), init="ones", stacked=True),
+            "out_proj": ParamSpec((Ln, DI, d), dt, (None, "tp", "fsdp"),
+                                  init="scaled", init_scale=out_scale, stacked=True),
+        }
+        t.update({f"blocks.{k}": v for k, v in blk.items()})
+        return t
+
+    def param_count(self) -> int:
+        n = 0
+        for spec in self.param_templates().values():
+            m = 1
+            for s in spec.shape:
+                m *= s
+            n += m
+        return n
+
+    active_param_count = param_count
+
+    def _ws(self, x, *axes):
+        if self.mesh is None or self.rules is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, named_sharding(self.mesh, axes, self.rules, x.shape))
+
+    def _remat(self, fn):
+        if self.remat_policy == "none":
+            return fn
+        pol = {"nothing": jax.checkpoint_policies.nothing_saveable,
+               "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable}[self.remat_policy]
+        return jax.checkpoint(fn, policy=pol)
+
+    # ------------------------------------------------------------------
+    def _ssm_inputs(self, x, p):
+        """x: (B, S, DI) post-conv. Returns dt (B,S,DI) f32, Bs/Cs (B,S,N) f32."""
+        c = self.cfg
+        N, R = c.ssm.d_state, self.dt_rank
+        proj = jnp.einsum("bsd,dr->bsr", x, p["x_proj"]).astype(jnp.float32)
+        dt_in, Bs, Cs = jnp.split(proj, [R, R + N], axis=-1)
+        # falcon-mamba applies parameter-free RMS norm to dt/B/C streams
+        dt_in, Bs, Cs = _param_free_rms(dt_in), _param_free_rms(Bs), _param_free_rms(Cs)
+        dt = jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(jnp.float32))
+        dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+        return dt, Bs, Cs
+
+    def _selective_scan(self, x, dt, A, Bs, Cs, h0, chunk):
+        """Chunked selective scan.
+
+        x/dt: (B, S, DI) f32; A: (DI, N) f32 (negative); Bs/Cs: (B, S, N) f32;
+        h0: (B, DI, N) f32. Returns (y (B, S, DI) f32, h_final).
+        """
+        B_, S, DI = x.shape
+        N = A.shape[-1]
+        chunk = min(chunk, S)
+        while S % chunk:
+            chunk //= 2
+        nc = S // chunk
+        xs = tuple(v.reshape(B_, nc, chunk, -1).swapaxes(0, 1) for v in (x, dt, Bs, Cs))
+
+        def chunk_body(h, blk):
+            xch, dtch, Bch, Cch = blk
+            dA = dtch[..., None] * A                              # (B,c,DI,N)
+            a = jnp.exp(dA)
+            b = (dtch * xch)[..., None] * Bch[:, :, None, :]
+            def comb(e1, e2):
+                a1, b1 = e1
+                a2, b2 = e2
+                return a1 * a2, b1 * a2 + b2
+            aP, bP = jax.lax.associative_scan(comb, (a, b), axis=1)
+            hs = aP * h[:, None] + bP                             # (B,c,DI,N)
+            y = jnp.einsum("bcdn,bcn->bcd", hs, Cch)
+            return hs[:, -1], y
+
+        h, ys = jax.lax.scan(self._remat(chunk_body), h0, xs)
+        y = ys.swapaxes(0, 1).reshape(B_, S, DI)
+        return y, h
+
+    def _block_full(self, h, p):
+        c = self.cfg
+        B, S, _ = h.shape
+        DI = c.d_inner
+        x = L.rms_norm(h, p["norm"])
+        xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+        xi, z = jnp.split(xz, 2, axis=-1)
+        xi = self._ws(xi, "batch", None, "tp")
+        xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+        dt, Bs, Cs = self._ssm_inputs(xi, p)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        h0 = jnp.zeros((B, DI, c.ssm.d_state), jnp.float32)
+        y, _ = self._selective_scan(xi.astype(jnp.float32), dt, A, Bs, Cs, h0, c.ssm.chunk)
+        y = y + p["D"].astype(jnp.float32) * xi.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        return self._ws(h + out, "batch", None, None)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        B, S = batch["tokens"].shape
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+        h = self._ws(h, "batch", None, None)
+        stacked = {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith("blocks.")}
+
+        def layer(h, p):
+            return self._block_full(h, p), None
+
+        h, _ = jax.lax.scan(self._remat(layer), h, stacked)
+        h = L.rms_norm(h, params["final_norm"])
+        return L.chunked_cross_entropy(h, params["lm_head"], batch["labels"])
+
+    def prefill(self, params, batch):
+        """Forward + final recurrent state per layer (the SSM 'cache')."""
+        c = self.cfg
+        B, S = batch["tokens"].shape
+        DI, N, K = c.d_inner, c.ssm.d_state, c.ssm.d_conv
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+        stacked = {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith("blocks.")}
+
+        def layer(h, p):
+            x = L.rms_norm(h, p["norm"])
+            xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+            xi, z = jnp.split(xz, 2, axis=-1)
+            # conv state = last K-1 PRE-conv inputs (what _conv_step consumes)
+            conv_tail = xi[:, -(K - 1):, :] if K > 1 else xi[:, :0, :]
+            xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+            dt, Bs, Cs = self._ssm_inputs(xi, p)
+            A = -jnp.exp(p["A_log"].astype(jnp.float32))
+            h0 = jnp.zeros((B, DI, N), jnp.float32)
+            y, hN = self._selective_scan(xi.astype(jnp.float32), dt, A, Bs, Cs, h0, c.ssm.chunk)
+            y = y + p["D"].astype(jnp.float32) * xi.astype(jnp.float32)
+            y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+            out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+            return h + out, (hN, conv_tail)
+
+        h, (hs, tails) = jax.lax.scan(layer, h, stacked)
+        h = L.rms_norm(h, params["final_norm"])
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        cache = {"ssm": hs, "conv": tails, "len": jnp.int32(S)}
+        return logits, cache
+
+    def decode_step(self, params, batch, cache):
+        c = self.cfg
+        B = batch["tokens"].shape[0]
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B,1,d)
+        stacked = {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith("blocks.")}
+
+        def layer(h, xs):
+            p, hst, conv_state = xs
+            x = L.rms_norm(h, p["norm"])
+            xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+            xi, z = jnp.split(xz, 2, axis=-1)                    # (B, DI)
+            xi, conv_state = _conv_step(xi, conv_state, p["conv_w"], p["conv_b"])
+            xi = jax.nn.silu(xi)
+            dt, Bs, Cs = self._ssm_inputs(xi[:, None, :], p)
+            dt, Bs, Cs = dt[:, 0], Bs[:, 0], Cs[:, 0]
+            A = -jnp.exp(p["A_log"].astype(jnp.float32))
+            xf = xi.astype(jnp.float32)
+            hst = jnp.exp(dt[..., None] * A) * hst + (dt * xf)[..., None] * Bs[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", hst, Cs) + p["D"].astype(jnp.float32) * xf
+            y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+            out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+            return h + out[:, None], (hst, conv_state)
+
+        h, (hs, tails) = jax.lax.scan(layer, h, (stacked, cache["ssm"], cache["conv"]))
+        h = L.rms_norm(h, params["final_norm"])
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        return logits, {"ssm": hs, "conv": tails, "len": cache["len"] + 1}
+
+    def cache_templates(self, batch: int, seq: int) -> Dict[str, ParamSpec]:
+        c = self.cfg
+        Ln, DI, N, K = c.n_layers, c.d_inner, c.ssm.d_state, c.ssm.d_conv
+        return {
+            "ssm": ParamSpec((Ln, batch, DI, N), "float32", (None, "batch", "tp", None)),
+            "conv": ParamSpec((Ln, batch, K - 1, DI), c.act_dtype, (None, "batch", None, "tp")),
+            "len": ParamSpec((), "int32", ()),
+        }
+
+
+# ===========================================================================
+# Mamba-2 / SSD + shared-attention hybrid (zamba2-2.7b)
+# ===========================================================================
+
+class Zamba2LM:
+    def __init__(self, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                 rules: Optional[ShardingRules] = None, remat_policy: str = "nothing"):
+        assert cfg.ssm is not None and cfg.ssm.version == 2
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.remat_policy = remat_policy
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.cfg.d_inner // self.cfg.ssm.head_dim
+
+    @property
+    def n_groups(self) -> int:
+        assert self.cfg.n_layers % self.cfg.attn_every == 0
+        return self.cfg.n_layers // self.cfg.attn_every
+
+    def param_templates(self) -> Dict[str, ParamSpec]:
+        c = self.cfg
+        d, V, Ln = c.d_model, c.vocab, c.n_layers
+        DI, N, K = c.d_inner, c.ssm.d_state, c.ssm.d_conv
+        P = self.n_ssm_heads
+        hd, H, Kv, f = c.hd, c.n_heads, c.n_kv_heads, c.d_ff
+        dt = c.param_dtype
+        out_scale = 0.02 / (2 * Ln) ** 0.5
+        t = {
+            "embed": ParamSpec((V, d), dt, ("tp", None)),
+            "final_norm": ParamSpec((d,), dt, (None,), init="ones"),
+            "lm_head": ParamSpec((d, V), dt, ("fsdp", "tp")),
+            # ---- ONE shared transformer block (9 invocations) ----
+            "shared.attn_norm": ParamSpec((d,), dt, (None,), init="ones"),
+            "shared.wq": ParamSpec((d, H * hd), dt, ("fsdp", "tp")),
+            "shared.wk": ParamSpec((d, Kv * hd), dt, ("fsdp", "tp")),
+            "shared.wv": ParamSpec((d, Kv * hd), dt, ("fsdp", "tp")),
+            "shared.wo": ParamSpec((H * hd, d), dt, ("tp", "fsdp"),
+                                   init="scaled", init_scale=out_scale),
+            "shared.mlp_norm": ParamSpec((d,), dt, (None,), init="ones"),
+            "shared.w_gate": ParamSpec((d, f), dt, ("fsdp", "tp")),
+            "shared.w_up": ParamSpec((d, f), dt, ("fsdp", "tp")),
+            "shared.w_down": ParamSpec((f, d), dt, ("tp", "fsdp"),
+                                       init="scaled", init_scale=out_scale),
+        }
+        blk = {
+            "norm": ParamSpec((Ln, d), dt, (None, None), init="ones", stacked=True),
+            "in_proj_xz": ParamSpec((Ln, d, 2 * DI), dt, (None, "fsdp", "tp"), stacked=True),
+            "in_proj_bcdt": ParamSpec((Ln, d, 2 * N + P), dt, (None, "fsdp", None), stacked=True),
+            "conv_x_w": ParamSpec((Ln, DI, K), dt, (None, "tp", None), stacked=True),
+            "conv_x_b": ParamSpec((Ln, DI), dt, (None, "tp"), init="zeros", stacked=True),
+            "conv_bc_w": ParamSpec((Ln, 2 * N, K), dt, (None, None, None), stacked=True),
+            "conv_bc_b": ParamSpec((Ln, 2 * N), dt, (None, None), init="zeros", stacked=True),
+            "dt_bias": ParamSpec((Ln, P), "float32", (None, None), init="zeros", stacked=True),
+            "A_log": ParamSpec((Ln, P), "float32", (None, None), init="ones", stacked=True),
+            "D": ParamSpec((Ln, P), "float32", (None, None), init="ones", stacked=True),
+            "gated_norm": ParamSpec((Ln, DI), dt, (None, "tp"), init="ones", stacked=True),
+            "out_proj": ParamSpec((Ln, DI, d), dt, (None, "tp", "fsdp"),
+                                  init="scaled", init_scale=out_scale, stacked=True),
+        }
+        t.update({f"blocks.{k}": v for k, v in blk.items()})
+        return t
+
+    def param_count(self) -> int:
+        n = 0
+        for spec in self.param_templates().values():
+            m = 1
+            for s in spec.shape:
+                m *= s
+            n += m
+        return n
+
+    active_param_count = param_count
+
+    def _ws(self, x, *axes):
+        if self.mesh is None or self.rules is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, named_sharding(self.mesh, axes, self.rules, x.shape))
+
+    def _remat(self, fn):
+        if self.remat_policy == "none":
+            return fn
+        pol = {"nothing": jax.checkpoint_policies.nothing_saveable,
+               "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable}[self.remat_policy]
+        return jax.checkpoint(fn, policy=pol)
+
+    # ------------------------------------------------------------------
+    # SSD (Mamba-2) chunked scan — matmul formulation
+    # ------------------------------------------------------------------
+    def _ssd(self, x, dt, A, Bs, Cs, h0, chunk):
+        """x: (B,S,P,hd) f32; dt: (B,S,P) f32 (softplus'd); A: (P,) f32 neg;
+        Bs/Cs: (B,S,N) f32 (single group, broadcast over heads);
+        h0: (B,P,N,hd) f32. Returns (y (B,S,P,hd), h_final)."""
+        B_, S, P, hd = x.shape
+        N = Bs.shape[-1]
+        chunk = min(chunk, S)
+        while S % chunk:
+            chunk //= 2
+        nc = S // chunk
+        xc = x.reshape(B_, nc, chunk, P, hd).swapaxes(0, 1)
+        dtc = dt.reshape(B_, nc, chunk, P).swapaxes(0, 1)
+        Bc = Bs.reshape(B_, nc, chunk, N).swapaxes(0, 1)
+        Cc = Cs.reshape(B_, nc, chunk, N).swapaxes(0, 1)
+
+        def chunk_body(h, blk):
+            xch, dtch, Bch, Cch = blk                 # (B,c,P,hd) (B,c,P) (B,c,N)
+            dA = dtch * A                             # (B,c,P), negative
+            s = jnp.cumsum(dA, axis=1)                # log-decay from chunk start
+            # intra-chunk: attention-like masked product
+            CB = jnp.einsum("bin,bjn->bij", Cch, Bch)             # (B,c,c)
+            Lmask = s[:, :, None, :] - s[:, None, :, :]           # s_i - s_j (B,i,j,P)
+            tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+            M = jnp.where(tri[None, :, :, None], jnp.exp(Lmask), 0.0)
+            M = M * CB[..., None] * dtch[:, None, :, :]           # × dt_j
+            y = jnp.einsum("bijp,bjph->biph", M, xch)
+            # inter-chunk: contribution of carry state
+            y = y + jnp.einsum("bin,bpnh,bip->biph", Cch, h, jnp.exp(s))
+            # state update
+            decay_to_end = jnp.exp(s[:, -1:, :] - s)              # (B,c,P)
+            S_chunk = jnp.einsum("bjp,bjn,bjph->bpnh", decay_to_end * dtch, Bch, xch)
+            h_new = jnp.exp(s[:, -1, :])[:, :, None, None] * h + S_chunk
+            return h_new, y
+
+        h, ys = jax.lax.scan(self._remat(chunk_body), h0, (xc, dtc, Bc, Cc))
+        y = ys.swapaxes(0, 1).reshape(B_, S, P, hd)
+        return y, h
+
+    def _mamba_inputs(self, x_conv, bcdt_conv, p):
+        """Split conv'd streams into SSD inputs (f32)."""
+        c = self.cfg
+        N = c.ssm.d_state
+        P = self.n_ssm_heads
+        hd = c.ssm.head_dim
+        B_, S, _ = x_conv.shape
+        x = x_conv.astype(jnp.float32).reshape(B_, S, P, hd)
+        Bs, Cs = jnp.split(bcdt_conv.astype(jnp.float32), 2, axis=-1)
+        return x, Bs, Cs
+
+    def _mamba_block(self, h, p, h0=None, conv_states=None, single_step=False):
+        """One Mamba-2 block. Full-sequence when single_step=False."""
+        c = self.cfg
+        N, K, P, hd = c.ssm.d_state, c.ssm.d_conv, self.n_ssm_heads, c.ssm.head_dim
+        DI = c.d_inner
+        B_ = h.shape[0]
+        x = L.rms_norm(h, p["norm"])
+        xz = jnp.einsum("bsd,de->bse", x, p["in_proj_xz"])
+        bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])
+        xi, z = jnp.split(xz, 2, axis=-1)
+        bc, dt_in = jnp.split(bcdt, [2 * N], axis=-1)             # (B,S,2N), (B,S,P)
+        A = -jnp.exp(p["A_log"])
+        if single_step:
+            cx, cbc = conv_states
+            xi1, cx = _conv_step(xi[:, 0], cx, p["conv_x_w"], p["conv_x_b"])
+            bc1, cbc = _conv_step(bc[:, 0], cbc, p["conv_bc_w"], p["conv_bc_b"])
+            xi1 = jax.nn.silu(xi1)[:, None]
+            bc1 = jax.nn.silu(bc1)[:, None]
+            xs, Bs, Cs = self._mamba_inputs(xi1, bc1, p)
+            dt = jax.nn.softplus(dt_in[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,P)
+            dA = jnp.exp(dt * A)                                   # (B,P)
+            hN = dA[:, :, None, None] * h0 + jnp.einsum(
+                "bp,bn,bph->bpnh", dt, Bs[:, 0], xs[:, 0])
+            y = jnp.einsum("bn,bpnh->bph", Cs[:, 0], hN)[:, None]  # (B,1,P,hd)
+            x_for_D = xs
+            new_conv = (cx, cbc)
+        else:
+            xi = jax.nn.silu(_causal_conv(xi, p["conv_x_w"], p["conv_x_b"]))
+            bc = jax.nn.silu(_causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"]))
+            xs, Bs, Cs = self._mamba_inputs(xi, bc, p)
+            dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])
+            if h0 is None:
+                h0 = jnp.zeros((B_, P, N, hd), jnp.float32)
+            y, hN = self._ssd(xs, dt, A, Bs, Cs, h0, c.ssm.chunk)
+            x_for_D = xs
+            new_conv = None
+        y = y + p["D"][:, None] * x_for_D                          # (B,S,P,hd)
+        S_ = y.shape[1]
+        y = y.reshape(B_, S_, DI)
+        y = (y * jax.nn.silu(z.astype(jnp.float32)[:, :S_]))
+        y = L.rms_norm(y.astype(h.dtype), p["gated_norm"])
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        return h + out, hN, new_conv
+
+    # ------------------------------------------------------------------
+    def _shared_attn(self, h, params, positions, cache=None, t=None):
+        """The shared transformer block. Full-seq when cache is None; else
+        one-token decode against this invocation's cache slice."""
+        c = self.cfg
+        B = h.shape[0]
+        x = L.rms_norm(h, params["shared.attn_norm"])
+        S = x.shape[1]
+        q = jnp.einsum("bsd,dh->bsh", x, params["shared.wq"]).reshape(B, S, c.n_heads, c.hd)
+        k = jnp.einsum("bsd,dh->bsh", x, params["shared.wk"]).reshape(B, S, c.n_kv_heads, c.hd)
+        v = jnp.einsum("bsd,dh->bsh", x, params["shared.wv"]).reshape(B, S, c.n_kv_heads, c.hd)
+        q = L.apply_rope(q, positions, c.rope_theta)
+        k = L.apply_rope(k, positions, c.rope_theta)
+        if cache is None:
+            kH, vH = L.repeat_kv(k, c.n_heads), L.repeat_kv(v, c.n_heads)
+            attn = L.attention(q, kH, vH, causal=True)
+            new_cache = (k, v)
+        else:
+            k_cache, v_cache = cache
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), t, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), t, axis=1)
+            if self.mesh is not None and "model" in self.mesh.shape and self.mesh.shape["model"] > 1:
+                attn = L.decode_attention_sp(
+                    q[:, 0], k_cache, v_cache, t + 1, mesh=self.mesh,
+                    sp_axis="model", batch_axes=(safe_entry(self.mesh, self.rules, "batch", q.shape[0]),))[:, None]
+            else:
+                kH, vH = L.repeat_kv(k_cache, c.n_heads), L.repeat_kv(v_cache, c.n_heads)
+                attn = L.attention(q, kH, vH, causal=True, q_offset=t)
+            new_cache = (k_cache, v_cache)
+        h = h + jnp.einsum("bsh,hd->bsd", attn.reshape(B, S, -1), params["shared.wo"])
+        x = L.rms_norm(h, params["shared.mlp_norm"])
+        h = h + L.swiglu(x, params["shared.w_gate"], params["shared.w_up"], params["shared.w_down"])
+        return h, new_cache
+
+    # ------------------------------------------------------------------
+    def _split_groups(self, params):
+        g = self.cfg.attn_every
+        stacked = {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith("blocks.")}
+        return [
+            {k: v[i * g:(i + 1) * g] for k, v in stacked.items()}
+            for i in range(self.n_groups)
+        ]
+
+    def loss(self, params, batch):
+        B, S = batch["tokens"].shape
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+        h = self._ws(h, "batch", None, None)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def mamba_layer(h, p):
+            h, _, _ = self._mamba_block(h, p)
+            return h, None
+
+        for grp in self._split_groups(params):
+            h, _ = jax.lax.scan(self._remat(mamba_layer), h, grp)
+            h, _ = self._shared_attn(h, params, positions)
+        h = L.rms_norm(h, params["final_norm"])
+        return L.chunked_cross_entropy(h, params["lm_head"], batch["labels"])
+
+    def prefill(self, params, batch):
+        c = self.cfg
+        B, S = batch["tokens"].shape
+        N, K, P, hd = c.ssm.d_state, c.ssm.d_conv, self.n_ssm_heads, c.ssm.head_dim
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        ssm_states, conv_x, conv_bc, attn_k, attn_v = [], [], [], [], []
+
+        def mamba_layer(h, p):
+            # conv states = last K-1 PRE-conv inputs of the x and BC streams
+            x = L.rms_norm(h, p["norm"])
+            xz = jnp.einsum("bsd,de->bse", x, p["in_proj_xz"])
+            xi = jnp.split(xz, 2, axis=-1)[0]
+            bc = jnp.split(jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"]), [2 * N], axis=-1)[0]
+            h_out, hN, _ = self._mamba_block(h, p)
+            tail_x = xi[:, -(K - 1):, :]
+            tail_bc = bc[:, -(K - 1):, :]
+            return h_out, (hN, tail_x, tail_bc)
+
+        for grp in self._split_groups(params):
+            h, (hNs, tx, tbc) = jax.lax.scan(mamba_layer, h, grp)
+            h, (k, v) = self._shared_attn(h, params, positions)
+            ssm_states.append(hNs)
+            conv_x.append(tx)
+            conv_bc.append(tbc)
+            attn_k.append(k)
+            attn_v.append(v)
+        h = L.rms_norm(h, params["final_norm"])
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        cache = {
+            "ssm": jnp.concatenate(ssm_states, 0),
+            "conv_x": jnp.concatenate(conv_x, 0),
+            "conv_bc": jnp.concatenate(conv_bc, 0),
+            "attn_k": jnp.stack(attn_k),
+            "attn_v": jnp.stack(attn_v),
+            "len": jnp.int32(S),
+        }
+        return logits, cache
+
+    def decode_step(self, params, batch, cache):
+        c = self.cfg
+        B = batch["tokens"].shape[0]
+        t = cache["len"]
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)   # (B,1,d)
+        positions = jnp.full((B, 1), t, jnp.int32)
+        g = c.attn_every
+
+        def mamba_layer(h, xs):
+            p, h0, cx, cbc = xs
+            h, hN, (cx, cbc) = self._mamba_block(h, p, h0=h0, conv_states=(cx, cbc),
+                                                 single_step=True)
+            return h, (hN, cx, cbc)
+
+        new_ssm, new_cx, new_cbc, new_k, new_v = [], [], [], [], []
+        for i, grp in enumerate(self._split_groups(params)):
+            sl = slice(i * g, (i + 1) * g)
+            h, (hNs, cxs, cbcs) = jax.lax.scan(
+                mamba_layer, h,
+                (grp, cache["ssm"][sl], cache["conv_x"][sl], cache["conv_bc"][sl]))
+            h, (k, v) = self._shared_attn(
+                h, params, positions, cache=(cache["attn_k"][i], cache["attn_v"][i]), t=t)
+            new_ssm.append(hNs)
+            new_cx.append(cxs)
+            new_cbc.append(cbcs)
+            new_k.append(k)
+            new_v.append(v)
+        h = L.rms_norm(h, params["final_norm"])
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        cache = {
+            "ssm": jnp.concatenate(new_ssm, 0),
+            "conv_x": jnp.concatenate(new_cx, 0),
+            "conv_bc": jnp.concatenate(new_cbc, 0),
+            "attn_k": jnp.stack(new_k),
+            "attn_v": jnp.stack(new_v),
+            "len": t + 1,
+        }
+        return logits, cache
+
+    def cache_templates(self, batch: int, seq: int) -> Dict[str, ParamSpec]:
+        c = self.cfg
+        Ln, N, K, P, hd = c.n_layers, c.ssm.d_state, c.ssm.d_conv, self.n_ssm_heads, c.ssm.head_dim
+        return {
+            "ssm": ParamSpec((Ln, batch, P, N, hd), "float32", (None, "batch", "tp", None, None)),
+            "conv_x": ParamSpec((Ln, batch, K - 1, c.d_inner), c.act_dtype, (None, "batch", None, "tp")),
+            "conv_bc": ParamSpec((Ln, batch, K - 1, 2 * N), c.act_dtype, (None, "batch", None, None)),
+            "attn_k": ParamSpec((self.n_groups, batch, seq, c.n_kv_heads, c.hd),
+                                c.act_dtype, (None, "batch", "sp", None, None)),
+            "attn_v": ParamSpec((self.n_groups, batch, seq, c.n_kv_heads, c.hd),
+                                c.act_dtype, (None, "batch", "sp", None, None)),
+            "len": ParamSpec((), "int32", ()),
+        }

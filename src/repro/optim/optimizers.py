@@ -1,0 +1,189 @@
+"""Optimizers built in-tree (no optax): AdamW and Adafactor, with
+warmup-cosine schedules and global-norm clipping.
+
+Both optimizers expose ``state_templates`` so the dry-run can lower a full
+``train_step`` (params + optimizer state as sharded ShapeDtypeStructs) without
+allocating anything. Optimizer moments shard exactly like their parameters
+(ZeRO semantics); Adafactor's factored second moment drops the last/second-to-
+last dims (the reason grok-1-314b fits: 316B × 4-byte Adam moments would not).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ParamSpec
+
+__all__ = ["OptimizerConfig", "make_optimizer", "AdamW", "Adafactor",
+           "warmup_cosine", "global_norm", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128    # factor only dims >= this
+
+
+def warmup_cosine(cfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        t = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamW:
+    """Decoupled weight decay Adam; fp32 moments regardless of param dtype."""
+
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+        self.sched = warmup_cosine(cfg)
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def state_templates(self, templates: Dict[str, ParamSpec]) -> Dict[str, Dict]:
+        f32 = {k: ParamSpec(v.shape, "float32", v.axes, stacked=v.stacked)
+               for k, v in templates.items()}
+        return {"m": f32, "v": dict(f32), "step": ParamSpec((), "int32", ())}
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state["step"] + 1
+        lr = self.sched(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - c.b1 ** t
+        bc2 = 1 - c.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = c.b1 * m + (1 - c.b1) * g
+            v = c.b2 * v + (1 - c.b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + c.eps)
+            if p.ndim >= 2:  # no decay on norms/scalars
+                delta = delta + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat = {k: upd(grads[k], state["m"][k], state["v"][k], params[k]) for k in params}
+        new_params = {k: v[0] for k, v in flat.items()}
+        new_state = {
+            "m": {k: v[1] for k, v in flat.items()},
+            "v": {k: v[2] for k, v in flat.items()},
+            "step": step,
+        }
+        return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), no momentum
+# ---------------------------------------------------------------------------
+
+class Adafactor:
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+        self.sched = warmup_cosine(cfg)
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= self.cfg.factored_min_dim \
+            and shape[-2] >= self.cfg.factored_min_dim
+
+    def init(self, params):
+        state = {"step": jnp.zeros((), jnp.int32), "vr": {}, "vc": {}, "v": {}}
+        for k, p in params.items():
+            if self._factored(p.shape):
+                state["vr"][k] = jnp.zeros(p.shape[:-1], jnp.float32)
+                state["vc"][k] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            else:
+                state["v"][k] = jnp.zeros(p.shape, jnp.float32)
+        return state
+
+    def state_templates(self, templates: Dict[str, ParamSpec]) -> Dict[str, Dict]:
+        out = {"step": ParamSpec((), "int32", ()), "vr": {}, "vc": {}, "v": {}}
+        for k, t in templates.items():
+            if self._factored(t.shape):
+                out["vr"][k] = ParamSpec(t.shape[:-1], "float32", t.axes[:-1], stacked=t.stacked)
+                out["vc"][k] = ParamSpec(t.shape[:-2] + t.shape[-1:], "float32",
+                                         t.axes[:-2] + t.axes[-1:], stacked=t.stacked)
+            else:
+                out["v"][k] = ParamSpec(t.shape, "float32", t.axes, stacked=t.stacked)
+        return out
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state["step"] + 1
+        lr = self.sched(step)
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-c.decay_rate)
+
+        new_params, vr_s, vc_s, v_s = {}, {}, {}, {}
+        for k, p in params.items():
+            g = grads[k].astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if self._factored(p.shape):
+                vr = beta2 * state["vr"][k] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * state["vc"][k] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                vr_s[k], vc_s[k] = vr, vc
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = g * jax.lax.rsqrt(jnp.maximum(vr[..., None] / denom[..., None], 1e-30)) \
+                      * jax.lax.rsqrt(jnp.maximum(vc[..., None, :], 1e-30))
+            else:
+                v = beta2 * state["v"][k] + (1 - beta2) * g2
+                v_s[k] = v
+                u = g * jax.lax.rsqrt(jnp.maximum(v, 1e-30))
+            # update clipping (RMS(u) <= 1)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u)
+            delta = u
+            if p.ndim >= 2:
+                delta = delta + c.weight_decay * p.astype(jnp.float32)
+            new_params[k] = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_params, {"step": step, "vr": vr_s, "vc": vc_s, "v": v_s}
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return AdamW(cfg)
+    if cfg.name == "adafactor":
+        return Adafactor(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules: DP × FSDP(ZeRO-3) × TP (+ pod axis).
+
+Every parameter/activation dimension carries a *logical* axis name; this module
+maps logical names onto physical mesh axes. The production meshes are
+
+* single-pod: ``(data=16, model=16)``
+* multi-pod:  ``(pod=2, data=16, model=16)``
+
+Default mapping (MaxText-style 2D param sharding):
+
+========  =======================  =============================================
+logical   mesh axes                used for
+========  =======================  =============================================
+batch     ("pod", "data")          activation batch dim (pure DP)
+fsdp      ("data",) | +"pod"       the ZeRO-3 dim of every weight (all-gathered
+                                   per layer inside the step; reduce-scattered
+                                   gradients)
+tp        ("model",)               heads / d_ff / vocab — tensor parallelism
+sp        ("model",)               sequence dim of long-context activations and
+                                   of decode KV caches (flash-decoding)
+expert    ()                       MoE expert dim (kept unsharded: 8 experts do
+                                   not divide the 16-wide axes; d_ff is TP-cut)
+========  =======================  =============================================
+
+``ShardingRules`` is a small value object so perf iterations can swap rule sets
+(e.g. FSDP over ("pod","data") for grok-scale models) without touching model
+code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "ParamSpec", "logical_to_spec", "named_sharding"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names -> tuple of physical mesh axis names."""
+
+    batch: Tuple[str, ...] = ("data",)
+    fsdp: Tuple[str, ...] = ("data",)
+    tp: Tuple[str, ...] = ("model",)
+    sp: Tuple[str, ...] = ("model",)
+    expert: Tuple[str, ...] = ()
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, fsdp_over_pod: bool = False) -> "ShardingRules":
+        axes = mesh.axis_names
+        has_pod = "pod" in axes
+        batch = (("pod", "data") if has_pod else ("data",))
+        fsdp = (("pod", "data") if (has_pod and fsdp_over_pod) else ("data",))
+        return ShardingRules(batch=batch, fsdp=fsdp)
+
+    def resolve(self, logical: Optional[str]):
+        """Logical axis name -> PartitionSpec entry (None, str or tuple)."""
+        if logical is None:
+            return None
+        got: Tuple[str, ...] = getattr(self, logical)
+        if len(got) == 0:
+            return None
+        if len(got) == 1:
+            return got[0]
+        return got
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: ShardingRules) -> P:
+    """Translate a tuple of logical axis names into a PartitionSpec."""
+    return P(*(rules.resolve(a) for a in axes))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def safe_spec(mesh: Mesh, axes: Sequence[Optional[str]], rules: ShardingRules,
+              shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec with non-divisible entries dropped to replicated.
+
+    E.g. a global_batch=1 long-context cell cannot shard its batch dim over a
+    16-wide data axis — the axis is dropped (and the roofline shows it idle)
+    rather than relying on GSPMD padding for explicit in_shardings.
+    """
+    entries = [rules.resolve(a) for a in axes]
+    if shape is not None:
+        entries = [e if (dim % _axis_size(mesh, e) == 0) else None
+                   for e, dim in zip(entries, shape)]
+    return P(*entries)
+
+
+def safe_entry(mesh: Mesh, rules: ShardingRules, logical: Optional[str], dim: int):
+    """Single PartitionSpec entry, dropped to None when it does not divide."""
+    e = rules.resolve(logical)
+    return e if (e is not None and dim % _axis_size(mesh, e) == 0) else None
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]], rules: ShardingRules,
+                   shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, safe_spec(mesh, axes, rules, shape))
+
+
+def spec_tree_sds(tree):
+    """Map a pytree of ParamSpec leaves to ShapeDtypeStructs."""
+    return jax.tree.map(lambda s: s.sds, tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree_shardings(tree, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(lambda s: s.sharding(mesh, rules), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape + dtype + logical axes + init recipe for one parameter tensor.
+
+    ``axes`` has one entry per dim: a logical axis name or None (replicated).
+    ``stacked`` marks per-layer parameters that carry a leading layer dim and
+    are consumed by ``lax.scan`` over layers (the leading dim is never sharded).
+    """
+
+    shape: Tuple[int, ...]
+    dtype: str = "bfloat16"
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"       # "normal" | "zeros" | "ones" | "scaled"
+    init_scale: float = 0.02
+    stacked: bool = False
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def spec(self, rules: ShardingRules) -> P:
+        return logical_to_spec(self.axes, rules)
+
+    def sharding(self, mesh: Mesh, rules: ShardingRules) -> NamedSharding:
+        return named_sharding(mesh, self.axes, rules, self.shape)

@@ -1,0 +1,79 @@
+"""Train-step builder: microbatched gradient accumulation + clipping + update.
+
+One function (``make_train_step``) serves the trainer, the smoke tests and the
+multi-pod dry-run. Distribution is entirely declarative: the caller jits the
+returned function with sharded in/out specs; GSPMD inserts the per-layer FSDP
+all-gathers, TP collectives and gradient reduce-scatters.
+
+Distributed-optimization knobs:
+
+* ``microbatches`` — grad accumulation via ``lax.scan`` bounds activation
+  memory to one microbatch.
+* ``grad_dtype`` — "float32" (default) or "bfloat16". bf16 halves both the
+  accumulator memory and, because XLA reduces in the tensor dtype, the bytes
+  of every gradient reduce-scatter (the §Perf collective-term lever). The
+  fp32 Adam moments act as the error-feedback accumulator.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import clip_by_global_norm
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def make_train_step(
+    model,
+    optimizer,
+    *,
+    microbatches: int = 1,
+    grad_dtype: str = "float32",
+    clip_norm: float = 1.0,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(params, opt_state, batch):
+        G = microbatches
+        if G > 1:
+            def split(x):
+                return x.reshape((G, x.shape[0] // G) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def micro(carry, mb):
+                gsum, lsum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / G).astype(grad_dtype), gsum)
+            loss = lsum / G
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "step": new_opt["step"],
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(params, batch):
+        return {"loss": model.loss(params, batch)}
+    return eval_step

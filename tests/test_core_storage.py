@@ -1,0 +1,264 @@
+"""Storage-core tests: safetensors format, BitX containers, dedup engines,
+FastCDC, bit distance, clustering, and the full zLLM pipeline."""
+
+import json
+import os
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stt
+
+from repro.core.bitdistance import (bit_distance_arrays, expected_bit_distance_mc,
+                                    shape_signature)
+from repro.core.bitx import BitXCodec, BitXReader, BitXWriter
+from repro.core.chunkdedup import ChunkDedup, FastCDC
+from repro.core.dedup import FileDedup, LayerDedup, TensorDedup, layer_key
+from repro.core.pipeline import ZLLMStore
+from repro.formats import safetensors as st
+
+BF16 = ml_dtypes.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# safetensors
+# ---------------------------------------------------------------------------
+
+def test_safetensors_roundtrip(tmp_path):
+    rng = np.random.RandomState(0)
+    tensors = {
+        "a.weight": rng.randn(4, 8).astype(np.float32),
+        "b.weight": rng.randn(16).astype(BF16),
+        "c.ids": rng.randint(0, 100, (3, 3)).astype(np.int64),
+        "d.flag": np.array([True, False]),
+    }
+    p = tmp_path / "m.safetensors"
+    st.save_file(tensors, p, metadata={"k": "v"})
+    back = st.load_file(p)
+    assert set(back) == set(tensors)
+    np.testing.assert_array_equal(back["a.weight"], tensors["a.weight"])
+    np.testing.assert_array_equal(back["b.weight"], tensors["b.weight"].view(np.uint16))
+    infos, meta, _ = st.read_header(p)
+    assert meta["k"] == "v"
+    assert [ti.name for ti in infos] == list(tensors)  # insertion order preserved
+    assert json.loads(meta["tensor_order"]) == list(tensors)
+
+
+@settings(max_examples=20, deadline=None)
+@given(stt.integers(1, 64), stt.integers(0, 2**31 - 1))
+def test_safetensors_property_bitexact(n, seed):
+    import tempfile
+    rng = np.random.RandomState(seed)
+    t = {"x": rng.randn(n).astype(np.float32),
+         "y": (rng.randn(n) * 100).astype(BF16)}
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.safetensors")
+        st.save_file(t, p)
+        back = st.load_file(p)
+        np.testing.assert_array_equal(back["x"], t["x"])
+        np.testing.assert_array_equal(back["y"], t["y"].view(np.uint16))
+
+
+# ---------------------------------------------------------------------------
+# BitX codec + container
+# ---------------------------------------------------------------------------
+
+def test_bitx_codec_roundtrip_bf16():
+    rng = np.random.RandomState(1)
+    base = (rng.randn(4096) * 0.02).astype(BF16).view(np.uint16)
+    ft = ((base.view(BF16).astype(np.float32)
+           + rng.randn(4096).astype(np.float32) * 0.001).astype(BF16)).view(np.uint16)
+    codec = BitXCodec()
+    frames, raw = codec.encode_delta(base, ft)
+    assert raw == ft.nbytes
+    out = codec.decode_delta(frames, base)
+    np.testing.assert_array_equal(out, ft)
+    # same-family deltas: the MSB plane must compress far better than raw
+    assert len(frames[0]) < 0.35 * len(base)
+
+
+def test_bitx_container_roundtrip(tmp_path):
+    rng = np.random.RandomState(2)
+    base = rng.randn(100).astype(np.float32)
+    ft = base + rng.randn(100).astype(np.float32) * 1e-4
+    w = BitXWriter(file_metadata={"hello": "world"})
+    w.add_bitx("t0", "F32", (100,), base, ft, "bh", "sh")
+    w.add_zipnn("t1", "F32", (10, 10), rng.randn(10, 10).astype(np.float32), "sh2")
+    w.add_raw("t2", "I32", (5,), np.arange(5, dtype=np.int32).tobytes(), "sh3")
+    w.add_dedup("t3", "F32", (100,), "sh", 400)
+    path = str(tmp_path / "c.bitx")
+    w.write(path)
+    r = BitXReader.open(path)
+    assert r.file_metadata["hello"] == "world"
+    assert [rec.codec for rec in r.records] == ["bitx", "zipnn", "raw", "dedup"]
+    out = r.decode_tensor(0, lambda h: base, None)
+    np.testing.assert_array_equal(out, ft.view(np.uint32).reshape(100))
+
+
+# ---------------------------------------------------------------------------
+# Dedup engines
+# ---------------------------------------------------------------------------
+
+def test_layer_key_grouping():
+    assert layer_key("model.layers.7.mlp.w") == "layer.7"
+    assert layer_key("transformer.h.12.attn.q") == "layer.12"
+    assert layer_key("lm_head.weight").startswith("top.")
+
+
+def test_dedup_hierarchy_on_corpus(corpus_dir):
+    """TensorDedup must land between FileDedup and (Layer <= Tensor)."""
+    root, manifest = corpus_dir
+    fd, td, ld = FileDedup(), TensorDedup(), LayerDedup()
+    for rid, kind in manifest:
+        p = os.path.join(root, rid, "model.safetensors")
+        fd.scan_file(p, rid)
+        td.scan_file(p, rid)
+        ld.scan_file(p, rid)
+    assert fd.stats.reduction_ratio < td.stats.reduction_ratio
+    assert ld.stats.reduction_ratio <= td.stats.reduction_ratio + 1e-9
+    assert td.stats.n_unique < td.stats.n_units
+    # metadata ordering: file < layer < tensor entries
+    assert fd.stats.n_unique <= ld.stats.n_unique <= td.stats.n_unique
+
+
+def test_fastcdc_boundaries():
+    cdc = FastCDC(min_size=64, avg_size=256, max_size=1024)
+    rng = np.random.RandomState(3)
+    data = rng.bytes(64 * 1024)
+    chunks = list(cdc.chunks(data))
+    assert chunks[0][0] == 0 and chunks[-1][1] == len(data)
+    for (b, e), (b2, e2) in zip(chunks, chunks[1:]):
+        assert e == b2
+    sizes = [e - b for b, e in chunks[:-1]]
+    assert all(64 <= s <= 1024 for s in sizes)
+    # determinism
+    assert list(cdc.chunks(data)) == chunks
+
+
+def test_fastcdc_finds_shared_region():
+    """A file sharing a large middle region with another must dedup chunks."""
+    cdc = FastCDC(min_size=64, avg_size=256, max_size=1024)
+    rng = np.random.RandomState(4)
+    shared = rng.bytes(32 * 1024)
+    f1 = rng.bytes(4096) + shared + rng.bytes(4096)
+    f2 = rng.bytes(2048) + shared + rng.bytes(512)
+    dd = ChunkDedup(cdc)
+    dd.scan_bytes(f1)
+    before = dd.stats.unique_bytes
+    dd.scan_bytes(f2)
+    added = dd.stats.unique_bytes - before
+    assert added < len(f2) * 0.5  # most of f2 deduped against shared region
+
+
+# ---------------------------------------------------------------------------
+# Bit distance + clustering threshold (paper Eq. 1, §4.2)
+# ---------------------------------------------------------------------------
+
+def test_bit_distance_manual():
+    a = np.array([0b0000, 0b1111], np.uint16)
+    b = np.array([0b0001, 0b1111], np.uint16)
+    assert bit_distance_arrays(a, b) == 0.5  # 1 differing bit over 2 elements
+
+
+def test_mc_calibration_within_family_band():
+    """Paper §4.2: σw∈[0.015,0.05], σΔ∈[0,0.02] ⇒ E[D] within [~1.5, 6]."""
+    lo = expected_bit_distance_mc(0.05, 0.0005, n=20000)
+    hi = expected_bit_distance_mc(0.015, 0.02, n=20000)
+    assert 0.5 <= lo <= 6.0
+    assert 2.5 <= hi <= 7.0
+    # cross-family (independent draws) clearly exceeds the threshold of 4.
+    # (the paper reports >6 on real models, whose per-tensor σw spread widens
+    # exponent disagreement; equal-σ synthetic draws land ~5.7)
+    import jax, jax.numpy as jnp
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w1 = (jax.random.normal(k1, (20000,)) * 0.02).astype(jnp.bfloat16)
+    w2 = (jax.random.normal(k2, (20000,)) * 0.02).astype(jnp.bfloat16)
+    from repro.kernels.ops import bit_distance
+    assert bit_distance(w1, w2) > 4.5
+
+
+def test_clustering_recovers_families(corpus_dir):
+    from repro.core.clustering import cluster_models
+    root, manifest = corpus_dir
+    # full-weight repos only (LoRA adapters have different signatures anyway)
+    paths, fams = [], []
+    for rid, kind in manifest:
+        if kind in ("base", "finetune", "reupload", "checkpoint"):
+            paths.append(os.path.join(root, rid, "model.safetensors"))
+            fams.append(rid.split("/")[0][-1] if kind == "base" else rid)
+    comps = cluster_models(paths, threshold=4.0)
+    # two families -> the two largest components must not mix base models
+    assert len(comps) >= 2
+
+
+# ---------------------------------------------------------------------------
+# End-to-end pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_bitexact_and_synergy(tmp_path, corpus_dir):
+    root, manifest = corpus_dir
+    store = ZLLMStore(str(tmp_path / "store"))
+    for rid, kind in manifest:
+        store.ingest_repo(os.path.join(root, rid), rid)
+    s = store.summary()
+    assert s["reduction_ratio"] > 0.35          # dedup+BitX beats either alone
+    assert store.stats.n_file_dedup >= 2        # re-uploads caught
+    # every file reconstructs bit-exactly (verified against ingest hash inside)
+    for rid, kind in manifest:
+        orig = open(os.path.join(root, rid, "model.safetensors"), "rb").read()
+        assert store.retrieve_file(rid, "model.safetensors") == orig
+
+
+def test_pipeline_vocab_expansion_fallback(tmp_path, corpus_dir):
+    root, manifest = corpus_dir
+    store = ZLLMStore(str(tmp_path / "store2"))
+    for rid, kind in manifest:
+        store.ingest_repo(os.path.join(root, rid), rid)
+    exp = [r for r in store.results if "vocab" in r.repo_id]
+    assert exp and all(r.n_zipnn >= 2 for r in exp)  # embed+lm_head shape-mismatch
+    assert all(r.n_bitx > 0 for r in exp)            # remaining tensors still BitX
+
+
+def test_pipeline_dedup_compression_ablation(tmp_path, corpus_dir):
+    """The paper's core claim: dedup and compression are SYNERGISTIC."""
+    root, manifest = corpus_dir
+    variants = {}
+    for name, kw in [("full", {}),
+                     ("no_dedup", {"use_tensor_dedup": False}),
+                     ("no_bitx", {"use_bitx": False})]:
+        s = ZLLMStore(str(tmp_path / f"store_{name}"), **kw)
+        for rid, kind in manifest:
+            s.ingest_repo(os.path.join(root, rid), rid)
+        variants[name] = s.summary()["reduction_ratio"]
+        # losslessness holds in every configuration
+        for rid, kind in manifest[:4]:
+            orig = open(os.path.join(root, rid, "model.safetensors"), "rb").read()
+            assert s.retrieve_file(rid, "model.safetensors") == orig
+    assert variants["full"] > variants["no_dedup"]
+    assert variants["full"] > variants["no_bitx"]
+
+
+def test_store_index_persistence(tmp_path, corpus_dir):
+    """A reopened store serves retrievals and continues ingesting (dedup +
+    family state intact across processes)."""
+    root, manifest = corpus_dir
+    s1 = ZLLMStore(str(tmp_path / "pstore"))
+    half = len(manifest) // 2
+    for rid, kind in manifest[:half]:
+        s1.ingest_repo(os.path.join(root, rid), rid)
+    s1.save_index()
+
+    s2 = ZLLMStore(str(tmp_path / "pstore"))
+    assert s2.load_index()
+    # retrieval of pre-restart files works bit-exactly
+    rid0 = manifest[0][0]
+    orig = open(os.path.join(root, rid0, "model.safetensors"), "rb").read()
+    assert s2.retrieve_file(rid0, "model.safetensors") == orig
+    # continued ingest still finds cross-restart dedup + family matches
+    for rid, kind in manifest[half:]:
+        s2.ingest_repo(os.path.join(root, rid), rid)
+    post = [r for r in s2.results if r.base_id or r.file_dedup_hit or r.n_dedup]
+    assert post, "no cross-restart dedup/family reuse found"
+    for rid, kind in manifest[half:]:
+        orig = open(os.path.join(root, rid, "model.safetensors"), "rb").read()
+        assert s2.retrieve_file(rid, "model.safetensors") == orig

@@ -1,0 +1,332 @@
+"""Substrate tests: optimizers, data pipeline, train step semantics,
+fault-tolerant trainer, straggler mitigation, serving."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pipeline import ZLLMStore
+from repro.data.pipeline import DataConfig, PrefetchIterator, SyntheticTokens
+from repro.models.api import get_model, init_params, make_batch
+from repro.optim.optimizers import (AdamW, Adafactor, OptimizerConfig,
+                                    clip_by_global_norm, global_norm,
+                                    make_optimizer, warmup_cosine)
+from repro.train.step import make_train_step
+from repro.train.trainer import (FailureInjector, SimulatedFailure, TrainConfig,
+                                 Trainer)
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_step():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=10, b1=0.9, b2=0.99,
+                          weight_decay=0.0, min_lr_ratio=1.0)
+    opt = AdamW(cfg)
+    p = {"w": jnp.array([[1.0, 2.0]], jnp.float32)}
+    g = {"w": jnp.array([[0.5, -0.5]], jnp.float32)}
+    s = opt.init(p)
+    new_p, s = opt.update(g, s, p)
+    # by hand: m=0.1*g? no: m=(1-b1)*g=0.05g... mhat=m/(1-b1)=g; vhat=g^2
+    # delta = g/(|g|+eps) = sign(g) -> p - lr*sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               [[1.0 - 0.1, 2.0 + 0.1]], rtol=1e-4)
+
+
+def test_adamw_weight_decay_skips_vectors():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, weight_decay=0.5, min_lr_ratio=1.0)
+    opt = AdamW(cfg)
+    p = {"norm": jnp.ones((4,)), "w": jnp.ones((2, 2))}
+    g = {"norm": jnp.zeros((4,)), "w": jnp.zeros((2, 2))}
+    s = opt.init(p)
+    new_p, _ = opt.update(g, s, p)
+    np.testing.assert_allclose(np.asarray(new_p["norm"]), np.ones(4))   # no decay
+    assert float(new_p["w"][0, 0]) < 1.0                                 # decayed
+
+
+def test_adafactor_factored_state_shapes():
+    cfg = OptimizerConfig(name="adafactor", factored_min_dim=4)
+    opt = Adafactor(cfg)
+    p = {"big": jnp.ones((3, 8, 16)), "small": jnp.ones((2,))}
+    s = opt.init(p)
+    assert s["vr"]["big"].shape == (3, 8)
+    assert s["vc"]["big"].shape == (3, 16)
+    assert s["v"]["small"].shape == (2,)
+    g = {"big": jnp.full((3, 8, 16), 0.1), "small": jnp.full((2,), 0.1)}
+    new_p, s2 = opt.update(g, s, p)
+    assert all(bool(jnp.all(jnp.isfinite(v))) for v in new_p.values())
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, g = clip_by_global_norm(t, 1.0)
+    np.testing.assert_allclose(float(g), np.sqrt(10 * 9 + 10 * 16), rtol=1e-5)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    s = warmup_cosine(cfg)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert abs(float(s(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+    assert float(s(jnp.int32(55))) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Grad accumulation semantics
+# ---------------------------------------------------------------------------
+
+def test_microbatch_accumulation_equivalence():
+    """G=4 fp32-accumulated mean gradients match the full-batch gradients.
+
+    (Comparing post-Adam params would amplify sign noise on near-zero grads:
+    Adam's first step is ±lr regardless of magnitude.)"""
+    cfg = get_config("qwen2-7b", smoke=True)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    from repro.configs.base import ShapeCell
+    batch = make_batch(cfg, ShapeCell("t", "train", 16, 8), key)
+
+    loss_full, g_full = jax.value_and_grad(model.loss)(params, batch)
+    G = 4
+    mbs = jax.tree.map(lambda x: x.reshape((G, x.shape[0] // G) + x.shape[1:]), batch)
+    g_acc = jax.tree.map(lambda p: np.zeros(p.shape, np.float32), params)
+    losses = []
+    for i in range(G):
+        mb = jax.tree.map(lambda x: x[i], mbs)
+        l, g = jax.value_and_grad(model.loss)(params, mb)
+        losses.append(float(l))
+        g_acc = jax.tree.map(lambda a, x: a + np.asarray(x, np.float32) / G, g_acc, g)
+    np.testing.assert_allclose(float(loss_full), np.mean(losses), rtol=1e-2)
+    for k in g_full:
+        a = np.asarray(g_full[k], np.float32)
+        b = g_acc[k]
+        denom = max(float(np.abs(a).max()), 1e-6)
+        assert float(np.abs(a - b).max()) / denom < 0.06, k
+
+
+def test_bf16_grad_compression_still_learns():
+    cfg = get_config("qwen2-7b", smoke=True)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    from repro.configs.base import ShapeCell
+    batch = make_batch(cfg, ShapeCell("t", "train", 16, 4), key)
+    opt = AdamW(OptimizerConfig(lr=3e-3, warmup_steps=0, weight_decay=0.0))
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt, microbatches=2, grad_dtype="bfloat16"))
+    first = None
+    for _ in range(4):
+        params, state, m = step(params, state, batch)
+        first = first or float(m["loss"])
+    assert float(m["loss"]) < first
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_restart():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=3)
+    d1 = SyntheticTokens(cfg)
+    b5 = d1.batch_at(5)
+    d2 = SyntheticTokens(cfg)
+    np.testing.assert_array_equal(d2.batch_at(5)["tokens"], b5["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b5["tokens"][:, 1:], b5["labels"][:, :-1])
+    # host sharding covers distinct data
+    ca = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=3, n_hosts=2, host_index=0)
+    cb = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=3, n_hosts=2, host_index=1)
+    assert not np.array_equal(SyntheticTokens(ca).batch_at(0)["tokens"],
+                              SyntheticTokens(cb).batch_at(0)["tokens"])
+
+
+def test_prefetch_iterator():
+    it = PrefetchIterator(iter([1, 2, 3]), prefetch=2)
+    assert list(it) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Trainer fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_trainer_crash_resume_and_store(tmp_path):
+    cfg = TrainConfig(arch=get_config("qwen2-7b", smoke=True), seq_len=16,
+                      global_batch=4, steps=8, ckpt_every=3,
+                      run_dir=str(tmp_path / "run"), async_checkpoint=False)
+    store = ZLLMStore(str(tmp_path / "store"))
+    t1 = Trainer(cfg, store=store, run_id="r", failure=FailureInjector(fail_at_step=5))
+    with pytest.raises(SimulatedFailure):
+        t1.run()
+    t2 = Trainer(cfg, store=store, run_id="r")
+    assert t2.resumed_from == 3                     # latest committed checkpoint
+    h = t2.run()
+    assert h[-1]["step"] == 8
+    # deterministic data: resumed steps see the same batches the crashed run would
+    assert t2.ckpt.latest_step() == 8
+    # checkpoints chain through zLLM with a declared base
+    chained = [r for r in store.results if r.base_source == "declared"]
+    assert chained and all(r.n_bitx > 0 for r in chained)
+
+
+def test_trainer_elastic_restore_smaller_run(tmp_path):
+    """Checkpoint written by one trainer restores into a fresh config."""
+    arch = get_config("qwen2-7b", smoke=True)
+    c1 = TrainConfig(arch=arch, seq_len=16, global_batch=4, steps=4, ckpt_every=2,
+                     run_dir=str(tmp_path / "runA"), async_checkpoint=False)
+    t1 = Trainer(c1, run_id="a")
+    t1.run()
+    # new trainer, same run dir, different global batch (elastic data parallel)
+    c2 = TrainConfig(arch=arch, seq_len=16, global_batch=8, steps=6, ckpt_every=2,
+                     run_dir=str(tmp_path / "runA"), async_checkpoint=False)
+    t2 = Trainer(c2, run_id="a")
+    assert t2.resumed_from == 4
+    h = t2.run()
+    assert h[-1]["step"] == 6 and np.isfinite(h[-1]["loss"])
+
+
+def test_checkpoint_restore_from_compressed_only(tmp_path):
+    """keep_plain=False: restore reconstructs from BitX containers."""
+    arch = get_config("falcon-mamba-7b", smoke=True)
+    store = ZLLMStore(str(tmp_path / "store"))
+    cfg = TrainConfig(arch=arch, seq_len=16, global_batch=2, steps=4, ckpt_every=2,
+                      run_dir=str(tmp_path / "run"), async_checkpoint=False,
+                      keep_plain_ckpt=False)
+    t1 = Trainer(cfg, store=store, run_id="m")
+    t1.run()
+    assert not any(f.endswith(".safetensors") for f in os.listdir(cfg.run_dir))
+    t2 = Trainer(cfg, store=store, run_id="m")
+    assert t2.resumed_from == 4
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation
+# ---------------------------------------------------------------------------
+
+def test_speculative_map_reissues_straggler():
+    import threading
+    import time
+    from repro.checkpoint.straggler import speculative_map
+
+    calls = {"n": 0}
+    lock = threading.Lock()
+    first_stuck = threading.Event()
+
+    def task(x):
+        with lock:
+            calls["n"] += 1
+            mine = calls["n"]
+        if x == 1 and mine == 2:        # first attempt of item 1 hangs
+            first_stuck.wait(5.0)
+            return -1
+        return x * 10
+
+    out = speculative_map(task, [0, 1, 2], timeout=0.2, workers=4)
+    first_stuck.set()
+    assert out == [0, 10, 20]
+    assert calls["n"] >= 4              # at least one speculative re-issue
+
+
+def test_speculative_map_propagates_hard_failure():
+    from repro.checkpoint.straggler import speculative_map
+
+    def bad(x):
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError):
+        speculative_map(bad, [1], timeout=0.05, workers=2, max_attempts=2)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def test_serve_generate_and_batcher():
+    from repro.serve.engine import RequestBatcher, ServeEngine
+    cfg = get_config("qwen2-7b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params)
+    prompts = np.array([[1, 2, 3, 4], [9, 8, 7, 6]], np.int32)
+    res = eng.generate(prompts, n_new=4)
+    assert res.tokens.shape == (2, 8)
+    assert res.tokens.dtype == np.int32
+
+    rb = RequestBatcher(eng, batch_size=2, n_new=3)
+    r1 = rb.submit([1, 2, 3])
+    r2 = rb.submit([4, 5])
+    done = rb.run_once()
+    assert set(done) == {r1, r2}
+    assert rb.result(r1).shape == (3,)
+
+
+def test_serve_cold_start_from_store(tmp_path):
+    from repro.serve.engine import ServeEngine
+    arch = get_config("qwen2-7b", smoke=True)
+    store = ZLLMStore(str(tmp_path / "store"))
+    cfg = TrainConfig(arch=arch, seq_len=16, global_batch=2, steps=2, ckpt_every=2,
+                      run_dir=str(tmp_path / "run"), async_checkpoint=False)
+    t = Trainer(cfg, store=store, run_id="serve-run")
+    t.run()
+    eng = ServeEngine.from_store(store, "serve-run", "checkpoint-00000002.safetensors", arch)
+    res = eng.generate(np.array([[1, 2, 3]], np.int32), n_new=2)
+    assert res.tokens.shape == (1, 5)
+    # the served params equal the trained ones bit-for-bit
+    for k, v in t.params.items():
+        np.testing.assert_array_equal(
+            np.asarray(eng.params[k]).view(np.uint16) if np.asarray(v).dtype.name == "bfloat16" else np.asarray(eng.params[k]),
+            np.asarray(v).view(np.uint16) if np.asarray(v).dtype.name == "bfloat16" else np.asarray(v))
+
+
+def test_moe_group_local_dispatch_equivalence():
+    """With ample capacity, group-local dispatch (the collective-term fix,
+    EXPERIMENTS §Perf) computes the same function as global dispatch."""
+    from repro.models.layers import moe_block
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    B, S, d, f, E = 2, 16, 8, 16, 4
+    x = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    router = jax.random.normal(ks[1], (d, E), jnp.float32)
+    wg = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, f), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[4], (E, f, d), jnp.float32) * 0.1
+    y1, aux1 = moe_block(x, router, wg, wu, wd, top_k=2, capacity_factor=8.0,
+                         n_groups=1)
+    y4, aux4 = moe_block(x, router, wg, wu, wd, top_k=2, capacity_factor=8.0,
+                         n_groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux1), float(aux4), rtol=1e-5)
+
+
+def test_moe_matches_dense_reference_ample_capacity():
+    """Scatter dispatch == per-token dense gating when nothing drops."""
+    from repro.models.layers import moe_block
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 5)
+    B, S, d, f, E, k = 1, 8, 4, 8, 4, 2
+    x = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    router = jax.random.normal(ks[1], (d, E), jnp.float32)
+    wg = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, f), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[4], (E, f, d), jnp.float32) * 0.1
+    got, _ = moe_block(x, router, wg, wu, wd, top_k=k, capacity_factor=16.0)
+
+    # dense reference: loop tokens, apply top-k experts
+    probs = np.asarray(jax.nn.softmax(x.reshape(-1, d) @ router, axis=-1))
+    want = np.zeros((B * S, d), np.float32)
+    for t in range(B * S):
+        idx = np.argsort(-probs[t])[:k]
+        w = probs[t][idx] / probs[t][idx].sum()
+        for e, wi in zip(idx, w):
+            h = np.asarray(x.reshape(-1, d))[t]
+            g = h @ np.asarray(wg[e])
+            u = h @ np.asarray(wu[e])
+            silu = g / (1 + np.exp(-g))
+            want[t] += wi * ((silu * u) @ np.asarray(wd[e]))
+    np.testing.assert_allclose(np.asarray(got).reshape(-1, d), want,
+                               rtol=2e-4, atol=2e-4)
