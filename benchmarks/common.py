@@ -40,6 +40,12 @@ class Ctx:
 
 
 def bench_spec(scale: str = "default") -> CorpusSpec:
+    if scale == "tiny":
+        # CI smoke: one family, seconds-scale end to end
+        return CorpusSpec(n_families=1, finetunes_per_family=2, reuploads_per_family=1,
+                          lora_per_family=0, vocab_expanded_per_family=0,
+                          checkpoints_per_family=0, n_layers=2, d_model=96,
+                          d_ff=192, vocab=384, seed=11)
     if scale == "small":
         return CorpusSpec(n_families=2, finetunes_per_family=3, reuploads_per_family=1,
                           lora_per_family=1, vocab_expanded_per_family=1,

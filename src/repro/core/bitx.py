@@ -23,12 +23,15 @@ from __future__ import annotations
 
 import io
 import json
+import mmap
 import struct
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-import zstandard as zstd
+
+from repro.core import zstd_compat as zstd
 
 __all__ = [
     "BitXCodec",
@@ -122,12 +125,38 @@ class TensorRecord:
 
 
 class BitXCodec:
-    """Per-tensor BitX / ZipNN / raw encode+decode with a zstd entropy stage."""
+    """Per-tensor BitX / ZipNN / raw encode+decode with a zstd entropy stage.
+
+    ``threads`` is forwarded to ``zstd.ZstdCompressor(threads=...)`` (zstd's
+    internal frame-level multithreading; ignored by the zlib fallback).
+
+    zstd compressor/decompressor *contexts* are not thread-safe, so a codec
+    instance keeps its contexts in thread-local storage: the parallel ingest
+    and retrieval engines share one ``BitXCodec`` across their worker pool and
+    each worker lazily materializes its own pair of contexts. Frames are a
+    pure function of (input bytes, level, threads), so per-worker contexts do
+    not change the emitted bytes.
+    """
 
     def __init__(self, level: int = DEFAULT_ZSTD_LEVEL, threads: int = 0):
         self.level = level
-        self._cctx = zstd.ZstdCompressor(level=level)
-        self._dctx = zstd.ZstdDecompressor()
+        self.threads = threads
+        self._tls = threading.local()
+
+    @property
+    def _cctx(self):
+        ctx = getattr(self._tls, "cctx", None)
+        if ctx is None:
+            ctx = self._tls.cctx = zstd.ZstdCompressor(level=self.level,
+                                                       threads=self.threads)
+        return ctx
+
+    @property
+    def _dctx(self):
+        ctx = getattr(self._tls, "dctx", None)
+        if ctx is None:
+            ctx = self._tls.dctx = zstd.ZstdDecompressor()
+        return ctx
 
     # -- BitX ---------------------------------------------------------------
     def encode_delta(self, base: np.ndarray, ft: np.ndarray) -> Tuple[List[bytes], int]:
@@ -171,8 +200,9 @@ class BitXCodec:
 class BitXWriter:
     """Streams TensorRecords + frames into a .bitx container."""
 
-    def __init__(self, level: int = DEFAULT_ZSTD_LEVEL, file_metadata: Optional[Dict] = None):
-        self.codec = BitXCodec(level=level)
+    def __init__(self, level: int = DEFAULT_ZSTD_LEVEL, file_metadata: Optional[Dict] = None,
+                 threads: int = 0):
+        self.codec = BitXCodec(level=level, threads=threads)
         self.records: List[TensorRecord] = []
         self.frames: List[bytes] = []
         self.file_metadata = dict(file_metadata or {})
@@ -214,9 +244,25 @@ class BitXWriter:
         )
         return 0
 
+    def add_precomputed(self, name: str, dtype_str: str, shape, codec: str,
+                        base_hash: Optional[str], self_hash: str,
+                        frames: Sequence[bytes], raw_size: int) -> int:
+        """Append a record whose frames were encoded elsewhere (the parallel
+        ingest engine encodes off-thread, then merges in tensor order so the
+        container bytes match the serial path exactly). Zero-payload dedup
+        records go through :meth:`add_dedup` instead."""
+        assert codec in ("bitx", "zipnn", "raw"), codec
+        self.records.append(
+            TensorRecord(name, dtype_str, tuple(shape), codec, base_hash, self_hash,
+                         [len(f) for f in frames], raw_size)
+        )
+        self.frames.extend(frames)
+        return sum(len(f) for f in frames)
+
     def tobytes(self) -> bytes:
         header = {
             "metadata": self.file_metadata,
+            "backend": zstd.BACKEND,
             "tensors": [r.to_json() for r in self.records],
         }
         hjson = json.dumps(header, separators=(",", ":")).encode()
@@ -237,15 +283,31 @@ class BitXWriter:
 
 class BitXReader:
     """Reads a .bitx container; decode requires a base-tensor resolver for
-    bitx-coded records and a pool resolver for dedup'd records."""
+    bitx-coded records and a pool resolver for dedup'd records.
 
-    def __init__(self, data: bytes):
-        assert data[:8] == MAGIC, "not a BitX container"
-        (hlen,) = struct.unpack("<Q", data[8:16])
-        header = json.loads(data[16 : 16 + hlen])
+    ``open(path)`` memory-maps the container: only the header is parsed
+    eagerly, frames are lazy zero-copy slices of the map
+    (:meth:`frames_for` returns memoryviews), so resolving a single tensor
+    out of a multi-GB container touches just that tensor's pages. A reader
+    is safe to share across decode worker threads (the codec keeps its
+    zstd contexts thread-local); call :meth:`close` to drop the map.
+    """
+
+    def __init__(self, data):
+        view = memoryview(data)
+        assert bytes(view[:8]) == MAGIC, "not a BitX container"
+        (hlen,) = struct.unpack("<Q", view[8:16])
+        header = json.loads(bytes(view[16 : 16 + hlen]))
+        backend = header.get("backend", zstd.BACKEND)
+        if backend != zstd.BACKEND:
+            raise ValueError(
+                f"container written with entropy backend {backend!r} but this "
+                f"process runs {zstd.BACKEND!r} (see repro.core.zstd_compat)")
         self.file_metadata: Dict = header.get("metadata", {})
         self.records = [TensorRecord.from_json(r) for r in header["tensors"]]
-        self._payload = data[16 + hlen :]
+        self._payload = view[16 + hlen :]
+        self._mmap: Optional[mmap.mmap] = None
+        self._file = None
         # frame offsets in record order
         self._offsets: List[List[Tuple[int, int]]] = []
         off = 0
@@ -259,11 +321,43 @@ class BitXReader:
         self.codec = BitXCodec()
 
     @staticmethod
-    def open(path: str) -> "BitXReader":
-        with open(path, "rb") as f:
-            return BitXReader(f.read())
+    def open(path: str, use_mmap: bool = True) -> "BitXReader":
+        if not use_mmap:
+            with open(path, "rb") as f:
+                return BitXReader(f.read())
+        f = open(path, "rb")
+        mm = None
+        try:
+            mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+            reader = BitXReader(mm)  # may raise (bad magic, backend mismatch)
+        except Exception:
+            if mm is not None:
+                try:
+                    mm.close()
+                except BufferError:
+                    # the raising frame still exports a view over the map;
+                    # GC finalizes it once the traceback is released
+                    pass
+            f.close()  # the fd is the scarce resource — always release it
+            raise
+        reader._mmap, reader._file = mm, f
+        return reader
 
-    def frames_for(self, idx: int) -> List[bytes]:
+    def close(self) -> None:
+        """Release the memory map (no-op for byte-backed readers). Frames
+        already handed out keep the map alive until they are collected."""
+        self._payload = memoryview(b"")
+        if self._mmap is not None:
+            try:
+                self._mmap.close()
+            except BufferError:
+                pass  # exported frame views still alive; GC finishes the job
+            self._mmap = None
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def frames_for(self, idx: int) -> List[memoryview]:
         return [self._payload[b:e] for b, e in self._offsets[idx]]
 
     def decode_tensor(self, idx: int, base_resolver, pool_resolver) -> np.ndarray:

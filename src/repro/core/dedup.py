@@ -17,17 +17,38 @@ index plus byte-accurate accounting, so the benchmarks can replay Table 5.
 from __future__ import annotations
 
 import hashlib
+import os
 import re
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.formats.safetensors import SafetensorsFile, TensorInfo
 
-__all__ = ["sha256_bytes", "FileDedup", "TensorDedup", "LayerDedup", "DedupStats"]
+__all__ = ["sha256_bytes", "sha256_file", "FileDedup", "TensorDedup", "LayerDedup",
+           "DedupStats"]
+
+# FileDedup streams whole files through sha256 in fixed chunks so peak RSS
+# stays flat on multi-GB shards (the hash state is 64 B regardless of input).
+HASH_CHUNK_BYTES = 8 << 20
 
 
 def sha256_bytes(data) -> str:
     return hashlib.sha256(data).hexdigest()
+
+
+def sha256_file(path: str, chunk_bytes: int = HASH_CHUNK_BYTES) -> Tuple[str, int]:
+    """Streaming whole-file sha256. Returns (hexdigest, bytes hashed)."""
+    h = hashlib.sha256()
+    size = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(chunk_bytes)
+            if not chunk:
+                break
+            h.update(chunk)
+            size += len(chunk)
+    return h.hexdigest(), size
 
 
 @dataclass
@@ -67,10 +88,7 @@ class FileDedup:
         self.stats = DedupStats()
 
     def scan_file(self, path: str, location: Optional[str] = None) -> Tuple[str, bool]:
-        with open(path, "rb") as f:
-            digest = sha256_bytes(f.read())
-        import os
-        size = os.path.getsize(path)
+        digest, size = sha256_file(path)
         is_new = digest not in self.index
         if is_new:
             self.index[digest] = location or path
@@ -79,13 +97,23 @@ class FileDedup:
 
 
 class TensorDedup:
-    """Per-tensor content hashing over the safetensors mmap (zero-copy)."""
+    """Per-tensor content hashing over the safetensors mmap (zero-copy).
+
+    ``hash_calls`` counts every tensor hash computed through this engine
+    (thread-safe — the parallel ingest pool hashes concurrently); the
+    pipeline tests use it to assert a base model is hashed exactly once no
+    matter how many fine-tunes are ingested against it.
+    """
 
     def __init__(self):
         self.index: Dict[str, str] = {}     # tensor hash -> location "repo/file:tensor"
         self.stats = DedupStats()
+        self.hash_calls = 0
+        self._counter_lock = threading.Lock()
 
     def hash_tensor(self, raw: memoryview) -> str:
+        with self._counter_lock:
+            self.hash_calls += 1
         return sha256_bytes(raw)
 
     def scan_file(self, path: str, location: Optional[str] = None):

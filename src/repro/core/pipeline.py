@@ -18,6 +18,34 @@ Retrieval reconstructs the original safetensors file BIT-EXACTLY (the stored
 header blob + decoded tensors in serialization order, verified against the
 ingest-time file hash).
 
+Parallel engine (paper §4.4.5 — the C++ pipeline, reproduced here with a
+thread pool; sha256, zstd/zlib and numpy's XOR all release the GIL):
+
+* **Ingest** is a three-stage pipeline per file. Stage 1 fans per-tensor
+  sha256 hashing out across the pool. Stage 2 — the *decision loop* — runs
+  serially in tensor order: dedup lookups, codec selection and
+  ``tensor_locations`` registration are order-dependent, so they are never
+  parallelized. Stage 3 fans the per-tensor encode jobs (XOR-delta,
+  byte-plane split, entropy coding) back out across the pool.
+* **Ordered-merge determinism rule:** workers may finish out of order, but
+  records and frames are appended to the container strictly in tensor
+  (serialization) order, and every frame is a pure function of
+  (tensor bytes, base bytes, zstd level/threads). A container written with
+  ``workers=N`` is therefore *bit-identical* to the serial ``workers=0``
+  container — verified by test. Worker threads get their own zstd contexts
+  (thread-local inside ``BitXCodec``); compressor objects are not
+  thread-safe and must never be shared mid-operation.
+* **Base-map cache:** registering a base *primes* a ``_BaseTensorMap``
+  (name → dtype/shape/hash + lazy mmap loader) from hashes already computed
+  during that base's own ingest, so ingesting N fine-tunes of one base
+  performs exactly ONE hash pass over the base (at its own ingest) instead
+  of N+1. Re-registering a base invalidates the cached map.
+* **Retrieval:** containers are memory-mapped (``BitXReader.open``) and
+  cached in an LRU; decoded dependency tensors are cached in a byte-budgeted
+  LRU so dedup/bitx resolution stops re-reading whole containers per tensor.
+  ``_decode_container`` decodes records across the pool (order restored at
+  the join).
+
 This module is also the storage backend of the training framework: the
 checkpoint manager (`repro.checkpoint`) ingests every checkpoint through a
 ``ZLLMStore``, so checkpoint chains dedup + delta-compress against their run's
@@ -30,14 +58,17 @@ import base64
 import json
 import os
 import struct
+import threading
 import time
 import zlib
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.bitx import BitXReader, BitXWriter
+from repro.core.bitx import BitXCodec, BitXReader, BitXWriter
 from repro.core.clustering import FamilyRegistry
 from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes
 from repro.formats.modelcard import parse_repo_metadata
@@ -46,6 +77,12 @@ from repro.formats.safetensors import STR_TO_DTYPE, SafetensorsFile
 __all__ = ["ZLLMStore", "IngestResult", "StoreStats"]
 
 _FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
+
+# Tensors below this size are hashed/encoded inline on the decision thread:
+# pool dispatch costs more than the work itself (and sha256 only releases
+# the GIL above ~2 KB anyway). Big tensors dominate bytes, so this trims
+# per-task overhead without hurting parallel coverage.
+_PARALLEL_MIN_BYTES = 64 << 10
 
 
 @dataclass
@@ -86,17 +123,121 @@ class StoreStats:
         return (self.raw_bytes / 2**20) / self.ingest_seconds if self.ingest_seconds else 0.0
 
 
+class _LRUCache:
+    """Tiny LRU with an item cap and an optional byte budget. NOT thread-safe;
+    callers hold the store's cache lock."""
+
+    def __init__(self, max_items: int = 16, max_bytes: Optional[int] = None,
+                 on_evict: Optional[Callable[[Any], None]] = None):
+        self.max_items = max_items
+        self.max_bytes = max_bytes
+        self.on_evict = on_evict
+        self._od: "OrderedDict[Any, Tuple[Any, int]]" = OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        ent = self._od.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self._od.move_to_end(key)
+        self.hits += 1
+        return ent[0]
+
+    def put(self, key, value, nbytes: int = 0):
+        if key in self._od:
+            self._bytes -= self._od.pop(key)[1]
+        self._od[key] = (value, nbytes)
+        self._bytes += nbytes
+        while len(self._od) > self.max_items or (
+                self.max_bytes is not None and self._bytes > self.max_bytes
+                and len(self._od) > 1):
+            self._evict_oldest()
+
+    def pop(self, key):
+        ent = self._od.pop(key, None)
+        if ent is not None:
+            self._bytes -= ent[1]
+            if self.on_evict:
+                self.on_evict(ent[0])
+
+    def values(self):
+        return [v for v, _ in self._od.values()]
+
+    def clear(self):
+        while self._od:
+            self._evict_oldest()
+
+    def _evict_oldest(self):
+        _, (value, nbytes) = self._od.popitem(last=False)
+        self._bytes -= nbytes
+        if self.on_evict:
+            self.on_evict(value)
+
+    def __len__(self):
+        return len(self._od)
+
+
+class _BaseTensorMap:
+    """Cached per-base tensor map: name -> (dtype_str, shape, loader, hash).
+
+    ``entries`` carry the hashes, so a map primed at base-ingest time costs
+    zero extra hash passes. The backing safetensors file is opened lazily
+    (and at most once — guarded by a lock, since encode workers resolve base
+    tensors concurrently) the first time any loader fires.
+    """
+
+    def __init__(self, path: str, entries: List[Tuple[str, str, Tuple[int, ...], str]]):
+        self.path = path
+        self.entries = entries
+        self._lock = threading.Lock()
+        self._sf: Optional[SafetensorsFile] = None
+        self.tensors: Dict[str, Tuple] = {
+            name: (dtype_str, tuple(shape), self._loader(name), thash)
+            for name, dtype_str, shape, thash in entries
+        }
+
+    def _loader(self, name: str):
+        def load(name=name) -> np.ndarray:
+            return self._open().tensor(name)
+        return load
+
+    def _open(self) -> SafetensorsFile:
+        with self._lock:
+            if self._sf is None:
+                self._sf = SafetensorsFile(self.path)
+                self._sf.advise("random")  # encode workers resolve out of order
+            return self._sf
+
+    def close(self):
+        with self._lock:
+            if self._sf is not None:
+                self._sf.close()
+                self._sf = None
+
+
 class ZLLMStore:
-    """Content-addressed zLLM store rooted at a directory."""
+    """Content-addressed zLLM store rooted at a directory.
+
+    ``workers`` selects the engine: ``0``/``1`` runs the serial reference
+    path; ``N > 1`` runs the pipelined thread-pool engine (bit-identical
+    containers, see the module docstring's ordered-merge rule).
+    """
 
     def __init__(self, root: str, *, threshold: float = 4.0, zstd_level: int = 3,
                  sample_elems: int = 65536, use_bitx: bool = True,
-                 use_tensor_dedup: bool = True):
+                 use_tensor_dedup: bool = True, workers: int = 0,
+                 zstd_threads: int = 0, tensor_cache_bytes: int = 256 << 20,
+                 reader_cache_size: int = 16):
         self.root = root
         os.makedirs(os.path.join(root, "containers"), exist_ok=True)
         self.zstd_level = zstd_level
+        self.zstd_threads = zstd_threads
         self.use_bitx = use_bitx
         self.use_tensor_dedup = use_tensor_dedup
+        self.workers = max(0, int(workers))
         self.file_dedup = FileDedup()
         self.tensor_dedup = TensorDedup()
         self.families = FamilyRegistry(threshold=threshold, sample_elems=sample_elems)
@@ -109,6 +250,49 @@ class ZLLMStore:
         self.base_key_of: Dict[str, str] = {}        # base_id -> "repo/file" container key
         self.metadata_base: Dict[str, str] = {}      # repo_id -> declared base id
         self.results: List[IngestResult] = []
+        # caches
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._cache_lock = threading.RLock()
+        # no on_evict close: an evicted reader may still be mid-decode on
+        # another thread (or held across _decode_container's record loop);
+        # dropping the reference lets GC finalize the mmap once the last
+        # frame view dies. Explicit close happens only in store.close().
+        self._reader_cache = _LRUCache(reader_cache_size)
+        self._tensor_cache = _LRUCache(max_items=4096, max_bytes=tensor_cache_bytes)
+        self._base_maps: Dict[str, _BaseTensorMap] = {}
+        self.base_map_stats = {"hits": 0, "misses": 0, "primed": 0, "invalidations": 0}
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+    def _executor(self) -> Optional[ThreadPoolExecutor]:
+        if self.workers <= 1:
+            return None
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=self.workers,
+                                            thread_name_prefix="zllm")
+        return self._pool
+
+    def close(self):
+        """Shut the worker pool down and drop mmap-backed caches. Must not
+        race in-flight retrievals (shut down your own callers first)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        with self._cache_lock:
+            for reader in self._reader_cache.values():
+                reader.close()
+            self._reader_cache.clear()
+            self._tensor_cache.clear()
+        for bm in {id(m): m for m in self._base_maps.values()}.values():
+            bm.close()
+        self._base_maps.clear()
+
+    def __enter__(self) -> "ZLLMStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------
     # Ingest
@@ -136,8 +320,13 @@ class ZLLMStore:
         if not is_new_file:
             res = IngestResult(repo_id, filename, raw_size, 0, file_dedup_hit=True,
                                ingest_seconds=time.perf_counter() - t0)
-            self.file_index[key] = {"kind": "file_dedup", "ref": self.file_hash_to_key[fhash],
-                                    "file_hash": fhash, "raw_size": raw_size}
+            ref = self.file_hash_to_key[fhash]
+            if ref != key:
+                self.file_index[key] = {"kind": "file_dedup", "ref": ref,
+                                        "file_hash": fhash, "raw_size": raw_size}
+            # ref == key: identical content re-ingested under its own key —
+            # keep the existing container record (a self-referencing dedup
+            # record would send retrieval into infinite recursion)
             self._account(res)
             self.stats.n_file_dedup += 1
             return res
@@ -147,42 +336,15 @@ class ZLLMStore:
         base_id, base_source = self._resolve_base(repo_id, path, declared_base)
         base_tensors = self._base_tensor_map(base_id) if base_id else {}
 
-        writer = BitXWriter(level=self.zstd_level)
+        writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
         res = IngestResult(repo_id, filename, raw_size, 0, base_id=base_id,
                            base_source=base_source)
+        entries: List[Tuple[str, str, Tuple[int, ...], str]] = []
 
         with SafetensorsFile(path) as sf:
+            sf.advise("sequential")  # ingest walks tensors in serialization order
             header_blob = self._read_header_blob(path)
-            for ti in sf.infos:
-                res.n_tensors += 1
-                raw = sf.tensor_bytes(ti.name)
-                thash = self.tensor_dedup.hash_tensor(raw)
-                dup = self.use_tensor_dedup and thash in self.tensor_locations
-                self.tensor_dedup.stats.observe(ti.nbytes, not dup)
-                if dup:
-                    # ② zero-payload reference into the global tensor pool
-                    writer.add_dedup(ti.name, ti.dtype_str, ti.shape, thash, ti.nbytes)
-                    res.n_dedup += 1
-                    continue
-                arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
-                base = base_tensors.get(ti.name)
-                if (self.use_bitx and base is not None and ti.dtype_str in _FLOAT_TAGS
-                        and base[0] == ti.dtype_str and base[1] == ti.shape):
-                    base_arr, base_hash = base[2](), base[3]
-                    writer.add_bitx(ti.name, ti.dtype_str, ti.shape,
-                                    base_arr.reshape(-1), arr.reshape(-1),
-                                    base_hash, thash)
-                    res.n_bitx += 1
-                elif ti.dtype_str in _FLOAT_TAGS:
-                    writer.add_zipnn(ti.name, ti.dtype_str, ti.shape, arr, thash)
-                    res.n_zipnn += 1
-                else:
-                    writer.add_raw(ti.name, ti.dtype_str, ti.shape, bytes(raw), thash)
-                    res.n_raw += 1
-                # first location wins: a base tensor's hash must keep pointing
-                # at its standalone (zipnn/raw) record, never at a later BitX
-                # record that references the same hash as ITS base (cycle)
-                self.tensor_locations.setdefault(thash, (key, len(writer.records) - 1))
+            self._encode_tensors(sf, writer, res, key, base_tensors, entries)
 
         writer.file_metadata.update({
             "repo_id": repo_id, "filename": filename, "file_hash": fhash,
@@ -192,6 +354,8 @@ class ZLLMStore:
         cpath = self._container_path(key)
         os.makedirs(os.path.dirname(cpath), exist_ok=True)
         stored = writer.write(cpath)
+        with self._cache_lock:
+            self._reader_cache.pop(cpath)  # container (re)written: drop stale mmap
         res.stored_bytes = stored
         res.ingest_seconds = time.perf_counter() - t0
 
@@ -200,12 +364,88 @@ class ZLLMStore:
         # register as a family base iff stored standalone (no base of its own)
         if base_id is None:
             self.families.register(repo_id, path)
-            self.base_paths.setdefault(repo_id, path)
-            self.base_paths[key] = path
-            self.base_key_of.setdefault(repo_id, key)
-            self.base_key_of[key] = key
+            self._register_base(repo_id, key, path, entries)
         self._account(res)
         return res
+
+    # ------------------------------------------------------------------
+    def _encode_tensors(self, sf: SafetensorsFile, writer: BitXWriter,
+                        res: IngestResult, key: str, base_tensors: Dict[str, Tuple],
+                        entries: List[Tuple[str, str, Tuple[int, ...], str]]) -> None:
+        """Hash → (serial) decide → encode → ordered merge, per tensor.
+
+        ``workers>1`` overlaps the hash and encode stages across the pool;
+        the decision loop and the merge stay serial and in tensor order, so
+        the emitted container is bit-identical to the serial path.
+        """
+        pool = self._executor()
+        infos = sf.infos
+        hash_one = self.tensor_dedup.hash_tensor
+        hash_futs = ([pool.submit(hash_one, sf.tensor_bytes(ti.name))
+                      if ti.nbytes >= _PARALLEL_MIN_BYTES else None for ti in infos]
+                     if pool is not None else None)
+
+        # Stage 2: serial decision loop (order-dependent: dedup lookups and
+        # tensor_locations registration must see earlier tensors of this file)
+        plan: List[Tuple[Any, str, str, Optional[str], Any]] = []
+        for i, ti in enumerate(infos):
+            res.n_tensors += 1
+            thash = (hash_futs[i].result() if hash_futs is not None and hash_futs[i] is not None
+                     else hash_one(sf.tensor_bytes(ti.name)))
+            entries.append((ti.name, ti.dtype_str, ti.shape, thash))
+            dup = self.use_tensor_dedup and thash in self.tensor_locations
+            self.tensor_dedup.stats.observe(ti.nbytes, not dup)
+            if dup:
+                # ② zero-payload reference into the global tensor pool
+                res.n_dedup += 1
+                plan.append((ti, thash, "dedup", None, None))
+            else:
+                base = base_tensors.get(ti.name)
+                if (self.use_bitx and base is not None and ti.dtype_str in _FLOAT_TAGS
+                        and base[0] == ti.dtype_str and base[1] == ti.shape):
+                    kind, base_hash, base_loader = "bitx", base[3], base[2]
+                    res.n_bitx += 1
+                elif ti.dtype_str in _FLOAT_TAGS:
+                    kind, base_hash, base_loader = "zipnn", None, None
+                    res.n_zipnn += 1
+                else:
+                    kind, base_hash, base_loader = "raw", None, None
+                    res.n_raw += 1
+                job = self._encode_job(writer.codec, kind, sf, ti, base_loader)
+                payload = (pool.submit(job)
+                           if pool is not None and ti.nbytes >= _PARALLEL_MIN_BYTES
+                           else job())
+                plan.append((ti, thash, kind, base_hash, payload))
+            # first location wins: a base tensor's hash must keep pointing
+            # at its standalone (zipnn/raw) record, never at a later BitX
+            # record that references the same hash as ITS base (cycle).
+            # Record index == tensor index (dedup entries are records too).
+            self.tensor_locations.setdefault(thash, (key, i))
+
+        # Stage 4: ordered merge — append strictly in tensor order
+        for ti, thash, kind, base_hash, payload in plan:
+            if kind == "dedup":
+                writer.add_dedup(ti.name, ti.dtype_str, ti.shape, thash, ti.nbytes)
+            else:
+                frames, raw = payload.result() if isinstance(payload, Future) else payload
+                writer.add_precomputed(ti.name, ti.dtype_str, ti.shape, kind,
+                                       base_hash, thash, frames, raw)
+
+    @staticmethod
+    def _encode_job(codec: BitXCodec, kind: str, sf: SafetensorsFile, ti,
+                    base_loader) -> Callable[[], Tuple[List[bytes], int]]:
+        """Closure encoding one tensor; safe to run on any worker thread
+        (codec contexts are thread-local, sf/base reads are mmap slices)."""
+        def encode() -> Tuple[List[bytes], int]:
+            raw = sf.tensor_bytes(ti.name)
+            if kind == "raw":
+                return [codec.encode_raw(bytes(raw))], len(raw)
+            arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
+            if kind == "bitx":
+                base_arr = base_loader()
+                return codec.encode_delta(base_arr.reshape(-1), arr.reshape(-1))
+            return codec.encode_planes(arr)
+        return encode
 
     # ------------------------------------------------------------------
     def _resolve_base(self, repo_id: str, path: str,
@@ -222,6 +462,46 @@ class ZLLMStore:
         if m is not None:
             return m[0], "bitdistance"
         return None, ""
+
+    # -- base-map cache -------------------------------------------------
+    def _register_base(self, repo_id: str, key: str, path: str,
+                       entries: List[Tuple[str, str, Tuple[int, ...], str]]) -> None:
+        """Bind a freshly-ingested standalone file as a family base and prime
+        its tensor map from the hashes just computed (zero extra hash passes).
+
+        The ``key`` binding always tracks the latest ingest of that key
+        (re-registration invalidates any cached map); the ``repo_id`` binding
+        keeps seed semantics — the repo's first standalone file wins.
+
+        Caveat (pre-existing, see ROADMAP open items): re-ingesting a new
+        file under an existing key overwrites its container, orphaning pool
+        references held by earlier dependants of the old version. Prefer new
+        keys for new base versions until containers are refcounted.
+        """
+        bm = _BaseTensorMap(path, entries)
+        self.base_map_stats["primed"] += 1
+        self._bind_base(key, path, key, bm)
+        if self.base_paths.setdefault(repo_id, path) == path:
+            self.base_key_of.setdefault(repo_id, key)
+            self._bind_base(repo_id, path, self.base_key_of[repo_id], bm)
+
+    def _bind_base(self, base_id: str, path: str, key: str, bm: _BaseTensorMap) -> None:
+        old = self._base_maps.pop(base_id, None)
+        if old is not None and old is not bm:
+            # maps may be shared between the repo_id and key bindings, so do
+            # not close the old one here — another binding may still use it
+            self.base_map_stats["invalidations"] += 1
+        self.base_paths[base_id] = path
+        self.base_key_of[base_id] = key
+        self._base_maps[base_id] = bm
+
+    def invalidate_base_map(self, base_id: Optional[str] = None) -> None:
+        """Drop cached base maps (all of them when ``base_id`` is None).
+        The next fine-tune ingest rebuilds from disk with one hash pass."""
+        ids = [base_id] if base_id is not None else list(self._base_maps)
+        for bid in ids:
+            if self._base_maps.pop(bid, None) is not None:
+                self.base_map_stats["invalidations"] += 1
 
     def _base_tensor_map(self, base_id: str) -> Dict[str, Tuple]:
         """name -> (dtype_str, shape, lazy loader, tensor hash) for the base."""
@@ -244,14 +524,26 @@ class ZLLMStore:
                     f.write(data)
             path = cpath
             self.base_paths[base_id] = path
-        out = {}
-        sf = SafetensorsFile(path)
-        for ti in sf.infos:
-            def loader(sf=sf, name=ti.name):
-                return sf.tensor(name)
-            thash = self.tensor_dedup.hash_tensor(sf.tensor_bytes(ti.name))
-            out[ti.name] = (ti.dtype_str, ti.shape, loader, thash)
-        return out
+        bm = self._base_maps.get(base_id)
+        if bm is not None and bm.path == path:
+            self.base_map_stats["hits"] += 1
+            return bm.tensors
+        if bm is not None:  # stale binding (base re-registered elsewhere)
+            self.base_map_stats["invalidations"] += 1
+        self.base_map_stats["misses"] += 1
+        bm = self._build_base_map(path)
+        self._base_maps[base_id] = bm
+        return bm.tensors
+
+    def _build_base_map(self, path: str) -> _BaseTensorMap:
+        """Cold path: one full hash pass over the base file (cache miss —
+        e.g. first use after ``load_index`` in a fresh process)."""
+        entries = []
+        with SafetensorsFile(path) as sf:
+            for ti in sf.infos:
+                entries.append((ti.name, ti.dtype_str, ti.shape,
+                                self.tensor_dedup.hash_tensor(sf.tensor_bytes(ti.name))))
+        return _BaseTensorMap(path, entries)
 
     @staticmethod
     def _read_header_blob(path: str) -> bytes:
@@ -290,31 +582,65 @@ class ZLLMStore:
                 f.write(data)
         return data
 
+    def _reader(self, cpath: str) -> BitXReader:
+        """LRU-cached mmap reader per container path."""
+        with self._cache_lock:
+            reader = self._reader_cache.get(cpath)
+            if reader is None:
+                reader = BitXReader.open(cpath)
+                self._reader_cache.put(cpath, reader)
+            return reader
+
     def _decode_container(self, cpath: str) -> bytes:
-        reader = BitXReader.open(cpath)
+        reader = self._reader(cpath)
         header_blob = zlib.decompress(
             base64.b64decode(reader.file_metadata["header_blob_z"]))
-        chunks = [header_blob]
-        for idx, r in enumerate(reader.records):
-            arr = reader.decode_tensor(idx, self._resolve_tensor_hash,
-                                       self._resolve_tensor_hash)
-            chunks.append(np.ascontiguousarray(arr).tobytes())
-        return b"".join(chunks)
+        resolver = self._resolve_tensor_hash
+
+        def decode(idx: int) -> bytes:
+            arr = reader.decode_tensor(idx, resolver, resolver)
+            return np.ascontiguousarray(arr).tobytes()
+
+        n = len(reader.records)
+        pool = self._executor()
+        n_big = sum(1 for r in reader.records if r.raw_size >= _PARALLEL_MIN_BYTES)
+        if pool is not None and n_big > 1:
+            # workers never re-enter the pool (dependency resolution decodes
+            # inline), so mapping from the ingest pool cannot deadlock
+            chunks = list(pool.map(decode, range(n)))
+        else:
+            chunks = [decode(i) for i in range(n)]
+        return b"".join([header_blob] + chunks)
 
     def _resolve_tensor_hash(self, thash: str, _depth: int = 0) -> np.ndarray:
-        """Fetch a tensor from the pool by content hash (dedup/bitx deps)."""
+        """Fetch a tensor from the pool by content hash (dedup/bitx deps),
+        through the decoded-tensor LRU."""
         if _depth > 4:
             raise RuntimeError(f"tensor resolution cycle at {thash[:12]}")
+        with self._cache_lock:
+            hit = self._tensor_cache.get(thash)
+        if hit is not None:
+            return hit
         key, idx = self.tensor_locations[thash]
-        rec = self.file_index[key]
-        reader = BitXReader.open(rec["path"])
+        reader = self._reader(self.file_index[key]["path"])
         resolver = lambda h: self._resolve_tensor_hash(h, _depth + 1)
-        return reader.decode_tensor(idx, resolver, resolver)
+        arr = reader.decode_tensor(idx, resolver, resolver)
+        with self._cache_lock:
+            self._tensor_cache.put(thash, arr, int(arr.nbytes))
+        return arr
+
+    @property
+    def retrieval_cache_stats(self) -> Dict[str, int]:
+        with self._cache_lock:
+            return {"tensor_hits": self._tensor_cache.hits,
+                    "tensor_misses": self._tensor_cache.misses,
+                    "reader_hits": self._reader_cache.hits,
+                    "reader_misses": self._reader_cache.misses}
 
     # ------------------------------------------------------------------
     # Index persistence: the store survives process restarts (ingest state,
-    # tensor pool, family registry) — a new process can keep ingesting or
-    # serve retrievals immediately.
+    # tensor pool, family registry, base maps) — a new process can keep
+    # ingesting or serve retrievals immediately.
     # ------------------------------------------------------------------
     def save_index(self) -> str:
         def sig_key(sig):
@@ -328,6 +654,16 @@ class ZLLMStore:
             "base_key_of": self.base_key_of,
             "metadata_base": self.metadata_base,
             "file_dedup_index": self.file_dedup.index,
+            "file_dedup_stats": self._stats_to_json(self.file_dedup.stats),
+            "tensor_dedup": {
+                "index": self.tensor_dedup.index,
+                "stats": self._stats_to_json(self.tensor_dedup.stats),
+            },
+            "base_maps": {
+                bid: {"path": bm.path,
+                      "entries": [[n, d, list(s), h] for n, d, s, h in bm.entries]}
+                for bid, bm in self._base_maps.items()
+            },
             "families": {sig_key(sig): v for sig, v in self.families.by_sig.items()},
             "n_file_dedup": self.stats.n_file_dedup,
         }
@@ -337,6 +673,20 @@ class ZLLMStore:
             json.dump(idx, f)
         os.replace(tmp, path)
         return path
+
+    @staticmethod
+    def _stats_to_json(stats) -> Dict:
+        return {"total_bytes": stats.total_bytes, "unique_bytes": stats.unique_bytes,
+                "n_units": stats.n_units, "n_unique": stats.n_unique,
+                "unit_sizes": list(stats.unit_sizes)}
+
+    @staticmethod
+    def _stats_from_json(stats, d: Dict) -> None:
+        stats.total_bytes = int(d.get("total_bytes", 0))
+        stats.unique_bytes = int(d.get("unique_bytes", 0))
+        stats.n_units = int(d.get("n_units", 0))
+        stats.n_unique = int(d.get("n_unique", 0))
+        stats.unit_sizes = [int(x) for x in d.get("unit_sizes", [])]
 
     def load_index(self) -> bool:
         path = os.path.join(self.root, "index.json")
@@ -352,6 +702,16 @@ class ZLLMStore:
         self.base_key_of = idx["base_key_of"]
         self.metadata_base = idx["metadata_base"]
         self.file_dedup.index = idx["file_dedup_index"]
+        if "file_dedup_stats" in idx:
+            self._stats_from_json(self.file_dedup.stats, idx["file_dedup_stats"])
+        td = idx.get("tensor_dedup")
+        if td:  # regression fix: dedup index + stats used to be dropped here
+            self.tensor_dedup.index = td["index"]
+            self._stats_from_json(self.tensor_dedup.stats, td["stats"])
+        self._base_maps = {}
+        for bid, spec in idx.get("base_maps", {}).items():
+            entries = [(n, d, tuple(s), h) for n, d, s, h in spec["entries"]]
+            self._base_maps[bid] = _BaseTensorMap(spec["path"], entries)
         def sig_unkey(k):
             return tuple((d, tuple(sh)) for d, sh in json.loads(k))
         self.families.by_sig = {sig_unkey(k): [tuple(x) for x in v]
@@ -371,5 +731,8 @@ class ZLLMStore:
                 "reduction_ratio": round(self.tensor_dedup.stats.reduction_ratio, 4),
             },
             "bitdistance_comparisons": self.families.comparisons,
+            "base_map_cache": dict(self.base_map_stats),
+            "retrieval_caches": self.retrieval_cache_stats,
+            "workers": self.workers,
             "ingest_throughput_MBps": round(self.stats.ingest_throughput_mbps, 1),
         }

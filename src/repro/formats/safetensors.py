@@ -228,6 +228,20 @@ class SafetensorsFile:
             self._file.close()
 
     # -- access -----------------------------------------------------------
+    _ADVICE = {"sequential": "MADV_SEQUENTIAL", "random": "MADV_RANDOM",
+               "willneed": "MADV_WILLNEED"}
+
+    def advise(self, mode: str = "sequential") -> None:
+        """Hint the kernel about the upcoming access pattern (madvise).
+
+        The ingest engine walks tensors in serialization order
+        ("sequential"); parallel workers resolving base tensors jump around
+        ("random"). No-op on platforms without mmap.madvise.
+        """
+        flag = getattr(mmap, self._ADVICE[mode], None)
+        if flag is not None and hasattr(self._mmap, "madvise"):
+            self._mmap.madvise(flag)
+
     def names(self) -> List[str]:
         return [ti.name for ti in self.infos]
 

@@ -58,8 +58,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
 
     def body(kj, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kj * block_kv, block_kv), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(kj * block_kv, block_kv), slice(None)))
+        # leading dim via a length-1 dslice: jax 0.4.3x's interpret-mode
+        # discharge rule rejects bare int indices inside pl.load
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(kj * block_kv, block_kv),
+                            slice(None)))[0]
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(kj * block_kv, block_kv),
+                            slice(None)))[0]
         s = jax.lax.dot_general(
             q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (bq, bkv)

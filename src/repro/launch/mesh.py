@@ -23,7 +23,12 @@ __all__ = ["make_production_mesh", "make_local_mesh", "HW"]
 
 
 def _mk(shape, axes):
-    from jax.sharding import AxisType
+    # jax >= 0.4.35 exposes AxisType; older releases (this container ships
+    # 0.4.x without it) accept plain make_mesh with default axis types
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 

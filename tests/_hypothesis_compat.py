@@ -1,0 +1,89 @@
+"""`hypothesis` when installed, else a tiny deterministic fallback.
+
+This container ships without the `hypothesis` wheel; rather than skip the
+property tests entirely, the fallback drives the same test bodies with a
+fixed-seed sampler (a handful of examples per test — far weaker than real
+hypothesis shrinking/coverage, but it keeps the lossless-roundtrip
+properties exercised in CI). Only the strategy subset this repo uses is
+implemented: ``integers``, ``floats`` (width=32, NaN/Inf), ``lists``.
+
+Usage in tests (drop-in for the hypothesis import):
+
+    from _hypothesis_compat import given, settings, strategies as stt
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - depends on container contents
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+    import struct
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(width=64, allow_nan=False, allow_infinity=False, **_kw):
+            specials = [0.0, -0.0]
+            if allow_nan:
+                specials.append(float("nan"))
+            if allow_infinity:
+                specials += [float("inf"), float("-inf")]
+
+            def sample(r):
+                if specials and r.random() < 0.15:
+                    return r.choice(specials)
+                # random bit pattern: covers subnormals/odd exponents too
+                if width == 32:
+                    return struct.unpack("<f", r.getrandbits(32).to_bytes(4, "little"))[0]
+                return struct.unpack("<d", r.getrandbits(64).to_bytes(8, "little"))[0]
+
+            def safe(r):
+                v = sample(r)
+                if not allow_nan and v != v:
+                    return 0.0
+                if not allow_infinity and v in (float("inf"), float("-inf")):
+                    return 0.0
+                return v
+            return _Strategy(safe)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(r):
+                n = r.randint(min_size, max_size)
+                return [elements.sample(r) for _ in range(n)]
+            return _Strategy(sample)
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strats, **kw_strats):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not mistake the wrapped test's
+            # drawn parameters for fixtures (so no functools.wraps, which
+            # exposes the original signature via __wrapped__)
+            def wrapper():
+                rng = random.Random(0xC0FFEE)
+                for _ in range(_N_EXAMPLES):
+                    drawn = [s.sample(rng) for s in strats]
+                    drawn_kw = {k: s.sample(rng) for k, s in kw_strats.items()}
+                    fn(*drawn, **drawn_kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as stt
+from _hypothesis_compat import given, settings, strategies as stt
 
 from repro.kernels import bitx_xor, byte_planes, hamming, ops, ref
 

@@ -1,0 +1,354 @@
+"""Parallel ingest/retrieval engine tests: bit-identical containers across
+worker counts, single-hash-pass base maps, cache invalidation, persistence
+of tensor-dedup state, and fresh-process retrieval."""
+
+import hashlib
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.bitx import BitXCodec, BitXReader, BitXWriter
+from repro.core.dedup import FileDedup, sha256_file
+from repro.core import pipeline as pipeline_mod
+from repro.core.pipeline import ZLLMStore
+from repro.formats import safetensors as st
+
+# src/ directory (repro may be a namespace package, so derive from a module)
+SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(pipeline_mod.__file__))))
+
+
+def _write_model(path, rng, n_tensors=6, n=2048, scale=0.02):
+    tensors = {f"model.t{i}.weight": (rng.randn(n) * scale).astype(np.float32)
+               for i in range(n_tensors)}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(tensors, path)
+    return tensors
+
+
+def _write_finetune(path, base_tensors, rng, sigma=1e-3):
+    ft = {k: (v + rng.randn(*v.shape).astype(np.float32) * sigma).astype(np.float32)
+          for k, v in base_tensors.items()}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(ft, path)
+    return ft
+
+
+def _container_bytes(store_root):
+    out = {}
+    croot = os.path.join(store_root, "containers")
+    for dirpath, _, files in os.walk(croot):
+        for fn in files:
+            p = os.path.join(dirpath, fn)
+            out[os.path.relpath(p, croot)] = open(p, "rb").read()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: parallel == serial, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_parallel_ingest_bit_identical_to_serial(tmp_path, corpus_dir):
+    """Same corpus through workers∈{1,4} ⇒ byte-identical .bitx containers
+    (the ordered-merge determinism rule), and bit-exact retrieval."""
+    root, manifest = corpus_dir
+    stores = {}
+    for w in (1, 4):
+        s = ZLLMStore(str(tmp_path / f"store-w{w}"), workers=w)
+        for rid, kind in manifest:
+            s.ingest_repo(os.path.join(root, rid), rid)
+        stores[w] = s
+
+    c1 = _container_bytes(str(tmp_path / "store-w1"))
+    c4 = _container_bytes(str(tmp_path / "store-w4"))
+    assert c1.keys() == c4.keys() and len(c1) > 0
+    for name in c1:
+        assert c1[name] == c4[name], f"container diverged: {name}"
+
+    # parallel retrieval reconstructs bit-exactly (verify=True checks sha256)
+    for rid, kind in manifest:
+        orig = open(os.path.join(root, rid, "model.safetensors"), "rb").read()
+        assert stores[4].retrieve_file(rid, "model.safetensors") == orig
+    for s in stores.values():
+        s.close()
+
+
+def test_parallel_stats_match_serial(tmp_path, corpus_dir):
+    root, manifest = corpus_dir
+    summaries = {}
+    for w in (1, 4):
+        s = ZLLMStore(str(tmp_path / f"stat-w{w}"), workers=w)
+        for rid, kind in manifest:
+            s.ingest_repo(os.path.join(root, rid), rid)
+        summaries[w] = s.summary()
+        s.close()
+    for key in ("raw_bytes", "stored_bytes", "reduction_ratio", "file_dedup_hits",
+                "tensor_dedup"):
+        assert summaries[1][key] == summaries[4][key], key
+
+
+# ---------------------------------------------------------------------------
+# Base-map cache: one hash pass per base, ever
+# ---------------------------------------------------------------------------
+
+def test_base_hashed_exactly_once_for_k_finetunes(tmp_path):
+    rng = np.random.RandomState(0)
+    n_tensors, K = 6, 4
+    base_dir = str(tmp_path / "hub" / "org" / "base")
+    base = _write_model(os.path.join(base_dir, "model.safetensors"), rng, n_tensors)
+
+    store = ZLLMStore(str(tmp_path / "store"), workers=2)
+    store.ingest_repo(base_dir, "org/base")
+    assert store.tensor_dedup.hash_calls == n_tensors  # the ONE base hash pass
+
+    for k in range(K):
+        ft_dir = str(tmp_path / "hub" / f"u{k}" / "ft")
+        _write_finetune(os.path.join(ft_dir, "model.safetensors"), base, rng)
+        store.ingest_file(os.path.join(ft_dir, "model.safetensors"),
+                          f"u{k}/ft", declared_base="org/base")
+
+    # K fine-tunes hashed their own tensors only — the base was never re-read
+    assert store.tensor_dedup.hash_calls == n_tensors * (1 + K)
+    assert store.base_map_stats == {"hits": K, "misses": 0, "primed": 1,
+                                    "invalidations": 0}
+    assert all(r.n_bitx > 0 for r in store.results[1:])
+    store.close()
+
+
+def test_base_map_invalidated_on_reregistration(tmp_path):
+    """Re-ingesting a new standalone file under an existing key must drop the
+    cached base map; later fine-tunes delta against the NEW base bytes."""
+    rng = np.random.RandomState(1)
+    key_id = "orgX/model.safetensors"
+    v1_dir = str(tmp_path / "v1" / "orgX")
+    v1 = _write_model(os.path.join(v1_dir, "model.safetensors"), rng)
+    store = ZLLMStore(str(tmp_path / "store"))
+    store.ingest_repo(v1_dir, "orgX")
+
+    ft1_path = str(tmp_path / "ft1" / "model.safetensors")
+    _write_finetune(ft1_path, v1, rng)
+    store.ingest_file(ft1_path, "u1/ft1", declared_base=key_id)
+    assert store.base_map_stats["hits"] == 1 and store.base_map_stats["misses"] == 0
+
+    # v2: unrelated weights (different scale => large bit distance, so the
+    # family matcher keeps it standalone), same shapes, SAME repo/filename key
+    v2_dir = str(tmp_path / "v2" / "orgX")
+    v2 = _write_model(os.path.join(v2_dir, "model.safetensors"),
+                      np.random.RandomState(99), scale=1.0)
+    store.ingest_file(os.path.join(v2_dir, "model.safetensors"), "orgX")
+    assert store.base_map_stats["invalidations"] >= 1
+
+    ft2_path = str(tmp_path / "ft2" / "model.safetensors")
+    ft2 = _write_finetune(ft2_path, v2, rng)
+    res = store.ingest_file(ft2_path, "u2/ft2", declared_base=key_id)
+    assert res.n_bitx > 0
+    # ft2's deltas must reference v2 tensors (small deltas => strong reduction)
+    assert store.retrieve_file("u2/ft2", "model.safetensors") == open(ft2_path, "rb").read()
+    store.close()
+
+
+def test_explicit_base_map_invalidation_rebuilds_with_one_pass(tmp_path):
+    rng = np.random.RandomState(2)
+    base_dir = str(tmp_path / "hub" / "org" / "b")
+    base = _write_model(os.path.join(base_dir, "model.safetensors"), rng, n_tensors=5)
+    store = ZLLMStore(str(tmp_path / "store"))
+    store.ingest_repo(base_dir, "org/b")
+    calls_after_base = store.tensor_dedup.hash_calls
+
+    store.invalidate_base_map()
+    assert store.base_map_stats["invalidations"] >= 1
+    ft_dir = str(tmp_path / "hub" / "u" / "ft")
+    _write_finetune(os.path.join(ft_dir, "model.safetensors"), base, rng)
+    store.ingest_file(os.path.join(ft_dir, "model.safetensors"), "u/ft",
+                      declared_base="org/b")
+    # exactly ONE rebuild pass over the base + the fine-tune's own tensors
+    assert store.tensor_dedup.hash_calls == calls_after_base + 5 + 5
+    assert store.base_map_stats["misses"] == 1
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# Index persistence (regression: tensor_dedup state used to be dropped)
+# ---------------------------------------------------------------------------
+
+def test_index_roundtrip_preserves_tensor_dedup_state(tmp_path):
+    rng = np.random.RandomState(3)
+    a_dir = str(tmp_path / "hub" / "org" / "a")
+    a = _write_model(os.path.join(a_dir, "model.safetensors"), rng, n_tensors=5)
+    s1 = ZLLMStore(str(tmp_path / "store"))
+    s1.ingest_repo(a_dir, "org/a")
+    s1.save_index()
+    n_unique_before = s1.tensor_dedup.stats.n_unique
+    index_before = dict(s1.tensor_dedup.index)
+    assert n_unique_before == 5
+    s1.close()
+
+    s2 = ZLLMStore(str(tmp_path / "store"))
+    assert s2.load_index()
+    # regression: the dedup index + stats survive the round-trip
+    assert s2.tensor_dedup.index == index_before
+    assert s2.tensor_dedup.stats.n_unique == n_unique_before
+
+    # repo with all of a's tensors plus one new one: dup detection + stats
+    # continue across the restart instead of re-storing duplicates
+    b = dict(a)
+    b["model.extra.weight"] = (np.arange(64) / 64).astype(np.float32)
+    b_dir = str(tmp_path / "hub" / "org" / "b")
+    os.makedirs(b_dir, exist_ok=True)
+    st.save_file(b, os.path.join(b_dir, "model.safetensors"))
+    res = s2.ingest_file(os.path.join(b_dir, "model.safetensors"), "org/b")
+    assert res.n_dedup == 5 and res.n_tensors == 6
+    assert s2.tensor_dedup.stats.n_unique == n_unique_before + 1
+    assert s2.retrieve_file("org/b", "model.safetensors") == \
+        open(os.path.join(b_dir, "model.safetensors"), "rb").read()
+    s2.close()
+
+
+def test_index_roundtrip_preserves_primed_base_maps(tmp_path):
+    """After load_index, fine-tune ingest must NOT re-hash the base (the
+    primed map is persisted with the index)."""
+    rng = np.random.RandomState(4)
+    base_dir = str(tmp_path / "hub" / "org" / "b")
+    base = _write_model(os.path.join(base_dir, "model.safetensors"), rng, n_tensors=5)
+    s1 = ZLLMStore(str(tmp_path / "store"))
+    s1.ingest_repo(base_dir, "org/b")
+    s1.save_index()
+    s1.close()
+
+    s2 = ZLLMStore(str(tmp_path / "store"))
+    assert s2.load_index()
+    ft_dir = str(tmp_path / "hub" / "u" / "ft")
+    _write_finetune(os.path.join(ft_dir, "model.safetensors"), base, rng)
+    res = s2.ingest_file(os.path.join(ft_dir, "model.safetensors"), "u/ft",
+                         declared_base="org/b")
+    assert res.n_bitx > 0
+    assert s2.tensor_dedup.hash_calls == 5        # the fine-tune only
+    assert s2.base_map_stats["hits"] == 1 and s2.base_map_stats["misses"] == 0
+    s2.close()
+
+
+def test_retrieval_after_load_index_in_fresh_process(tmp_path, corpus_dir):
+    root, manifest = corpus_dir
+    store_root = str(tmp_path / "store")
+    s1 = ZLLMStore(store_root, workers=2)
+    for rid, kind in manifest[:4]:
+        s1.ingest_repo(os.path.join(root, rid), rid)
+    s1.save_index()
+    s1.close()
+
+    rid = manifest[1][0]  # a fine-tune (bitx records exercise dependency resolution)
+    orig = open(os.path.join(root, rid, "model.safetensors"), "rb").read()
+    code = (
+        "import sys, hashlib\n"
+        f"sys.path.insert(0, {SRC_DIR!r})\n"
+        "from repro.core.pipeline import ZLLMStore\n"
+        f"s = ZLLMStore({store_root!r}, workers=2)\n"
+        "assert s.load_index()\n"
+        f"data = s.retrieve_file({rid!r}, 'model.safetensors')\n"
+        "print(hashlib.sha256(data).hexdigest())\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == hashlib.sha256(orig).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Satellites: streaming FileDedup, codec threads arg, mmap reader
+# ---------------------------------------------------------------------------
+
+def test_filededup_streams_in_chunks(tmp_path):
+    rng = np.random.RandomState(5)
+    p = str(tmp_path / "big.bin")
+    blob = rng.bytes(3 * 65536 + 17)  # several chunks + ragged tail
+    open(p, "wb").write(blob)
+    digest, size = sha256_file(p, chunk_bytes=65536)
+    assert size == len(blob)
+    assert digest == hashlib.sha256(blob).hexdigest()
+    fd = FileDedup()
+    d1, new1 = fd.scan_file(p, "a")
+    d2, new2 = fd.scan_file(p, "b")
+    assert d1 == d2 == digest and new1 and not new2
+
+
+def test_bitx_codec_threads_arg_not_dropped():
+    """Regression: BitXCodec used to accept and silently drop ``threads``."""
+    codec = BitXCodec(level=3, threads=2)
+    assert codec.threads == 2
+    rng = np.random.RandomState(6)
+    x = rng.randn(4096).astype(np.float32)
+    frames, raw = codec.encode_planes(x)
+    out = codec.decode_planes(frames, np.dtype("<f4"), (4096,))
+    np.testing.assert_array_equal(out, x)
+
+
+def test_bitx_codec_shared_across_threads_is_deterministic():
+    """One codec, many threads (thread-local contexts): frames must equal
+    the single-thread encoding bit for bit."""
+    from concurrent.futures import ThreadPoolExecutor
+    rng = np.random.RandomState(7)
+    tensors = [rng.randn(8192).astype(np.float32) for _ in range(8)]
+    codec = BitXCodec(level=3)
+    serial = [codec.encode_planes(t) for t in tensors]
+    with ThreadPoolExecutor(4) as ex:
+        parallel = list(ex.map(codec.encode_planes, tensors))
+    for (fs, rs), (fp, rp) in zip(serial, parallel):
+        assert rs == rp and fs == fp
+
+
+def test_bitx_reader_mmap_matches_bytes(tmp_path):
+    rng = np.random.RandomState(8)
+    base = rng.randn(500).astype(np.float32)
+    ft = base + rng.randn(500).astype(np.float32) * 1e-4
+    w = BitXWriter(file_metadata={"k": "v"})
+    w.add_bitx("t0", "F32", (500,), base, ft, "bh", "sh")
+    w.add_zipnn("t1", "F32", (500,), rng.randn(500).astype(np.float32), "sh2")
+    path = str(tmp_path / "c.bitx")
+    w.write(path)
+
+    r_mm = BitXReader.open(path, use_mmap=True)
+    r_by = BitXReader.open(path, use_mmap=False)
+    assert r_mm.file_metadata == r_by.file_metadata
+    assert [rec.to_json() for rec in r_mm.records] == [rec.to_json() for rec in r_by.records]
+    for idx in range(len(r_mm.records)):
+        mm_frames = [bytes(f) for f in r_mm.frames_for(idx)]
+        by_frames = [bytes(f) for f in r_by.frames_for(idx)]
+        assert mm_frames == by_frames
+    out = r_mm.decode_tensor(0, lambda h: base, None)
+    np.testing.assert_array_equal(out, ft.view(np.uint32))
+    r_mm.close()  # frames may still be referenced; close must not raise
+    r_by.close()
+
+
+def test_reingest_same_key_same_content_is_idempotent(tmp_path):
+    """Regression (found by probing): re-ingesting identical content under
+    its own key must not replace the container record with a self-referencing
+    file-dedup record (which sent retrieval into infinite recursion)."""
+    rng = np.random.RandomState(9)
+    d = str(tmp_path / "hub" / "org" / "m")
+    _write_model(os.path.join(d, "model.safetensors"), rng)
+    orig = open(os.path.join(d, "model.safetensors"), "rb").read()
+    s = ZLLMStore(str(tmp_path / "store"))
+    r1 = s.ingest_repo(d, "org/m")
+    r2 = s.ingest_repo(d, "org/m")
+    assert not r1[0].file_dedup_hit and r2[0].file_dedup_hit
+    assert s.file_index["org/m/model.safetensors"]["kind"] == "container"
+    assert s.retrieve_file("org/m", "model.safetensors") == orig
+    s.close()
+
+
+def test_retrieval_caches_cut_container_reads(tmp_path, corpus_dir):
+    root, manifest = corpus_dir
+    s = ZLLMStore(str(tmp_path / "store"), workers=2)
+    for rid, kind in manifest:
+        s.ingest_repo(os.path.join(root, rid), rid)
+    for rid, kind in manifest:
+        s.retrieve_file(rid, "model.safetensors", verify=False)
+    stats = s.retrieval_cache_stats
+    # dependency resolution must hit the tensor LRU (bases resolved once,
+    # reused across fine-tunes) and the reader LRU (no reopen per tensor)
+    assert stats["tensor_hits"] > 0
+    assert stats["reader_hits"] > stats["reader_misses"]
+    s.close()
