@@ -1,0 +1,90 @@
+"""CI bench-artifact regression gate.
+
+Compares a fresh ``bench_throughput`` JSON against the committed baseline
+(``experiments/bench/throughput.json``) and fails (exit 1) if any ingest or
+retrieve MB/s figure dropped by more than ``--max-drop`` (default 25%).
+Non-numeric entries ("line-rate") and keys present in only one file are
+skipped — the gate tolerates sweeps run with different worker counts, but a
+shared key that regressed always fails.
+
+The committed baseline is recorded on a slow 2-core reference box, so
+GitHub-hosted runners clear it with headroom: the gate is a tripwire for
+code-path regressions (an accidental O(n^2) pass, a dropped cache, a
+serialization of the parallel engine), not a precision benchmark. If the
+baseline is ever regenerated on faster hardware, expect shared-runner
+variance to need a looser --max-drop.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline /tmp/bench-baseline.json \
+        --fresh experiments/bench/throughput.json [--max-drop 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps")
+
+
+def _flatten(d: Dict, prefix: str = "") -> Dict:
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, key + "."))
+        else:
+            out[key] = v
+    return out
+
+
+def compare(baseline: Dict, fresh: Dict,
+            max_drop: float) -> Tuple[List[Tuple], List[str]]:
+    """Returns (rows, failing keys); a row is (key, base, fresh, drop, status)."""
+    b, f = _flatten(baseline), _flatten(fresh)
+    rows, failures = [], []
+    for key in sorted(b):
+        if not key.endswith(GATED_SUFFIXES):
+            continue
+        bv, fv = b[key], f.get(key)
+        if not isinstance(bv, (int, float)) or not isinstance(fv, (int, float)):
+            continue
+        drop = 1.0 - fv / bv if bv else 0.0
+        failed = drop > max_drop
+        rows.append((key, bv, fv, drop, "FAIL" if failed else "ok"))
+        if failed:
+            failures.append(key)
+    return rows, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True, help="this run's bench JSON")
+    ap.add_argument("--max-drop", type=float, default=0.25,
+                    help="maximum tolerated fractional throughput drop")
+    args = ap.parse_args()
+
+    baseline = json.load(open(args.baseline))
+    fresh = json.load(open(args.fresh))
+    rows, failures = compare(baseline, fresh, args.max_drop)
+
+    if not rows:
+        print("check_regression: no comparable throughput keys found", file=sys.stderr)
+        return 1
+    width = max(len(k) for k, *_ in rows)
+    print(f"{'key':<{width}}  {'baseline':>10}  {'fresh':>10}  {'drop':>7}  status")
+    for key, bv, fv, drop, status in rows:
+        print(f"{key:<{width}}  {bv:>10.1f}  {fv:>10.1f}  {drop:>6.1%}  {status}")
+    if failures:
+        print(f"\nREGRESSION: {len(failures)} key(s) dropped more than "
+              f"{args.max_drop:.0%}: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} throughput keys within {args.max_drop:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -357,6 +357,17 @@ class BitXReader:
             self._file.close()
             self._file = None
 
+    @property
+    def payload_size(self) -> int:
+        """Actual payload bytes behind the header (mmap/bytes length)."""
+        return len(self._payload)
+
+    @property
+    def expected_payload_size(self) -> int:
+        """Payload bytes the header's plane_sizes promise. A container whose
+        actual payload is shorter was truncated — fsck flags it corrupt."""
+        return sum(s for r in self.records for s in r.plane_sizes)
+
     def frames_for(self, idx: int) -> List[memoryview]:
         return [self._payload[b:e] for b, e in self._offsets[idx]]
 

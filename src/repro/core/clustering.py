@@ -50,6 +50,19 @@ class FamilyRegistry:
             sig = shape_signature(sf.infos)
         self.by_sig.setdefault(sig, []).append((base_id, path))
 
+    def unregister(self, base_id: str) -> int:
+        """Remove every registration for ``base_id`` (repo deletion). Returns
+        the number of entries dropped; empty signature buckets are pruned."""
+        dropped = 0
+        for sig in list(self.by_sig):
+            kept = [(bid, p) for bid, p in self.by_sig[sig] if bid != base_id]
+            dropped += len(self.by_sig[sig]) - len(kept)
+            if kept:
+                self.by_sig[sig] = kept
+            else:
+                del self.by_sig[sig]
+        return dropped
+
     def candidates(self, path: str) -> List[Tuple[str, str]]:
         with SafetensorsFile(path) as sf:
             sig = shape_signature(sf.infos)

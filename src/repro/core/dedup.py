@@ -95,6 +95,12 @@ class FileDedup:
         self.stats.observe(size, is_new)
         return digest, is_new
 
+    def forget(self, digest: str) -> None:
+        """Drop a hash whose last copy was deleted, so a future identical
+        upload is stored fresh instead of dedup'd against a dead entry.
+        Cumulative ingest stats are left untouched."""
+        self.index.pop(digest, None)
+
 
 class TensorDedup:
     """Per-tensor content hashing over the safetensors mmap (zero-copy).
@@ -115,6 +121,11 @@ class TensorDedup:
         with self._counter_lock:
             self.hash_calls += 1
         return sha256_bytes(raw)
+
+    def forget(self, digest: str) -> None:
+        """Drop a tensor hash whose backing container was garbage-collected
+        (cumulative stats stay; the pipeline also scrubs tensor_locations)."""
+        self.index.pop(digest, None)
 
     def scan_file(self, path: str, location: Optional[str] = None):
         """Returns [(TensorInfo, hash, is_new)] in serialization order."""

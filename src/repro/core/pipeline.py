@@ -46,6 +46,36 @@ thread pool; sha256, zstd/zlib and numpy's XOR all release the GIL):
   ``_decode_container`` decodes records across the pool (order restored at
   the join).
 
+Container lifecycle & GC (``repro.core.lifecycle``):
+
+* **Generations.** Containers are immutable versions ``key@gN``. Gen 0
+  keeps the legacy ``containers/<key>.bitx`` path (PR-1 stores load
+  unchanged); re-registering a key writes ``<key>@gN.bitx`` copy-on-write
+  and never touches the superseded bytes. ``tensor_locations`` pins
+  ``(key, gen, record idx)`` per tensor hash, so dedup records and BitX
+  base references held by earlier dependants keep resolving against the
+  generation they were ingested against — re-registering a base can no
+  longer orphan its fine-tunes. ``file_dedup`` and near-dup index entries
+  pin their target generation the same way.
+* **Refcounts.** Every ingest records dependency edges (this container
+  version → the versions its dedup/bitx records resolve into) in a
+  ``ContainerLifecycle`` graph. ``delete_file``/``delete_repo`` drop index
+  entries (anchors); ``gc()`` reclaims every version unreachable from the
+  remaining anchors — a cascading refcount sweep — deletes the files,
+  scrubs ``tensor_locations`` hashes that pointed into them, and reports
+  live/reclaimed bytes (also surfaced in ``StoreStats`` / ``summary()``).
+* **Near-identical re-ingest.** A file whose tensors all hash-match one
+  existing container version in order (same tensors, different header
+  metadata) is stored as a ``near_dup`` index entry — just the header blob
+  plus a pinned reference — instead of a redundant container.
+* **fsck.** ``fsck(repair=False)`` walks every live version and index
+  entry: structural checks (magic/truncation), every tensor-dedup target
+  and base reference must resolve to a live container frame (sha256
+  spot-checks decode a sample per container), and every index ref must
+  point at a live generation. ``repair=True`` re-pins dangling hashes to a
+  surviving copy when one exists and quarantines corrupt containers
+  (moved aside, graph node kept so dependants stay repairable).
+
 This module is also the storage backend of the training framework: the
 checkpoint manager (`repro.checkpoint`) ingests every checkpoint through a
 ``ZLLMStore``, so checkpoint chains dedup + delta-compress against their run's
@@ -71,10 +101,13 @@ import numpy as np
 from repro.core.bitx import BitXCodec, BitXReader, BitXWriter
 from repro.core.clustering import FamilyRegistry
 from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes
+from repro.core.lifecycle import ContainerLifecycle, FsckReport, make_vid
 from repro.formats.modelcard import parse_repo_metadata
 from repro.formats.safetensors import STR_TO_DTYPE, SafetensorsFile
 
 __all__ = ["ZLLMStore", "IngestResult", "StoreStats"]
+
+INDEX_FORMAT = 2  # v1 = PR-1 (no generations); v2 adds lifecycle + pinned gens
 
 _FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
 
@@ -92,6 +125,7 @@ class IngestResult:
     raw_bytes: int
     stored_bytes: int
     file_dedup_hit: bool = False
+    near_dup_hit: bool = False       # all tensors matched one container version
     base_id: Optional[str] = None
     base_source: str = ""            # "metadata" | "bitdistance" | ""
     n_tensors: int = 0
@@ -112,7 +146,13 @@ class StoreStats:
     stored_bytes: int = 0
     n_files: int = 0
     n_file_dedup: int = 0
+    n_near_dup: int = 0
     ingest_seconds: float = 0.0
+    # lifecycle accounting: bytes currently on disk in live container
+    # versions vs bytes reclaimed by gc() over the store's lifetime
+    live_bytes: int = 0
+    reclaimed_bytes: int = 0
+    n_deleted: int = 0
 
     @property
     def reduction_ratio(self) -> float:
@@ -245,7 +285,14 @@ class ZLLMStore:
         # indexes
         self.file_index: Dict[str, Dict] = {}        # "repo/file" -> record
         self.file_hash_to_key: Dict[str, str] = {}   # file sha256 -> first "repo/file"
-        self.tensor_locations: Dict[str, Tuple[str, int]] = {}  # tensor hash -> (key, record idx)
+        # derived reverse map (rebuilt on load, never persisted): file sha256
+        # -> every key serving those bytes, for O(1) alias repointing when a
+        # key is deleted or re-registered
+        self._keys_by_file_hash: Dict[str, set] = {}
+        # tensor hash -> (key, generation, record idx): the PINNED container
+        # version holding this tensor's payload (survives re-registration)
+        self.tensor_locations: Dict[str, Tuple[str, int, int]] = {}
+        self.lifecycle = ContainerLifecycle()
         self.base_paths: Dict[str, str] = {}         # base_id -> source path (for alignment)
         self.base_key_of: Dict[str, str] = {}        # base_id -> "repo/file" container key
         self.metadata_base: Dict[str, str] = {}      # repo_id -> declared base id
@@ -317,13 +364,12 @@ class ZLLMStore:
 
         # ① FileDedup
         fhash, is_new_file = self.file_dedup.scan_file(path, key)
-        if not is_new_file:
+        ref = self.file_hash_to_key.get(fhash)
+        if not is_new_file and ref is not None and ref in self.file_index:
             res = IngestResult(repo_id, filename, raw_size, 0, file_dedup_hit=True,
                                ingest_seconds=time.perf_counter() - t0)
-            ref = self.file_hash_to_key[fhash]
             if ref != key:
-                self.file_index[key] = {"kind": "file_dedup", "ref": ref,
-                                        "file_hash": fhash, "raw_size": raw_size}
+                self._set_index_entry(key, self._pinned_ref(ref, fhash, raw_size))
             # ref == key: identical content re-ingested under its own key —
             # keep the existing container record (a self-referencing dedup
             # record would send retrieval into infinite recursion)
@@ -332,35 +378,48 @@ class ZLLMStore:
             return res
         self.file_hash_to_key[fhash] = key
 
-        # ③a/③b family resolution (before encoding, so BitX knows its base)
-        base_id, base_source = self._resolve_base(repo_id, path, declared_base)
-        base_tensors = self._base_tensor_map(base_id) if base_id else {}
-
-        writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
-        res = IngestResult(repo_id, filename, raw_size, 0, base_id=base_id,
-                           base_source=base_source)
+        res = IngestResult(repo_id, filename, raw_size, 0)
         entries: List[Tuple[str, str, Tuple[int, ...], str]] = []
 
         with SafetensorsFile(path) as sf:
             sf.advise("sequential")  # ingest walks tensors in serialization order
             header_blob = self._read_header_blob(path)
-            self._encode_tensors(sf, writer, res, key, base_tensors, entries)
+            get_hash = self._hash_stage(sf)
+            # near-identical re-ingest (same tensors, different header
+            # metadata): store the header + a pinned reference, no container.
+            # The probe awaits only the first hash unless a candidate matches,
+            # so the hash/encode overlap of the parallel engine is preserved.
+            near = self._near_dup_probe(sf, get_hash)
+            if near is not None:
+                return self._ingest_near_dup(res, sf, key, fhash, raw_size,
+                                             header_blob, near, t0)
+            # ③a/③b family resolution (before encoding, so BitX knows its base)
+            base_id, base_source = self._resolve_base(repo_id, path, declared_base)
+            res.base_id, res.base_source = base_id, base_source
+            base_tensors = self._base_tensor_map(base_id) if base_id else {}
+            gen = self.lifecycle.next_generation(key)
+            writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
+            self._encode_tensors(sf, writer, res, key, gen, base_tensors,
+                                 entries, get_hash)
 
         writer.file_metadata.update({
             "repo_id": repo_id, "filename": filename, "file_hash": fhash,
             "base_id": base_id or "", "raw_size": raw_size,
             "header_blob_z": base64.b64encode(zlib.compress(header_blob)).decode(),
         })
-        cpath = self._container_path(key)
+        cpath = self._container_path(key, gen)
         os.makedirs(os.path.dirname(cpath), exist_ok=True)
         stored = writer.write(cpath)
         with self._cache_lock:
-            self._reader_cache.pop(cpath)  # container (re)written: drop stale mmap
+            self._reader_cache.pop(cpath)  # generation paths are never reused,
+            # but drop any stale mmap defensively
         res.stored_bytes = stored
         res.ingest_seconds = time.perf_counter() - t0
 
-        self.file_index[key] = {"kind": "container", "path": cpath, "file_hash": fhash,
-                                "raw_size": raw_size, "base_id": base_id or ""}
+        self.lifecycle.register_version(key, gen, cpath, stored)
+        self._set_index_entry(key, {"kind": "container", "path": cpath, "gen": gen,
+                                    "file_hash": fhash, "raw_size": raw_size,
+                                    "base_id": base_id or ""})
         # register as a family base iff stored standalone (no base of its own)
         if base_id is None:
             self.families.register(repo_id, path)
@@ -368,36 +427,164 @@ class ZLLMStore:
         self._account(res)
         return res
 
+    def _set_index_entry(self, key: str, rec: Dict) -> None:
+        """Commit an index record, releasing the whole-file hash of any
+        record it replaces: after a re-registration the OLD content's hash
+        must stop resolving to this key, or a later identical upload would
+        dedup against the wrong (new) generation."""
+        old = self.file_index.get(key)
+        if old is not None:
+            old_hash = old.get("file_hash")
+            if old_hash and old_hash != rec.get("file_hash"):
+                self._release_file_hash(key, old_hash)
+        self.file_index[key] = rec
+        new_hash = rec.get("file_hash")
+        if new_hash:
+            self._keys_by_file_hash.setdefault(new_hash, set()).add(key)
+
+    def _release_file_hash(self, key: str, fhash: str) -> None:
+        """``key`` no longer serves the bytes hashing to ``fhash``: repoint
+        the whole-file dedup maps at a surviving alias, or forget the hash so
+        an identical future upload is stored fresh."""
+        keys = self._keys_by_file_hash.get(fhash)
+        if keys is not None:
+            keys.discard(key)
+            if not keys:
+                del self._keys_by_file_hash[fhash]
+                keys = None
+        if self.file_hash_to_key.get(fhash) != key:
+            return
+        if keys:
+            self.file_hash_to_key[fhash] = min(keys)  # deterministic alias
+        else:
+            del self.file_hash_to_key[fhash]
+            self.file_dedup.forget(fhash)
+
+    def _rebuild_file_hash_map(self) -> None:
+        self._keys_by_file_hash = {}
+        for k, r in self.file_index.items():
+            fh = r.get("file_hash")
+            if fh:
+                self._keys_by_file_hash.setdefault(fh, set()).add(k)
+
+    def _pinned_ref(self, ref: str, fhash: str, raw_size: int) -> Dict:
+        """Index record for a whole-file duplicate of ``ref``, pinned to the
+        container generation serving ``ref``'s bytes *right now* — a later
+        re-registration of ``ref`` must not change what this key retrieves."""
+        rrec = self.file_index[ref]
+        if rrec["kind"] == "container":
+            return {"kind": "file_dedup", "ref": ref, "ref_gen": rrec["gen"],
+                    "file_hash": fhash, "raw_size": raw_size}
+        # ref is itself a pinned reference (file_dedup / near_dup): copy its
+        # pin so retrieval never chases a mutable key
+        out = {"kind": rrec["kind"], "ref": rrec["ref"], "ref_gen": rrec["ref_gen"],
+               "file_hash": fhash, "raw_size": raw_size}
+        if rrec["kind"] == "near_dup":
+            out["header_blob_z"] = rrec["header_blob_z"]
+            out["n_tensors"] = rrec.get("n_tensors")
+        return out
+
+    def _ingest_near_dup(self, res: IngestResult, sf: SafetensorsFile, key: str,
+                         fhash: str, raw_size: int, header_blob: bytes,
+                         target: Tuple[str, int], t0: float) -> IngestResult:
+        """Satellite fix: a file whose tensors all hash-match one existing
+        container version in order needs no container of its own — only its
+        header blob differs, so store that plus a pinned reference."""
+        tkey, tgen = target
+        for ti in sf.infos:
+            self.tensor_dedup.stats.observe(ti.nbytes, False)
+        n = len(sf.infos)
+        res.n_tensors = n
+        res.n_dedup = n
+        res.near_dup_hit = True
+        blob_z = base64.b64encode(zlib.compress(header_blob)).decode()
+        self._set_index_entry(key, {"kind": "near_dup", "ref": tkey, "ref_gen": tgen,
+                                    "file_hash": fhash, "raw_size": raw_size,
+                                    "n_tensors": n, "header_blob_z": blob_z})
+        res.stored_bytes = len(blob_z)
+        res.ingest_seconds = time.perf_counter() - t0
+        self._account(res)
+        self.stats.n_near_dup += 1
+        return res
+
+    def _near_dup_probe(self, sf: SafetensorsFile,
+                        get_hash: Callable[[int], str]) -> Optional[Tuple[str, int]]:
+        """Container version whose records match this file's tensor hashes
+        exactly, in order. Best-effort: only the version pinned for the first
+        hash is examined (a full match elsewhere just falls back to the
+        normal dedup path). Awaits only ``get_hash(0)`` unless a candidate's
+        record count matches, so the no-candidate common case keeps the
+        pool's hash futures pending for the encode stage to overlap with."""
+        if not self.use_tensor_dedup or not sf.infos:
+            return None
+        loc = self.tensor_locations.get(get_hash(0))
+        if loc is None or loc[2] != 0:
+            return None
+        tkey, tgen, _ = loc
+        try:
+            reader = self._reader(self.lifecycle.version_path(tkey, tgen))
+        except (KeyError, RuntimeError, OSError, ValueError):
+            return None
+        recs = reader.records
+        if len(recs) == len(sf.infos) and all(
+                recs[i].self_hash == get_hash(i) for i in range(len(recs))):
+            return tkey, tgen
+        return None
+
+    def _hash_stage(self, sf: SafetensorsFile) -> Callable[[int], str]:
+        """Stage 1: submit big-tensor sha256 jobs to the pool and return a
+        memoized per-index getter. Callers resolve hashes lazily, so encode
+        submission overlaps the remaining hash work exactly as in PR 1."""
+        pool = self._executor()
+        hash_one = self.tensor_dedup.hash_tensor
+        infos = sf.infos
+        futs = ([pool.submit(hash_one, sf.tensor_bytes(ti.name))
+                 if ti.nbytes >= _PARALLEL_MIN_BYTES else None for ti in infos]
+                if pool is not None else None)
+        cache: Dict[int, str] = {}
+
+        def get_hash(i: int) -> str:
+            h = cache.get(i)
+            if h is None:
+                h = (futs[i].result() if futs is not None and futs[i] is not None
+                     else hash_one(sf.tensor_bytes(infos[i].name)))
+                cache[i] = h
+            return h
+        return get_hash
+
     # ------------------------------------------------------------------
     def _encode_tensors(self, sf: SafetensorsFile, writer: BitXWriter,
-                        res: IngestResult, key: str, base_tensors: Dict[str, Tuple],
-                        entries: List[Tuple[str, str, Tuple[int, ...], str]]) -> None:
-        """Hash → (serial) decide → encode → ordered merge, per tensor.
+                        res: IngestResult, key: str, gen: int,
+                        base_tensors: Dict[str, Tuple],
+                        entries: List[Tuple[str, str, Tuple[int, ...], str]],
+                        get_hash: Callable[[int], str]) -> None:
+        """(Serial) decide → encode → ordered merge, per pre-hashed tensor.
 
-        ``workers>1`` overlaps the hash and encode stages across the pool;
-        the decision loop and the merge stay serial and in tensor order, so
-        the emitted container is bit-identical to the serial path.
+        ``workers>1`` overlaps the encode stage across the pool; the decision
+        loop and the merge stay serial and in tensor order, so the emitted
+        container is bit-identical to the serial path. Every dedup hit and
+        BitX base reference also records a lifecycle edge from this container
+        version to the pinned version it resolves into — the refcount graph
+        gc() sweeps against.
         """
         pool = self._executor()
         infos = sf.infos
-        hash_one = self.tensor_dedup.hash_tensor
-        hash_futs = ([pool.submit(hash_one, sf.tensor_bytes(ti.name))
-                      if ti.nbytes >= _PARALLEL_MIN_BYTES else None for ti in infos]
-                     if pool is not None else None)
+        self_vid = make_vid(key, gen)
 
         # Stage 2: serial decision loop (order-dependent: dedup lookups and
         # tensor_locations registration must see earlier tensors of this file)
         plan: List[Tuple[Any, str, str, Optional[str], Any]] = []
         for i, ti in enumerate(infos):
             res.n_tensors += 1
-            thash = (hash_futs[i].result() if hash_futs is not None and hash_futs[i] is not None
-                     else hash_one(sf.tensor_bytes(ti.name)))
+            thash = get_hash(i)
             entries.append((ti.name, ti.dtype_str, ti.shape, thash))
             dup = self.use_tensor_dedup and thash in self.tensor_locations
             self.tensor_dedup.stats.observe(ti.nbytes, not dup)
             if dup:
                 # ② zero-payload reference into the global tensor pool
                 res.n_dedup += 1
+                tk, tg, _ = self.tensor_locations[thash]
+                self.lifecycle.add_edge(self_vid, make_vid(tk, tg))
                 plan.append((ti, thash, "dedup", None, None))
             else:
                 base = base_tensors.get(ti.name)
@@ -405,6 +592,9 @@ class ZLLMStore:
                         and base[0] == ti.dtype_str and base[1] == ti.shape):
                     kind, base_hash, base_loader = "bitx", base[3], base[2]
                     res.n_bitx += 1
+                    bloc = self.tensor_locations.get(base_hash)
+                    if bloc is not None:
+                        self.lifecycle.add_edge(self_vid, make_vid(bloc[0], bloc[1]))
                 elif ti.dtype_str in _FLOAT_TAGS:
                     kind, base_hash, base_loader = "zipnn", None, None
                     res.n_zipnn += 1
@@ -420,7 +610,7 @@ class ZLLMStore:
             # at its standalone (zipnn/raw) record, never at a later BitX
             # record that references the same hash as ITS base (cycle).
             # Record index == tensor index (dedup entries are records too).
-            self.tensor_locations.setdefault(thash, (key, i))
+            self.tensor_locations.setdefault(thash, (key, gen, i))
 
         # Stage 4: ordered merge — append strictly in tensor order
         for ti, thash, kind, base_hash, payload in plan:
@@ -473,10 +663,10 @@ class ZLLMStore:
         (re-registration invalidates any cached map); the ``repo_id`` binding
         keeps seed semantics — the repo's first standalone file wins.
 
-        Caveat (pre-existing, see ROADMAP open items): re-ingesting a new
-        file under an existing key overwrites its container, orphaning pool
-        references held by earlier dependants of the old version. Prefer new
-        keys for new base versions until containers are refcounted.
+        Re-registration is safe: the superseded container generation stays
+        on disk (copy-on-write, see the lifecycle section of the module
+        docstring), so dependants of the old version keep resolving their
+        pinned references; only NEW fine-tunes delta against the new bytes.
         """
         bm = _BaseTensorMap(path, entries)
         self.base_map_stats["primed"] += 1
@@ -552,8 +742,11 @@ class ZLLMStore:
             f.seek(0)
             return f.read(8 + hlen)
 
-    def _container_path(self, key: str) -> str:
-        return os.path.join(self.root, "containers", key + ".bitx")
+    def _container_path(self, key: str, gen: int = 0) -> str:
+        # gen 0 keeps the PR-1 layout (``<key>.bitx``) so existing stores
+        # stay valid; re-registrations get copy-on-write sibling paths
+        name = key + (".bitx" if gen == 0 else f"@g{gen}.bitx")
+        return os.path.join(self.root, "containers", name)
 
     def _account(self, res: IngestResult):
         self.results.append(res)
@@ -561,18 +754,28 @@ class ZLLMStore:
         self.stats.stored_bytes += res.stored_bytes
         self.stats.n_files += 1
         self.stats.ingest_seconds += res.ingest_seconds
+        self.stats.live_bytes = self.lifecycle.live_bytes()
 
     # ------------------------------------------------------------------
     # Retrieval
     # ------------------------------------------------------------------
     def retrieve_file(self, repo_id: str, filename: str, out_path: Optional[str] = None,
                       verify: bool = True) -> bytes:
-        """Reconstruct the original safetensors file bit-exactly."""
+        """Reconstruct the original safetensors file bit-exactly. Pinned
+        references (file_dedup / near_dup) decode the exact container
+        generation they were ingested against, regardless of what their
+        target key points at today."""
         key = f"{repo_id}/{filename}"
         rec = self.file_index[key]
+        if rec.get("quarantined"):
+            raise RuntimeError(f"{key}: container was quarantined by fsck; "
+                               f"restore from quarantine/ or re-ingest")
         if rec["kind"] == "file_dedup":
-            ref_repo, ref_file = rec["ref"].split("/", 1)
-            data = self.retrieve_file(ref_repo, ref_file, verify=False)
+            data = self._decode_container(self._ref_path(rec))
+        elif rec["kind"] == "near_dup":
+            header_blob = zlib.decompress(base64.b64decode(rec["header_blob_z"]))
+            data = self._decode_container(self._ref_path(rec),
+                                          header_override=header_blob)
         else:
             data = self._decode_container(rec["path"])
         if verify:
@@ -582,8 +785,14 @@ class ZLLMStore:
                 f.write(data)
         return data
 
+    def _ref_path(self, rec: Dict) -> str:
+        """Container path for a pinned (ref, ref_gen) index record."""
+        return self.lifecycle.version_path(rec["ref"], rec["ref_gen"])
+
     def _reader(self, cpath: str) -> BitXReader:
-        """LRU-cached mmap reader per container path."""
+        """LRU-cached mmap reader per container path. Generation-aware by
+        construction: version paths are unique and never reused, and gc()/
+        quarantine evict their entries eagerly."""
         with self._cache_lock:
             reader = self._reader_cache.get(cpath)
             if reader is None:
@@ -591,10 +800,12 @@ class ZLLMStore:
                 self._reader_cache.put(cpath, reader)
             return reader
 
-    def _decode_container(self, cpath: str) -> bytes:
+    def _decode_container(self, cpath: str,
+                          header_override: Optional[bytes] = None) -> bytes:
         reader = self._reader(cpath)
-        header_blob = zlib.decompress(
-            base64.b64decode(reader.file_metadata["header_blob_z"]))
+        header_blob = (header_override if header_override is not None else
+                       zlib.decompress(
+                           base64.b64decode(reader.file_metadata["header_blob_z"])))
         resolver = self._resolve_tensor_hash
 
         def decode(idx: int) -> bytes:
@@ -621,8 +832,8 @@ class ZLLMStore:
             hit = self._tensor_cache.get(thash)
         if hit is not None:
             return hit
-        key, idx = self.tensor_locations[thash]
-        reader = self._reader(self.file_index[key]["path"])
+        key, gen, idx = self.tensor_locations[thash]
+        reader = self._reader(self.lifecycle.version_path(key, gen))
         resolver = lambda h: self._resolve_tensor_hash(h, _depth + 1)
         arr = reader.decode_tensor(idx, resolver, resolver)
         with self._cache_lock:
@@ -638,6 +849,290 @@ class ZLLMStore:
                     "reader_misses": self._reader_cache.misses}
 
     # ------------------------------------------------------------------
+    # Lifecycle: deletion, refcounted GC, fsck
+    # ------------------------------------------------------------------
+    def _anchor_vids(self):
+        """Container versions directly referenced by live index entries —
+        the GC roots. Everything transitively reachable from here survives."""
+        for key, rec in self.file_index.items():
+            if rec["kind"] == "container":
+                yield make_vid(key, rec.get("gen", 0))
+            elif "ref_gen" in rec:
+                yield make_vid(rec["ref"], rec["ref_gen"])
+
+    def delete_file(self, repo_id: str, filename: str) -> bool:
+        """Drop a file's index entry. Its container version (if any) stays on
+        disk until ``gc()`` proves no dependant pins it. Returns False for
+        unknown keys."""
+        key = f"{repo_id}/{filename}"
+        rec = self.file_index.pop(key, None)
+        if rec is None:
+            return False
+        fhash = rec.get("file_hash")
+        if fhash:
+            self._release_file_hash(key, fhash)
+        # unbind base registrations that point at this key — including the
+        # family entry, or bit-distance matching would keep electing a base
+        # whose tensor map is gone (silent zipnn fallback for new fine-tunes)
+        for bid in (key, repo_id):
+            if self.base_key_of.get(bid) == key:
+                self.invalidate_base_map(bid)
+                self.base_paths.pop(bid, None)
+                self.base_key_of.pop(bid, None)
+                self.families.unregister(bid)
+        self.stats.n_deleted += 1
+        return True
+
+    def delete_repo(self, repo_id: str) -> int:
+        """Drop every file of a repo plus its family/base registrations.
+        Containers are reclaimed by the next ``gc()`` once unreferenced."""
+        prefix = repo_id + "/"
+        n = 0
+        for key in [k for k in self.file_index if k.startswith(prefix)]:
+            if self.delete_file(repo_id, key[len(prefix):]):
+                n += 1
+        self.metadata_base.pop(repo_id, None)
+        self.families.unregister(repo_id)
+        return n
+
+    def gc(self) -> Dict[str, int]:
+        """Reclaim every container version unreachable from live index
+        entries (cascading refcount sweep), delete the files, scrub tensor
+        hashes that pointed into them, and evict stale mmap readers."""
+        reclaimed = self.lifecycle.collect(set(self._anchor_vids()))
+        dropped_refs = 0
+        if reclaimed:
+            dead = {(v.key, v.gen) for v in reclaimed}
+            stale = [h for h, (k, g, _) in self.tensor_locations.items()
+                     if (k, g) in dead]
+            for h in stale:
+                del self.tensor_locations[h]
+                self.tensor_dedup.forget(h)
+            dropped_refs = len(stale)
+            with self._cache_lock:
+                for v in reclaimed:
+                    self._reader_cache.pop(v.path)  # generation-aware eviction
+            for v in reclaimed:
+                try:
+                    os.remove(v.path)
+                except FileNotFoundError:
+                    pass
+        freed = sum(v.nbytes for v in reclaimed)
+        self.stats.reclaimed_bytes += freed
+        self.stats.live_bytes = self.lifecycle.live_bytes()
+        return {"collected": len(reclaimed), "reclaimed_bytes": freed,
+                "dropped_tensor_refs": dropped_refs,
+                "live_bytes": self.stats.live_bytes}
+
+    def fsck(self, repair: bool = False, spot_check: Optional[int] = 4) -> FsckReport:
+        """Verify the store's reference graph and container integrity.
+
+        Per live container version: structural checks (magic/header parse,
+        payload truncation) and, for every dedup record and BitX base
+        reference, that the hash resolves through ``tensor_locations`` to a
+        live container frame holding the same hash. ``spot_check`` payload
+        records per container (None = all) are additionally decoded and
+        sha256-verified against their self_hash. Index entries must point at
+        live generations.
+
+        ``repair=True``: dangling tensor hashes are re-pinned to a surviving
+        copy when any live container still holds that payload; corrupt
+        containers are quarantined (moved to ``<root>/quarantine``, index
+        entries flagged, graph node kept so dependants stay repairable).
+        """
+        report = FsckReport()
+        alt: Optional[Dict[str, Tuple[str, int, int]]] = None
+
+        def check_ref(owner: str, thash: str, role: str) -> None:
+            nonlocal alt
+            report.checked_refs += 1
+            if self._hash_resolves(thash):
+                return
+            if repair:
+                if alt is None:
+                    alt = self._payload_locations()
+                loc = alt.get(thash)
+                if loc is not None:
+                    self.tensor_locations[thash] = loc
+                    # the re-pinned target must survive the next gc(): record
+                    # the dependency edge the original ingest would have
+                    self.lifecycle.add_edge(owner, make_vid(loc[0], loc[1]))
+                    report.repaired.append(
+                        (owner, f"{role} {thash[:12]} re-pinned to "
+                                f"{make_vid(loc[0], loc[1])}:{loc[2]}"))
+                    return
+            report.dangling.append(
+                (owner, f"{role} {thash[:12]} does not resolve to a live "
+                        f"container frame"))
+
+        # pass 1: container integrity (quarantines under repair). Runs to
+        # completion BEFORE any reference checks so a dependant's refs are
+        # judged against the post-quarantine state — a single fsck pass both
+        # quarantines a corrupt target and repairs/reports its dependants.
+        for vid in sorted(self.lifecycle.versions):
+            info = self.lifecycle.versions[vid]
+            if info.quarantined:
+                report.quarantined.append(vid)
+                continue
+            report.checked_versions += 1
+            err = self._fsck_version_content(info, report, spot_check)
+            if err is not None:
+                report.corrupt.append((vid, err))
+                if repair:
+                    self._quarantine_version(info, report)
+
+        # pass 2: reference resolution over the surviving versions
+        for vid in sorted(self.lifecycle.versions):
+            info = self.lifecycle.versions[vid]
+            if not info.quarantined:
+                self._fsck_version_refs(info, check_ref)
+
+        for key in sorted(self.file_index):
+            rec = self.file_index[key]
+            report.checked_files += 1
+            if rec.get("quarantined"):
+                continue
+            if rec["kind"] == "container":
+                if not self.lifecycle.exists(key, rec.get("gen", 0)):
+                    report.dangling.append(
+                        (key, f"index points at missing version "
+                              f"{make_vid(key, rec.get('gen', 0))}"))
+            else:
+                report.checked_refs += 1
+                if not self.lifecycle.exists(rec["ref"], rec["ref_gen"]):
+                    report.dangling.append(
+                        (key, f"{rec['kind']} ref "
+                              f"{make_vid(rec['ref'], rec['ref_gen'])} is not live"))
+                elif rec["kind"] == "near_dup" and rec.get("n_tensors") is not None:
+                    try:
+                        reader = self._reader(self._ref_path(rec))
+                    except Exception as e:  # target corrupt: flagged above on
+                        # its own version; this entry is dangling meanwhile
+                        report.dangling.append(
+                            (key, f"near_dup target unreadable: {e}"))
+                    else:
+                        if len(reader.records) != rec["n_tensors"]:
+                            report.dangling.append(
+                                (key, "near_dup target record count changed"))
+        return report
+
+    def _hash_resolves(self, thash: str) -> bool:
+        loc = self.tensor_locations.get(thash)
+        if loc is None:
+            return False
+        key, gen, idx = loc
+        if not self.lifecycle.exists(key, gen):
+            return False
+        try:
+            reader = self._reader(self.lifecycle.version_path(key, gen))
+        except (KeyError, RuntimeError, OSError, ValueError, AssertionError):
+            return False
+        return idx < len(reader.records) and reader.records[idx].self_hash == thash
+
+    def _payload_locations(self) -> Dict[str, Tuple[str, int, int]]:
+        """hash -> (key, gen, idx) over every live version's payload-bearing
+        records — the re-pin candidates for fsck repair."""
+        out: Dict[str, Tuple[str, int, int]] = {}
+        for info in self.lifecycle.versions.values():
+            if info.quarantined:
+                continue
+            try:
+                reader = self._reader(info.path)
+            except (OSError, ValueError, AssertionError):
+                continue
+            for i, r in enumerate(reader.records):
+                if r.codec != "dedup":
+                    out.setdefault(r.self_hash, (info.key, info.gen, i))
+        return out
+
+    def _fsck_version_refs(self, info, check_ref) -> None:
+        """Reference pass: every dedup target and BitX base hash of this
+        version must resolve to a live container frame."""
+        try:
+            reader = self._reader(info.path)
+        except Exception:
+            return  # already reported corrupt by the content pass
+        vid = info.vid
+        for r in reader.records:
+            if r.codec == "dedup":
+                check_ref(vid, r.self_hash, "dedup target")
+            elif r.codec == "bitx":
+                check_ref(vid, r.base_hash, "bitx base")
+
+    def _fsck_version_content(self, info, report: FsckReport,
+                              spot_check: Optional[int]) -> Optional[str]:
+        """Structural + sampled-sha256 checks for one version. Returns an
+        error string when the container itself is corrupt."""
+        if not os.path.exists(info.path):
+            return "container file missing"
+        try:
+            reader = self._reader(info.path)
+        except Exception as e:  # bad magic, short header, backend mismatch...
+            return f"unreadable container: {e}"
+        if reader.payload_size < reader.expected_payload_size:
+            return (f"truncated payload: {reader.payload_size} < "
+                    f"{reader.expected_payload_size} bytes")
+        to_spot = [i for i, r in enumerate(reader.records) if r.codec != "dedup"]
+        if spot_check is not None:
+            to_spot = to_spot[:spot_check]
+        for i in to_spot:
+            r = reader.records[i]
+            if r.codec == "bitx":
+                # blame attribution: verify the DEPENDENCY first. A corrupt
+                # or quarantined base must be flagged on its own version —
+                # never cascade onto this (healthy) dependant.
+                try:
+                    base = self._resolve_tensor_hash(r.base_hash)
+                    if sha256_bytes(np.ascontiguousarray(base).tobytes()) != r.base_hash:
+                        continue  # base bit rot — its own version answers for it
+                except Exception:
+                    continue  # dangling/quarantined/corrupt base — ditto
+            try:
+                arr = reader.decode_tensor(i, self._resolve_tensor_hash,
+                                           self._resolve_tensor_hash)
+                data = np.ascontiguousarray(arr).tobytes()
+            except (KeyError, RuntimeError):
+                continue  # unresolvable dependency — already reported by check_ref
+            except Exception as e:
+                return f"record {i} ({r.name}): decode failed: {e}"
+            report.spot_checked += 1
+            if sha256_bytes(data) != r.self_hash:
+                return f"record {i} ({r.name}): sha256 mismatch (bit rot?)"
+        return None
+
+    def _quarantine_version(self, info, report: FsckReport) -> None:
+        qdir = os.path.join(self.root, "quarantine")
+        os.makedirs(qdir, exist_ok=True)
+        qpath = os.path.join(qdir, info.vid.replace("/", "__"))
+        with self._cache_lock:
+            self._reader_cache.pop(info.path)
+        if os.path.exists(info.path):
+            os.replace(info.path, qpath)
+        self.lifecycle.quarantine(info.key, info.gen, qpath)
+        rec = self.file_index.get(info.key)
+        if (rec is not None and rec.get("kind") == "container"
+                and rec.get("gen", 0) == info.gen):
+            rec["quarantined"] = True
+        # scrub pool hashes pinned to the quarantined payload: future ingests
+        # must re-store those tensors fresh, never dedup against a container
+        # that retrieval refuses to read. fsck's reference pass re-pins
+        # surviving dependants to other live copies where possible.
+        stale = [h for h, (k, g, _) in self.tensor_locations.items()
+                 if k == info.key and g == info.gen]
+        for h in stale:
+            del self.tensor_locations[h]
+            self.tensor_dedup.forget(h)
+        report.quarantined.append(info.vid)
+        self.stats.live_bytes = self.lifecycle.live_bytes()
+
+    def _superseded_bytes(self) -> int:
+        """Bytes held by pinned-but-superseded generations — live only
+        because some dependant still resolves into them."""
+        anchored = set(self._anchor_vids())
+        return sum(v.nbytes for v in self.lifecycle.versions.values()
+                   if not v.quarantined and v.vid not in anchored)
+
+    # ------------------------------------------------------------------
     # Index persistence: the store survives process restarts (ingest state,
     # tensor pool, family registry, base maps) — a new process can keep
     # ingesting or serve retrievals immediately.
@@ -646,7 +1141,9 @@ class ZLLMStore:
         def sig_key(sig):
             return json.dumps([[d, list(sh)] for d, sh in sig])
         idx = {
+            "format": INDEX_FORMAT,
             "stats": vars(self.stats),
+            "lifecycle": self.lifecycle.to_json(),
             "file_index": self.file_index,
             "file_hash_to_key": self.file_hash_to_key,
             "tensor_locations": {k: list(v) for k, v in self.tensor_locations.items()},
@@ -693,11 +1190,18 @@ class ZLLMStore:
         if not os.path.exists(path):
             return False
         idx = json.load(open(path))
+        fmt = int(idx.get("format", 1))
         for k, v in idx["stats"].items():
             setattr(self.stats, k, v)
         self.file_index = idx["file_index"]
         self.file_hash_to_key = idx["file_hash_to_key"]
-        self.tensor_locations = {k: tuple(v) for k, v in idx["tensor_locations"].items()}
+        self._rebuild_file_hash_map()
+        if fmt >= 2:
+            self.tensor_locations = {k: tuple(v)
+                                     for k, v in idx["tensor_locations"].items()}
+            self.lifecycle = ContainerLifecycle.from_json(idx.get("lifecycle", {}))
+        else:
+            self._upgrade_v1_index(idx)
         self.base_paths = idx["base_paths"]
         self.base_key_of = idx["base_key_of"]
         self.metadata_base = idx["metadata_base"]
@@ -718,6 +1222,40 @@ class ZLLMStore:
                                 for k, v in idx["families"].items()}
         return True
 
+    def _upgrade_v1_index(self, idx: Dict) -> None:
+        """Backward-compat load of a PR-1-era index: no generations, 2-tuple
+        tensor locations, no lifecycle graph. Every container becomes gen 0
+        at its legacy path; pins default to gen 0 and the dependency graph is
+        rebuilt by scanning container headers (header parse only, no frame
+        decode)."""
+        self.tensor_locations = {k: (v[0], 0, v[1])
+                                 for k, v in idx["tensor_locations"].items()}
+        self.lifecycle = ContainerLifecycle()
+        for key, rec in self.file_index.items():
+            if rec["kind"] == "container":
+                rec.setdefault("gen", 0)
+                try:
+                    nbytes = os.path.getsize(rec["path"])
+                except OSError:
+                    nbytes = 0  # missing file: fsck will report it
+                self.lifecycle.register_version(key, rec["gen"], rec["path"], nbytes)
+            elif rec["kind"] == "file_dedup":
+                rec.setdefault("ref_gen", 0)
+        for key, rec in self.file_index.items():
+            if rec["kind"] != "container":
+                continue
+            src = make_vid(key, rec["gen"])
+            try:
+                reader = self._reader(rec["path"])
+            except (OSError, ValueError, AssertionError):
+                continue  # unreadable container: fsck will report it
+            for r in reader.records:
+                h = r.self_hash if r.codec == "dedup" else r.base_hash
+                loc = self.tensor_locations.get(h) if h else None
+                if loc is not None:
+                    self.lifecycle.add_edge(src, make_vid(loc[0], loc[1]))
+        self.stats.live_bytes = self.lifecycle.live_bytes()
+
     # ------------------------------------------------------------------
     def summary(self) -> Dict:
         return {
@@ -726,6 +1264,16 @@ class ZLLMStore:
             "stored_bytes": self.stats.stored_bytes,
             "reduction_ratio": round(self.stats.reduction_ratio, 4),
             "file_dedup_hits": self.stats.n_file_dedup,
+            "near_dup_hits": self.stats.n_near_dup,
+            "lifecycle": {
+                "versions": len(self.lifecycle.versions),
+                "live_bytes": self.lifecycle.live_bytes(),
+                "superseded_bytes": self._superseded_bytes(),
+                "reclaimed_bytes": self.stats.reclaimed_bytes,
+                "collected": self.lifecycle.n_collected,
+                "gc_runs": self.lifecycle.n_gc_runs,
+                "deleted_files": self.stats.n_deleted,
+            },
             "tensor_dedup": {
                 "unique_hashes": self.tensor_dedup.stats.n_unique,
                 "reduction_ratio": round(self.tensor_dedup.stats.reduction_ratio, 4),

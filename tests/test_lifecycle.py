@@ -1,0 +1,537 @@
+"""Container lifecycle tests: churn-safety under re-registration, refcounted
+GC, fsck detection/repair, near-identical re-ingest, and backward-compatible
+load of PR-1-era (format v1) indexes.
+
+These cover the ROADMAP's re-registration hazard end to end: dependants pin
+the container *generation* they were ingested against, so overwriting a key
+can never orphan earlier dedup records or BitX deltas.
+"""
+
+import base64
+import json
+import os
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.lifecycle import ContainerLifecycle, make_vid
+from repro.core.pipeline import ZLLMStore
+from repro.formats import safetensors as st
+
+
+def _write_model(path, rng, n_tensors=5, n=2048, scale=0.02, metadata=None):
+    tensors = {f"model.t{i}.weight": (rng.randn(n) * scale).astype(np.float32)
+               for i in range(n_tensors)}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(tensors, path, metadata=metadata)
+    return tensors
+
+
+def _write_tensors(path, tensors, metadata=None):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(tensors, path, metadata=metadata)
+
+
+def _write_finetune(path, base_tensors, rng, sigma=1e-3):
+    ft = {k: (v + rng.randn(*v.shape).astype(np.float32) * sigma).astype(np.float32)
+          for k, v in base_tensors.items()}
+    _write_tensors(path, ft)
+    return ft
+
+
+def _read(path):
+    with open(path, "rb") as f:
+        return f.read()
+
+
+@pytest.fixture
+def churn(tmp_path):
+    """Base + fine-tune ingested; returns (store, paths dict, tensors dict)."""
+    rng = np.random.RandomState(0)
+    base_path = str(tmp_path / "hub" / "base" / "model.safetensors")
+    ft_path = str(tmp_path / "hub" / "ft" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    ft = _write_finetune(ft_path, base, rng)
+    store = ZLLMStore(str(tmp_path / "store"))
+    store.ingest_file(base_path, "org/base")
+    res = store.ingest_file(ft_path, "u/ft", declared_base="org/base/model.safetensors")
+    assert res.n_bitx > 0  # the fine-tune really delta-compresses
+    yield store, {"base": base_path, "ft": ft_path}, {"base": base, "ft": ft}
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# The ROADMAP hazard: re-register base, old fine-tune must survive
+# ---------------------------------------------------------------------------
+
+def test_reregister_base_preserves_finetune_then_gc_reclaims(churn, tmp_path):
+    """Acceptance scenario: register base → ingest fine-tune → re-register
+    the base key with different weights → the fine-tune retrieves
+    BIT-IDENTICAL (its BitX records resolve against the pinned old
+    generation); deleting the fine-tune lets gc() reclaim the superseded
+    generation, and fsck() reports zero dangling references throughout."""
+    store, paths, _ = churn
+    orig_ft = _read(paths["ft"])
+
+    # v2: unrelated weights (large bit distance keeps it standalone), same
+    # shapes, SAME key — the copy-on-write re-registration
+    v2_path = str(tmp_path / "hub" / "v2" / "model.safetensors")
+    _write_model(v2_path, np.random.RandomState(99), scale=1.0)
+    store.ingest_file(v2_path, "org/base")
+    assert store.file_index["org/base/model.safetensors"]["gen"] == 1
+    assert store.lifecycle.exists("org/base/model.safetensors", 0)  # pinned
+
+    # the ROADMAP hazard, closed: old fine-tune still bit-identical
+    assert store.retrieve_file("u/ft", "model.safetensors") == orig_ft
+    assert store.fsck(spot_check=None).ok
+
+    # the superseded generation is referenced — gc() must NOT touch it
+    assert store.gc()["collected"] == 0
+    assert store.retrieve_file("u/ft", "model.safetensors") == orig_ft
+
+    # delete the last dependant: the cascade reclaims ft@g0 AND base@g0
+    assert store.delete_file("u/ft", "model.safetensors")
+    swept = store.gc()
+    assert swept["collected"] == 2 and swept["reclaimed_bytes"] > 0
+    assert not store.lifecycle.exists("org/base/model.safetensors", 0)
+    assert not os.path.exists(
+        os.path.join(str(tmp_path / "store"), "containers",
+                     "org/base/model.safetensors.bitx"))
+
+    # survivor (the new generation) intact, zero dangling refs
+    assert store.retrieve_file("org/base", "model.safetensors") == _read(v2_path)
+    report = store.fsck(spot_check=None)
+    assert report.ok and not report.dangling
+    assert store.stats.reclaimed_bytes == swept["reclaimed_bytes"]
+    assert store.summary()["lifecycle"]["collected"] == 2
+
+
+def test_delete_gc_retrieve_survivor_bit_identity(churn, tmp_path):
+    """Two fine-tunes share a base; deleting one and collecting must leave
+    the other (and the base) bit-identical, and reclaim only the deleted
+    container."""
+    store, paths, tensors = churn
+    ft2_path = str(tmp_path / "hub" / "ft2" / "model.safetensors")
+    _write_finetune(ft2_path, tensors["base"], np.random.RandomState(7))
+    store.ingest_file(ft2_path, "u2/ft2", declared_base="org/base/model.safetensors")
+
+    live_before = store.lifecycle.live_bytes()
+    assert store.delete_file("u2/ft2", "model.safetensors")
+    swept = store.gc()
+    assert swept["collected"] == 1
+    assert store.lifecycle.live_bytes() == live_before - swept["reclaimed_bytes"]
+    with pytest.raises(KeyError):
+        store.retrieve_file("u2/ft2", "model.safetensors")
+    assert store.retrieve_file("u/ft", "model.safetensors") == _read(paths["ft"])
+    assert store.retrieve_file("org/base", "model.safetensors") == _read(paths["base"])
+    assert store.fsck(spot_check=None).ok
+
+
+def test_filededup_alias_survives_delete_of_original(churn, tmp_path):
+    """A whole-file duplicate pins the generation of its target, so deleting
+    the ORIGINAL key keeps the alias retrievable (and gc keeps the bytes)."""
+    store, paths, _ = churn
+    copy_path = str(tmp_path / "hub" / "copy" / "model.safetensors")
+    os.makedirs(os.path.dirname(copy_path), exist_ok=True)
+    with open(copy_path, "wb") as f:
+        f.write(_read(paths["base"]))
+    res = store.ingest_file(copy_path, "mirror/base")
+    assert res.file_dedup_hit
+    assert store.file_index["mirror/base/model.safetensors"]["ref_gen"] == 0
+
+    assert store.delete_file("org/base", "model.safetensors")
+    assert store.gc()["collected"] == 0  # alias + fine-tune still pin it
+    assert store.retrieve_file("mirror/base", "model.safetensors") == _read(paths["base"])
+    assert store.fsck(spot_check=None).ok
+    # the file hash now resolves to the surviving alias for future dedup
+    fhash = store.file_index["mirror/base/model.safetensors"]["file_hash"]
+    assert store.file_hash_to_key[fhash] == "mirror/base/model.safetensors"
+
+
+def test_delete_repo_drops_family_registration(churn, tmp_path):
+    store, paths, _ = churn
+    assert store.delete_repo("u/ft") == 1
+    assert store.gc()["collected"] == 1
+    assert store.delete_repo("org/base") == 1
+    assert store.gc()["collected"] == 1
+    assert store.lifecycle.versions == {}
+    assert store.stats.n_deleted == 2
+    # family/base registrations are gone: a fresh standalone ingest of the
+    # same shapes must not match the deleted base
+    fresh_path = str(tmp_path / "hub" / "fresh" / "model.safetensors")
+    _write_model(fresh_path, np.random.RandomState(3))
+    res = store.ingest_file(fresh_path, "org2/fresh")
+    assert res.base_id is None and res.n_zipnn > 0
+    assert store.fsck(spot_check=None).ok
+
+
+# ---------------------------------------------------------------------------
+# Near-identical re-ingest (same tensors, different header metadata)
+# ---------------------------------------------------------------------------
+
+def test_near_identical_reingest_writes_no_container(churn, tmp_path):
+    store, paths, tensors = churn
+    nd_path = str(tmp_path / "hub" / "nd" / "model.safetensors")
+    _write_tensors(nd_path, tensors["base"], metadata={"note": "same tensors"})
+    assert _read(nd_path) != _read(paths["base"])  # header genuinely differs
+
+    n_versions = len(store.lifecycle.versions)
+    res = store.ingest_file(nd_path, "mirror2/base")
+    assert res.near_dup_hit and not res.file_dedup_hit
+    assert res.n_dedup == res.n_tensors == 5
+    # no new container version — only the header blob is stored
+    assert len(store.lifecycle.versions) == n_versions
+    assert store.file_index["mirror2/base/model.safetensors"]["kind"] == "near_dup"
+    assert res.stored_bytes < 1024
+    assert store.retrieve_file("mirror2/base", "model.safetensors") == _read(nd_path)
+    assert store.fsck(spot_check=None).ok
+
+
+def test_near_identical_reingest_same_key(churn, tmp_path):
+    """Re-registering a key with identical tensors but new header metadata
+    must pin the existing generation instead of writing a new container."""
+    store, paths, tensors = churn
+    nd_path = str(tmp_path / "hub" / "ndk" / "model.safetensors")
+    _write_tensors(nd_path, tensors["base"], metadata={"rev": "2"})
+    res = store.ingest_file(nd_path, "org/base")
+    assert res.near_dup_hit
+    rec = store.file_index["org/base/model.safetensors"]
+    assert rec["kind"] == "near_dup" and rec["ref_gen"] == 0
+    assert store.retrieve_file("org/base", "model.safetensors") == _read(nd_path)
+    # old dependants unaffected, nothing reclaimable (near_dup anchors gen 0)
+    assert store.retrieve_file("u/ft", "model.safetensors") == _read(paths["ft"])
+    assert store.gc()["collected"] == 0
+    assert store.fsck(spot_check=None).ok
+
+
+# ---------------------------------------------------------------------------
+# fsck: corruption detection, quarantine, re-pin repair
+# ---------------------------------------------------------------------------
+
+def _corrupt_payload(cpath: str) -> None:
+    """Flip bytes in the middle of the frame payload (header left intact)."""
+    blob = bytearray(_read(cpath))
+    (hlen,) = struct.unpack("<Q", bytes(blob[8:16]))
+    payload_start = 16 + hlen
+    mid = payload_start + (len(blob) - payload_start) // 2
+    for i in range(mid, min(mid + 8, len(blob))):
+        blob[i] ^= 0xFF
+    with open(cpath, "wb") as f:
+        f.write(bytes(blob))
+
+
+def test_fsck_corruption_roundtrip(tmp_path):
+    """fsck must flag a deliberately corrupted container, and repair=True
+    must quarantine it (retrieval then fails loudly instead of silently
+    returning bad bytes)."""
+    rng = np.random.RandomState(1)
+    base_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    ft_path = str(tmp_path / "hub" / "f" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    _write_finetune(ft_path, base, rng)
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(base_path, "org/b")
+        s1.ingest_file(ft_path, "u/f", declared_base="org/b/model.safetensors")
+        assert s1.fsck(spot_check=None).ok
+        s1.save_index()
+        ft_cpath = s1.file_index["u/f/model.safetensors"]["path"]
+
+    _corrupt_payload(ft_cpath)
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        report = s2.fsck(spot_check=None)
+        assert not report.ok and report.corrupt
+        assert any("u/f/model.safetensors" in vid for vid, _ in report.corrupt)
+
+        # repair: quarantine the corrupt container, keep the graph node
+        report2 = s2.fsck(repair=True, spot_check=None)
+        assert report2.quarantined
+        assert not os.path.exists(ft_cpath)
+        assert os.path.isdir(os.path.join(root, "quarantine"))
+        with pytest.raises(RuntimeError, match="quarantine"):
+            s2.retrieve_file("u/f", "model.safetensors")
+        # the base is untouched and still clean
+        assert s2.retrieve_file("org/b", "model.safetensors") == _read(base_path)
+        assert s2.fsck(spot_check=None).ok  # quarantined ≠ dangling/corrupt
+
+
+def test_fsck_blames_corrupt_base_not_its_dependants(tmp_path):
+    """Corruption in a BASE container must quarantine only the base: the
+    fine-tune's frames are healthy, so cascading quarantine would destroy
+    good data (regression: decode-through-dependency used to blame the
+    dependant)."""
+    rng = np.random.RandomState(4)
+    base_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    ft_path = str(tmp_path / "hub" / "f" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    _write_finetune(ft_path, base, rng)
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(base_path, "org/b")
+        s1.ingest_file(ft_path, "u/f", declared_base="org/b/model.safetensors")
+        s1.save_index()
+        base_cpath = s1.file_index["org/b/model.safetensors"]["path"]
+
+    _corrupt_payload(base_cpath)
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        report = s2.fsck(repair=True, spot_check=None)
+        base_vid = make_vid("org/b/model.safetensors", 0)
+        ft_vid = make_vid("u/f/model.safetensors", 0)
+        assert base_vid in report.quarantined
+        assert ft_vid not in report.quarantined
+        assert not s2.lifecycle.versions[ft_vid].quarantined
+        # the fine-tune's base refs are now dangling (no surviving copy) —
+        # reported, not silently dropped
+        assert any(owner == ft_vid for owner, _ in report.dangling)
+
+
+def test_delete_base_file_unregisters_family(tmp_path):
+    """After delete_file of a base, bit-distance matching must not keep
+    electing it (regression: new fine-tunes silently fell back to zipnn
+    while still claiming the deleted base_id)."""
+    rng = np.random.RandomState(5)
+    base_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    with ZLLMStore(str(tmp_path / "store")) as s:
+        s.ingest_file(base_path, "org/b")
+        assert s.delete_file("org/b", "model.safetensors")
+        ft_path = str(tmp_path / "hub" / "f" / "model.safetensors")
+        _write_finetune(ft_path, base, rng)
+        res = s.ingest_file(ft_path, "u/f")
+        assert res.base_id is None and res.n_zipnn > 0  # honest standalone
+        assert s.retrieve_file("u/f", "model.safetensors") == _read(ft_path)
+        assert s.fsck(spot_check=None).ok
+
+
+def test_fsck_repair_repins_dangling_ref(tmp_path):
+    """A tensor_locations entry pointing at a dead generation is dangling;
+    repair must re-pin it to a surviving payload copy and restore retrieval."""
+    rng = np.random.RandomState(2)
+    base_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    ft_path = str(tmp_path / "hub" / "f" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    _write_finetune(ft_path, base, rng)
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(base_path, "org/b")
+        s1.ingest_file(ft_path, "u/f", declared_base="org/b/model.safetensors")
+        s1.save_index()
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        # sabotage: point one base-tensor hash at a generation that never
+        # existed (simulates a lost/partially-written index)
+        thash = next(h for h, (k, g, i) in s2.tensor_locations.items()
+                     if k == "org/b/model.safetensors")
+        k, g, i = s2.tensor_locations[thash]
+        s2.tensor_locations[thash] = (k, 999, i)
+
+        report = s2.fsck(spot_check=0)
+        assert any(thash[:12] in msg for _, msg in report.dangling)
+
+        report2 = s2.fsck(repair=True, spot_check=0)
+        assert report2.repaired and report2.ok
+        assert s2.tensor_locations[thash] == (k, 0, i)
+        assert s2.retrieve_file("u/f", "model.safetensors") == _read(ft_path)
+
+
+# ---------------------------------------------------------------------------
+# Backward-compat: loading a PR-1-era (format v1) index
+# ---------------------------------------------------------------------------
+
+def _downgrade_index_to_v1(index_path: str) -> None:
+    """Rewrite a v2 index the way PR 1 wrote it: no format tag, no lifecycle
+    section, 2-tuple tensor locations, no generation fields."""
+    idx = json.load(open(index_path))
+    assert idx["format"] == 2
+    del idx["format"]
+    del idx["lifecycle"]
+    idx["tensor_locations"] = {h: [loc[0], loc[2]]
+                               for h, loc in idx["tensor_locations"].items()}
+    for rec in idx["file_index"].values():
+        assert rec.get("gen", rec.get("ref_gen", 0)) == 0  # v1 had no gens
+        rec.pop("gen", None)
+        rec.pop("ref_gen", None)
+    for k in ("live_bytes", "reclaimed_bytes", "n_deleted", "n_near_dup"):
+        idx["stats"].pop(k, None)
+    with open(index_path, "w") as f:
+        json.dump(idx, f)
+
+
+def test_load_v1_index_backward_compat(tmp_path):
+    """A PR-1-era index (no generations, no lifecycle graph) must load: gen-0
+    pins are synthesized, the dependency graph is rebuilt from container
+    headers, and churn operations work immediately after."""
+    rng = np.random.RandomState(3)
+    base_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    ft_path = str(tmp_path / "hub" / "f" / "model.safetensors")
+    copy_path = str(tmp_path / "hub" / "c" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    _write_finetune(ft_path, base, rng)
+    os.makedirs(os.path.dirname(copy_path), exist_ok=True)
+    with open(copy_path, "wb") as f:
+        f.write(_read(base_path))
+
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(base_path, "org/b")
+        s1.ingest_file(ft_path, "u/f", declared_base="org/b/model.safetensors")
+        assert s1.ingest_file(copy_path, "mirror/b").file_dedup_hit
+        index_path = s1.save_index()
+
+    _downgrade_index_to_v1(index_path)
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        # pins synthesized at gen 0, graph rebuilt from container headers
+        assert s2.tensor_locations and all(
+            len(loc) == 3 and loc[1] == 0 for loc in s2.tensor_locations.values())
+        assert s2.lifecycle.exists("org/b/model.safetensors", 0)
+        ft_vid = make_vid("u/f/model.safetensors", 0)
+        assert make_vid("org/b/model.safetensors", 0) in s2.lifecycle.edges[ft_vid]
+        assert s2.fsck(spot_check=None).ok
+
+        # all three files retrieve bit-exactly (verify=True checks sha256)
+        assert s2.retrieve_file("org/b", "model.safetensors") == _read(base_path)
+        assert s2.retrieve_file("u/f", "model.safetensors") == _read(ft_path)
+        assert s2.retrieve_file("mirror/b", "model.safetensors") == _read(base_path)
+
+        # churn works on the upgraded store: re-register + delete + gc
+        v2_path = str(tmp_path / "hub" / "v2" / "model.safetensors")
+        _write_model(v2_path, np.random.RandomState(77), scale=1.0)
+        s2.ingest_file(v2_path, "org/b")
+        assert s2.retrieve_file("u/f", "model.safetensors") == _read(ft_path)
+        s2.delete_file("u/f", "model.safetensors")
+        s2.delete_file("mirror/b", "model.safetensors")
+        assert s2.gc()["collected"] == 2  # ft@g0 + superseded base@g0
+        assert s2.fsck(spot_check=None).ok
+        assert s2.retrieve_file("org/b", "model.safetensors") == _read(v2_path)
+
+
+def test_reregistration_releases_old_file_hash(churn, tmp_path):
+    """After re-registering a key with new content, an upload identical to
+    the OLD content must not dedup against the key's new generation
+    (regression: the stale file_hash_to_key entry pinned wrong bytes)."""
+    store, paths, _ = churn
+    v2_path = str(tmp_path / "hub" / "v2" / "model.safetensors")
+    _write_model(v2_path, np.random.RandomState(99), scale=1.0)
+    store.ingest_file(v2_path, "org/base")  # re-register: v1 hash released
+
+    copy_path = str(tmp_path / "hub" / "v1copy" / "model.safetensors")
+    os.makedirs(os.path.dirname(copy_path), exist_ok=True)
+    with open(copy_path, "wb") as f:
+        f.write(_read(paths["base"]))  # byte-identical to the OLD v1 content
+    res = store.ingest_file(copy_path, "mirror/v1")
+    assert not res.file_dedup_hit  # stored fresh (near-dup against pinned g0 ok)
+    assert store.retrieve_file("mirror/v1", "model.safetensors") == _read(paths["base"])
+    assert store.fsck(spot_check=None).ok
+
+
+def test_quarantine_scrubs_pool_hashes(tmp_path):
+    """Ingest after a quarantine must re-store tensors whose only payload
+    lived in the quarantined container — not emit dedup records retrieval
+    refuses to follow (regression)."""
+    rng = np.random.RandomState(6)
+    a_path = str(tmp_path / "hub" / "a" / "model.safetensors")
+    a = _write_model(a_path, rng)
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(a_path, "org/a")
+        s1.save_index()
+        cpath = s1.file_index["org/a/model.safetensors"]["path"]
+    _corrupt_payload(cpath)
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        assert s2.fsck(repair=True, spot_check=None).quarantined
+        # new file shares a's tensors (plus one extra): must NOT dedup
+        # against the quarantined payload
+        b = dict(a)
+        b["model.extra.weight"] = (np.arange(64) / 64).astype(np.float32)
+        b_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+        _write_tensors(b_path, b)
+        res = s2.ingest_file(b_path, "org/b")
+        assert res.n_dedup == 0  # everything re-stored fresh
+        assert s2.retrieve_file("org/b", "model.safetensors") == _read(b_path)
+        assert s2.fsck(spot_check=None).ok
+
+
+def test_single_fsck_pass_reports_dependants_of_quarantined_target(tmp_path):
+    """fsck quarantines a corrupt target in pass 1 and judges its dependants
+    against that state in pass 2 — ONE invocation reports the dangling refs
+    (regression: a dependant sorted before its target was reported clean)."""
+    rng = np.random.RandomState(8)
+    # key "org/z" sorts AFTER dependant "org/a": the old single walk checked
+    # a's refs before z was quarantined
+    z_path = str(tmp_path / "hub" / "z" / "model.safetensors")
+    z = _write_model(z_path, rng)
+    a = dict(z)
+    a["model.extra.weight"] = (np.arange(64) / 64).astype(np.float32)
+    a_path = str(tmp_path / "hub" / "a" / "model.safetensors")
+    _write_tensors(a_path, a)
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(z_path, "org/z")
+        res = s1.ingest_file(a_path, "org/a")
+        assert res.n_dedup == 5  # a's container dedup-references z's payload
+        s1.save_index()
+        z_cpath = s1.file_index["org/z/model.safetensors"]["path"]
+    _corrupt_payload(z_cpath)
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        report = s2.fsck(repair=True, spot_check=None)
+        assert make_vid("org/z/model.safetensors", 0) in report.quarantined
+        a_vid = make_vid("org/a/model.safetensors", 0)
+        # the dependant's now-dangling refs surface in the SAME pass
+        assert any(owner == a_vid for owner, _ in report.dangling)
+
+
+def test_gc_keeps_dependencies_of_quarantined_versions(tmp_path):
+    """A quarantined dependant is a GC root: its BitX base must survive
+    gc() so a later restore/repair still resolves (regression)."""
+    rng = np.random.RandomState(9)
+    base_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    ft_path = str(tmp_path / "hub" / "f" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    _write_finetune(ft_path, base, rng)
+    root = str(tmp_path / "store")
+    with ZLLMStore(root) as s1:
+        s1.ingest_file(base_path, "org/b")
+        s1.ingest_file(ft_path, "u/f", declared_base="org/b/model.safetensors")
+        s1.save_index()
+        ft_cpath = s1.file_index["u/f/model.safetensors"]["path"]
+    _corrupt_payload(ft_cpath)
+
+    with ZLLMStore(root) as s2:
+        assert s2.load_index()
+        s2.fsck(repair=True, spot_check=None)  # quarantines the fine-tune
+        # delete BOTH index entries: only the quarantine pins anything now
+        s2.delete_file("u/f", "model.safetensors")
+        s2.delete_file("org/b", "model.safetensors")
+        s2.gc()
+        # the quarantined fine-tune AND its base survive the sweep
+        assert s2.lifecycle.get("u/f/model.safetensors", 0).quarantined
+        assert s2.lifecycle.exists("org/b/model.safetensors", 0)
+
+
+def test_lifecycle_graph_json_roundtrip():
+    lc = ContainerLifecycle()
+    lc.register_version("a/m.safetensors", 0, "/tmp/a.bitx", 100)
+    lc.register_version("a/m.safetensors", 1, "/tmp/a@g1.bitx", 120)
+    lc.register_version("b/m.safetensors", 0, "/tmp/b.bitx", 90)
+    lc.add_edge(make_vid("b/m.safetensors", 0), make_vid("a/m.safetensors", 0))
+    back = ContainerLifecycle.from_json(lc.to_json())
+    assert back.versions.keys() == lc.versions.keys()
+    assert back.max_gen == lc.max_gen == {"a/m.safetensors": 1, "b/m.safetensors": 0}
+    assert back.edges == lc.edges
+    # collect with only b anchored: a@g0 survives via the edge, a@g1 goes
+    reclaimed = back.collect({make_vid("b/m.safetensors", 0)})
+    assert [v.vid for v in reclaimed] == [make_vid("a/m.safetensors", 1)]
+    assert back.next_generation("a/m.safetensors") == 2  # gens never reused
