@@ -96,13 +96,31 @@ def run(ctx: Ctx) -> int:
         n = _verify_all(store, ctx, skip=(base_rid, victim))
         print(f"fsck_smoke: {n} survivors bit-exact after delete+gc")
 
+        # churn 3 (satellite): plant crash debris — a container file no index
+        # references. fsck must flag it as an orphan; repair must delete it
+        # without touching live containers.
+        debris = os.path.join(root, "containers", "crash", "debris@g9.bitx")
+        os.makedirs(os.path.dirname(debris), exist_ok=True)
+        with open(debris, "wb") as f:
+            f.write(b"BITX0001" + b"\x00" * 32)
+        rep = store.fsck(repair=False, spot_check=0)
+        if len(rep.orphans) != 1:
+            failures.append(f"orphan scan expected 1 orphan, got {rep.orphans}")
+        store.fsck(repair=True, spot_check=0)
+        if os.path.exists(debris):
+            failures.append("fsck repair left orphan debris on disk")
+        else:
+            print("fsck_smoke: orphan debris flagged and repaired")
+
         report = store.fsck(repair=False, spot_check=None)
         print("fsck_smoke: fsck", report.summary())
-        if not report.ok:
+        if not report.ok or report.orphans:
             for owner, msg in report.dangling:
                 failures.append(f"dangling: {owner}: {msg}")
             for vid, msg in report.corrupt:
                 failures.append(f"corrupt: {vid}: {msg}")
+            for p in report.orphans:
+                failures.append(f"orphan: {p}")
 
     for f in failures:
         print(f"fsck_smoke: FAIL {f}", file=sys.stderr)

@@ -1,0 +1,116 @@
+"""CI server smoke: concurrent HTTP clients vs direct store reads.
+
+Ingests the bench corpus, starts the async store server in-process, then
+fires ``--concurrency`` (default 8) client threads that each sweep every
+repo over HTTP while a delete+gc churns mid-flight. Every file response is
+byte-compared against a direct ``ZLLMStore.retrieve_file`` read captured
+before the server started (and tensor responses against the source mmap),
+so the smoke fails on ANY divergence between the serving path and the
+library path — including under concurrent reclamation. Exits non-zero on
+mismatch, HTTP error, or a dirty final fsck.
+
+    PYTHONPATH=src python -m benchmarks.server_smoke [--tiny] [--scale S]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import urllib.request
+from concurrent.futures import ThreadPoolExecutor
+
+from benchmarks.common import Ctx, build_ctx
+from repro.core.pipeline import ZLLMStore
+from repro.formats.safetensors import SafetensorsFile
+from repro.serve.store_server import ServerThread
+
+
+def _get(base: str, path: str):
+    with urllib.request.urlopen(base + path, timeout=60) as r:
+        return r.status, dict(r.headers), r.read()
+
+
+def run(ctx: Ctx, concurrency: int = 8) -> int:
+    root = "/tmp/repro-server-smoke-store"
+    shutil.rmtree(root, ignore_errors=True)
+    failures = []
+    with ZLLMStore(root, workers=2) as store:
+        store.ingest_repos([(ctx.repo_path(rid), rid) for rid, _ in ctx.manifest])
+        victim = next((rid for rid, kind in reversed(ctx.manifest)
+                       if kind == "finetune"), None)
+        serving = [rid for rid, _ in ctx.manifest if rid != victim]
+        expected = {rid: store.retrieve_file(rid, "model.safetensors")
+                    for rid in serving}
+        print(f"server_smoke: ingested {store.stats.n_files} files, serving "
+              f"{len(serving)} repos ({concurrency} concurrent clients)")
+
+        with ServerThread(store, max_concurrency=concurrency) as srv:
+            base = f"http://{srv.host}:{srv.port}"
+            status, _, body = _get(base, "/healthz")
+            assert status == 200 and json.loads(body)["ok"], "healthz failed"
+
+            def sweep(cid: int):
+                n = 0
+                order = serving[cid % len(serving):] + serving[:cid % len(serving)]
+                for rid in order * 2:
+                    _, headers, body = _get(
+                        base, f"/repo/{rid}/file/model.safetensors")
+                    if body != expected[rid]:
+                        failures.append(f"client {cid}: {rid} diverged from "
+                                        f"direct store read")
+                    n += len(body)
+                return n
+
+            with ThreadPoolExecutor(concurrency) as ex:
+                futs = [ex.submit(sweep, c) for c in range(concurrency)]
+                # churn mid-flight: reclaim the victim while clients read
+                if victim is not None:
+                    store.delete_repo(victim)
+                    swept = store.gc()
+                    print(f"server_smoke: mid-flight gc collected "
+                          f"{swept['collected']} version(s)")
+                served = sum(f.result() for f in futs)
+            print(f"server_smoke: {served / 2**20:.1f} MB served byte-exact")
+
+            # tensor endpoint: byte-compare one repo against the source mmap
+            rid = serving[0]
+            with SafetensorsFile(ctx.model_file(rid)) as sf:
+                for ti in sf.infos[:4]:
+                    _, headers, body = _get(base, f"/repo/{rid}/tensor/{ti.name}")
+                    if body != bytes(sf.tensor_bytes(ti.name)):
+                        failures.append(f"tensor {rid}:{ti.name} diverged")
+                    if headers.get("x-tensor-dtype") != ti.dtype_str:
+                        failures.append(f"tensor {rid}:{ti.name} wrong dtype header")
+
+            status, _, body = _get(base, "/stats")
+            stats = json.loads(body)
+            print(f"server_smoke: server stats {stats['server']}")
+
+        report = store.fsck(repair=False, spot_check=4)
+        if not report.ok or report.orphans:
+            failures.append(f"final fsck dirty: {report.summary()}")
+
+    for f in failures:
+        print(f"server_smoke: FAIL {f}", file=sys.stderr)
+    if failures:
+        return 1
+    print("server_smoke: OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", default="default",
+                    choices=["tiny", "small", "default", "large"])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: seconds-scale corpus (alias for --scale tiny)")
+    ap.add_argument("--concurrency", type=int, default=8)
+    args = ap.parse_args()
+    return run(build_ctx("tiny" if args.tiny else args.scale), args.concurrency)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

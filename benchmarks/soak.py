@@ -1,0 +1,182 @@
+"""Nightly soak: ingest/serve/delete/gc churn under live HTTP traffic.
+
+Runs the store as a *system* for ``--minutes``: a stable population of
+repos is served continuously by concurrent HTTP clients (every response
+sha256-verified server-side, byte-compared client-side) while the main
+thread churns a rotating population — perturbed re-registrations, fresh
+ingests through the cross-file pipeline, deletes, gc sweeps and periodic
+light fscks. Finishes with a full fsck (every record decoded +
+sha256-checked) plus the orphan scan; any dangling reference, corruption,
+orphan, client error or byte mismatch fails the run.
+
+The log (``--log``, default /tmp/repro-soak.log) is uploaded as a CI
+artifact by the nightly workflow.
+
+    PYTHONPATH=src python -m benchmarks.soak [--minutes M] [--scale S] [--log PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import threading
+import time
+import urllib.request
+
+from benchmarks.common import Ctx, build_ctx
+from benchmarks.fsck_smoke import _perturbed_copy
+from repro.core.pipeline import ZLLMStore
+from repro.serve.store_server import ServerThread
+
+
+class Log:
+    def __init__(self, path: str):
+        self.path = path
+        self.f = open(path, "w")
+        self.t0 = time.time()
+
+    def line(self, msg: str) -> None:
+        stamp = f"[{time.time() - self.t0:8.1f}s] {msg}"
+        print(stamp, flush=True)
+        self.f.write(stamp + "\n")
+        self.f.flush()
+
+    def close(self) -> None:
+        self.f.close()
+
+
+def run(ctx: Ctx, minutes: float, log_path: str) -> int:
+    root = "/tmp/repro-soak-store"
+    scratch = "/tmp/repro-soak-scratch"
+    shutil.rmtree(root, ignore_errors=True)
+    shutil.rmtree(scratch, ignore_errors=True)
+    log = Log(log_path)
+    failures: list = []
+    stop = threading.Event()
+    client_stats = {"fetches": 0, "bytes": 0}
+    stats_lock = threading.Lock()
+
+    with ZLLMStore(root, workers=2) as store:
+        store.ingest_repos([(ctx.repo_path(rid), rid) for rid, _ in ctx.manifest])
+        stable = [rid for rid, _ in ctx.manifest]  # never churned: always servable
+        originals = {rid: store.retrieve_file(rid, "model.safetensors")
+                     for rid in stable}
+        log.line(f"soak: ingested {store.stats.n_files} files, "
+                 f"{len(stable)} stable repos, {minutes} min of churn ahead")
+
+        with ServerThread(store, max_concurrency=8) as srv:
+            base = f"http://{srv.host}:{srv.port}"
+
+            def client(cid: int):
+                order = stable[cid % len(stable):] + stable[:cid % len(stable)]
+                while not stop.is_set():
+                    for rid in order:
+                        if stop.is_set():
+                            break
+                        try:
+                            with urllib.request.urlopen(
+                                    f"{base}/repo/{rid}/file/model.safetensors",
+                                    timeout=60) as r:
+                                body = r.read()
+                        except Exception as e:
+                            failures.append(f"client {cid}: {rid}: {e!r}")
+                            stop.set()
+                            return
+                        if body != originals[rid]:
+                            failures.append(f"client {cid}: {rid} byte mismatch")
+                            stop.set()
+                            return
+                        with stats_lock:
+                            client_stats["fetches"] += 1
+                            client_stats["bytes"] += len(body)
+
+            clients = [threading.Thread(target=client, args=(i,), daemon=True)
+                       for i in range(4)]
+            for t in clients:
+                t.start()
+
+            deadline = time.time() + minutes * 60
+            rnd = 0
+            churned: list = []  # repo ids added by the soak, oldest first
+            try:
+                while time.time() < deadline and not stop.is_set():
+                    rnd += 1
+                    donor = stable[rnd % len(stable)]
+                    # 1) fresh ingest of a perturbed copy (new repo id) —
+                    #    ingest runs concurrently with live serving
+                    new_rid = f"soak/r{rnd}"
+                    p = os.path.join(scratch, new_rid, "model.safetensors")
+                    _perturbed_copy(ctx.model_file(donor), p)
+                    store.ingest_file(p, new_rid)
+                    churned.append(new_rid)
+                    # 2) re-register an earlier soak repo (copy-on-write gen)
+                    if len(churned) > 1:
+                        again = churned[max(0, len(churned) - 2)]
+                        p2 = os.path.join(scratch, f"re{rnd}", "model.safetensors")
+                        _perturbed_copy(p, p2)
+                        store.ingest_file(p2, again)
+                    # 3) delete the oldest soak repo + gc under traffic
+                    if len(churned) > 3:
+                        victim = churned.pop(0)
+                        store.delete_repo(victim)
+                        swept = store.gc()
+                        log.line(f"round {rnd}: gc collected "
+                                 f"{swept['collected']}, freed "
+                                 f"{swept['reclaimed_bytes']}B")
+                    # 4) periodic light fsck under traffic
+                    if rnd % 5 == 0:
+                        rep = store.fsck(repair=False, spot_check=1)
+                        with stats_lock:
+                            served = dict(client_stats)
+                        log.line(f"round {rnd}: fsck {rep.summary()} | "
+                                 f"served {served['fetches']} fetches, "
+                                 f"{served['bytes'] / 2**20:.1f} MB")
+                        if not rep.ok:
+                            failures.append(f"round {rnd}: fsck dirty: "
+                                            f"{rep.summary()}")
+                            break
+            finally:
+                stop.set()
+                for t in clients:
+                    t.join(timeout=60)
+
+            status = urllib.request.urlopen(f"{base}/stats", timeout=30)
+            log.line(f"server stats: {json.loads(status.read())['server']}")
+
+        # final deep check: every record decoded + sha256-verified, plus the
+        # orphan scan (crash debris would mean the publish protocol leaked)
+        report = store.fsck(repair=False, spot_check=None)
+        log.line(f"final fsck: {report.summary()}")
+        if not report.ok:
+            failures.append(f"final fsck dirty: {report.summary()}")
+        if report.orphans:
+            failures.append(f"orphan containers after churn: {report.orphans}")
+        for rid in stable:  # end-to-end: stable population still bit-exact
+            if store.retrieve_file(rid, "model.safetensors") != originals[rid]:
+                failures.append(f"post-soak byte mismatch: {rid}")
+        with stats_lock:
+            log.line(f"soak: {rnd} churn rounds, {client_stats['fetches']} "
+                     f"fetches, {client_stats['bytes'] / 2**20:.1f} MB served")
+
+    for f in failures:
+        log.line(f"FAIL {f}")
+    log.line("soak: " + ("FAILED" if failures else "OK"))
+    log.close()
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--minutes", type=float, default=2.0)
+    ap.add_argument("--scale", default="tiny",
+                    choices=["tiny", "small", "default", "large"])
+    ap.add_argument("--log", default="/tmp/repro-soak.log")
+    args = ap.parse_args()
+    return run(build_ctx(args.scale), args.minutes, args.log)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

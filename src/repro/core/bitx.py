@@ -40,6 +40,7 @@ __all__ = [
     "BitXReader",
     "xor_delta_planes_np",
     "merge_planes_xor_np",
+    "byte_planes_np",
 ]
 
 MAGIC = b"BITX0001"
@@ -68,6 +69,16 @@ def xor_delta_planes_np(base: np.ndarray, ft: np.ndarray) -> List[np.ndarray]:
     nb = delta.dtype.itemsize
     raw = delta.view(np.uint8).reshape(-1, nb)
     # little-endian: byte column nb-1 is the MSB
+    return [np.ascontiguousarray(raw[:, nb - 1 - i]) for i in range(nb)]
+
+
+def byte_planes_np(x: np.ndarray) -> List[np.ndarray]:
+    """MSB-first byte planes of ``x``'s bit view (the ZipNN split). Shared by
+    ``BitXCodec.encode_planes`` and the process-pool entropy backend, so the
+    two paths split planes identically and stay bit-compatible."""
+    v = _bit_view_np(np.ascontiguousarray(x)).reshape(-1)
+    nb = v.dtype.itemsize
+    raw = v.view(np.uint8).reshape(-1, nb)
     return [np.ascontiguousarray(raw[:, nb - 1 - i]) for i in range(nb)]
 
 
@@ -173,12 +184,9 @@ class BitXCodec:
 
     # -- ZipNN fallback (no base available, §4.4.3) ---------------------------
     def encode_planes(self, x: np.ndarray) -> Tuple[List[bytes], int]:
-        v = _bit_view_np(np.ascontiguousarray(x)).reshape(-1)
-        nb = v.dtype.itemsize
-        raw = v.view(np.uint8).reshape(-1, nb)
-        planes = [np.ascontiguousarray(raw[:, nb - 1 - i]) for i in range(nb)]
+        planes = byte_planes_np(x)
         frames = [self._cctx.compress(p.tobytes()) for p in planes]
-        return frames, int(v.nbytes)
+        return frames, int(sum(p.nbytes for p in planes))
 
     def decode_planes(self, frames: Sequence[bytes], dtype_np: np.dtype, shape) -> np.ndarray:
         nb = np.dtype(dtype_np).itemsize
@@ -305,6 +313,7 @@ class BitXReader:
                 f"process runs {zstd.BACKEND!r} (see repro.core.zstd_compat)")
         self.file_metadata: Dict = header.get("metadata", {})
         self.records = [TensorRecord.from_json(r) for r in header["tensors"]]
+        self._name_to_idx: Optional[Dict[str, int]] = None
         self._payload = view[16 + hlen :]
         self._mmap: Optional[mmap.mmap] = None
         self._file = None
@@ -367,6 +376,17 @@ class BitXReader:
         """Payload bytes the header's plane_sizes promise. A container whose
         actual payload is shorter was truncated — fsck flags it corrupt."""
         return sum(s for r in self.records for s in r.plane_sizes)
+
+    def index_of(self, name: str) -> int:
+        """Record index for a tensor name (KeyError if absent). The map is
+        built lazily once per reader — tensor-granular serving resolves by
+        name on every request, so the lookup must not rescan the records.
+        Safe under concurrent builders: both compute the same dict and the
+        attribute store is atomic."""
+        m = self._name_to_idx
+        if m is None:
+            m = self._name_to_idx = {r.name: i for i, r in enumerate(self.records)}
+        return m[name]
 
     def frames_for(self, idx: int) -> List[memoryview]:
         return [self._payload[b:e] for b, e in self._offsets[idx]]

@@ -89,11 +89,18 @@ class FileDedup:
 
     def scan_file(self, path: str, location: Optional[str] = None) -> Tuple[str, bool]:
         digest, size = sha256_file(path)
+        return digest, self.observe(digest, size, location or path)
+
+    def observe(self, digest: str, size: int, location: Optional[str] = None) -> bool:
+        """Register a whole-file hash computed elsewhere (the pipelined ingest
+        engine hashes upload N+1 on a worker thread while upload N encodes;
+        only this registration runs on the serial decision stage). Returns
+        True when the hash is new to the index."""
         is_new = digest not in self.index
         if is_new:
-            self.index[digest] = location or path
+            self.index[digest] = location or digest
         self.stats.observe(size, is_new)
-        return digest, is_new
+        return is_new
 
     def forget(self, digest: str) -> None:
         """Drop a hash whose last copy was deleted, so a future identical

@@ -62,9 +62,11 @@ class FsckReport:
 
     ``dangling`` — references (tensor hash or file ref) that no longer
     resolve to a live container frame. ``corrupt`` — containers that fail
-    structural or sha256 spot checks. ``repaired``/``quarantined`` record
-    what a ``repair=True`` pass actually did; a repaired reference is not
-    also listed as dangling.
+    structural or sha256 spot checks. ``orphans`` — container files on disk
+    that no live or quarantined version references (crash debris from an
+    interrupted ingest; ``repair=True`` deletes them).
+    ``repaired``/``quarantined`` record what a ``repair=True`` pass actually
+    did; a repaired reference is not also listed as dangling.
     """
 
     checked_versions: int = 0
@@ -73,6 +75,7 @@ class FsckReport:
     spot_checked: int = 0
     dangling: List[Tuple[str, str]] = field(default_factory=list)
     corrupt: List[Tuple[str, str]] = field(default_factory=list)
+    orphans: List[str] = field(default_factory=list)
     repaired: List[Tuple[str, str]] = field(default_factory=list)
     quarantined: List[str] = field(default_factory=list)
 
@@ -89,6 +92,7 @@ class FsckReport:
             "spot_checked": self.spot_checked,
             "n_dangling": len(self.dangling),
             "n_corrupt": len(self.corrupt),
+            "n_orphans": len(self.orphans),
             "n_repaired": len(self.repaired),
             "n_quarantined": len(self.quarantined),
         }
@@ -126,6 +130,28 @@ class ContainerLifecycle:
         a container trivially keeps itself alive while anchored."""
         if src_vid != dst_vid:
             self.edges.setdefault(src_vid, set()).add(dst_vid)
+
+    def set_nbytes(self, key: str, gen: int, nbytes: int) -> None:
+        """Fix up a version's on-disk size after a deferred container write
+        (the pipelined ingest engine registers the version at decision time,
+        before the bytes hit disk)."""
+        v = self.versions.get(make_vid(key, gen))
+        if v is None:
+            return
+        if not v.quarantined:
+            self._live_bytes += nbytes - v.nbytes
+        v.nbytes = nbytes
+
+    def discard(self, key: str, gen: int) -> None:
+        """Drop a version whose container write failed — the inverse of
+        ``register_version`` for a version that never made it to disk.
+        ``max_gen`` is left alone so the generation number is never reused."""
+        v = self.versions.pop(make_vid(key, gen), None)
+        if v is None:
+            return
+        if not v.quarantined:
+            self._live_bytes -= v.nbytes
+        self.edges.pop(v.vid, None)
 
     # -- queries ---------------------------------------------------------
     def get(self, key: str, gen: int) -> Optional[VersionInfo]:

@@ -46,6 +46,35 @@ thread pool; sha256, zstd/zlib and numpy's XOR all release the GIL):
   ``_decode_container`` decodes records across the pool (order restored at
   the join).
 
+Concurrency layer (this store is a *serving system*, not a single-caller
+library — ``repro.serve.store_server`` builds directly on these pieces):
+
+* **Cross-file pipelined ingest** (``ingest_many`` / ``ingest_repos``):
+  stage A (whole-file sha256 + header parse) of upload N+1 runs on the pool
+  while upload N encodes; stage B — the cross-file decision stage — runs
+  strictly serially in submission order and owns ALL global dedup/lifecycle
+  state, so the emitted containers are bit-identical to per-file serial
+  ingest; stage C (merge + container write) is deferred to a dedicated
+  writer thread. Hand-offs are bounded queues (``pipeline_depth``).
+* **Publish epochs:** stage B registers the new version + index entry
+  immediately (later decisions must see them) and marks the container path
+  *pending*; any reader of that path blocks on the per-file publish event
+  until stage C has the bytes on disk — nobody ever maps a torn container.
+* **Process-pool entropy backend** (opt-in ``entropy_procs=N``): the zstd
+  stage — where thread scaling is capped by the measured
+  ``hardware_thread_ceiling`` — ships plane bytes to worker processes;
+  frames are pure functions of (bytes, level, threads), so containers stay
+  bit-identical. Broken/missing fork support degrades to threads.
+* **Pin-counted readers:** the reader LRU stores pinned handles; eviction
+  (overflow, gc, quarantine) closes the mmap deterministically when idle or
+  at the last in-flight release — no fd accumulation under churn, and never
+  a close under a concurrent decode.
+* **Read gate + read generations:** retrievals hold a shared gate for their
+  whole decode; ``gc()`` and fsck quarantine hold it exclusively, so a
+  reader is never handed a reclaimed generation (snapshot isolation).
+  ``read_gen`` increments on every visible mutation; the async serving
+  layer keys its single-flight table and response caches by it.
+
 Container lifecycle & GC (``repro.core.lifecycle``):
 
 * **Generations.** Containers are immutable versions ``key@gN``. Gen 0
@@ -91,21 +120,36 @@ import struct
 import threading
 import time
 import zlib
-from collections import OrderedDict
-from concurrent.futures import Future, ThreadPoolExecutor
+from collections import OrderedDict, deque
+from concurrent.futures import Future, ProcessPoolExecutor, ThreadPoolExecutor
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.bitx import BitXCodec, BitXReader, BitXWriter
+from repro.core import zstd_compat as zstd
+from repro.core.bitx import (BitXCodec, BitXReader, BitXWriter, byte_planes_np,
+                             xor_delta_planes_np)
 from repro.core.clustering import FamilyRegistry
-from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes
+from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes, sha256_file
 from repro.core.lifecycle import ContainerLifecycle, FsckReport, make_vid
 from repro.formats.modelcard import parse_repo_metadata
-from repro.formats.safetensors import STR_TO_DTYPE, SafetensorsFile
+from repro.formats.safetensors import (STR_TO_DTYPE, SafetensorsFile,
+                                       read_header_blob)
 
 __all__ = ["ZLLMStore", "IngestResult", "StoreStats"]
+
+
+def _entropy_compress(level: int, threads: int, blobs: List[bytes]) -> List[bytes]:
+    """Entropy-code ``blobs`` in a worker *process* (the opt-in
+    ``entropy_procs`` backend for the stage where thread scaling is capped by
+    the GIL-adjacent hardware ceiling). Must stay a module-level function so
+    ``ProcessPoolExecutor`` can pickle it. Frames are a pure function of
+    (bytes, level, threads, backend), so routing the entropy stage through a
+    child process cannot change the emitted container bytes."""
+    c = zstd.ZstdCompressor(level=level, threads=threads)
+    return [c.compress(b) for b in blobs]
 
 INDEX_FORMAT = 2  # v1 = PR-1 (no generations); v2 adds lifecycle + pinned gens
 
@@ -161,6 +205,92 @@ class StoreStats:
     @property
     def ingest_throughput_mbps(self) -> float:
         return (self.raw_bytes / 2**20) / self.ingest_seconds if self.ingest_seconds else 0.0
+
+
+class _ReadGate:
+    """Writer-priority read/write gate + monotonic read generation.
+
+    Retrievals hold the gate *shared* for their whole decode; destructive
+    admin operations (``gc()``, fsck quarantine) hold it *exclusive*, so a
+    reader is never handed a reclaimed generation mid-decode — the store-side
+    half of the serving layer's snapshot isolation. ``read_gen`` increments
+    on every visible mutation (ingest commit, delete, each exclusive
+    section); the async engine keys its single-flight table and response
+    cache by it, so a request issued after a mutation never coalesces onto a
+    stale in-flight decode.
+
+    Writer priority: arriving readers queue behind a waiting writer, so a
+    steady read load cannot starve ``gc()``. Do not nest ``read()`` inside
+    ``read()`` on one thread — a pending writer between the two acquisitions
+    would deadlock (entry points below never nest)."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+        self.read_gen = 0
+
+    @contextmanager
+    def read(self):
+        with self._cv:
+            while self._writer or self._writers_waiting:
+                self._cv.wait()
+            self._readers += 1
+            gen = self.read_gen
+        try:
+            yield gen
+        finally:
+            with self._cv:
+                self._readers -= 1
+                if not self._readers:
+                    self._cv.notify_all()
+
+    @contextmanager
+    def write(self):
+        with self._cv:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cv.wait()
+                self._writer = True
+            finally:
+                self._writers_waiting -= 1
+                if not self._writer:
+                    # interrupted (e.g. KeyboardInterrupt) while waiting: a
+                    # leaked waiting count would block readers forever
+                    self._cv.notify_all()
+        try:
+            yield
+        finally:
+            with self._cv:
+                self._writer = False
+                self.read_gen += 1
+                self._cv.notify_all()
+
+    def bump(self) -> None:
+        """Advance ``read_gen`` for a non-destructive mutation (ingest commit,
+        delete): existing readers are unaffected (copy-on-write generations),
+        but caches keyed by read_gen must stop serving the old view."""
+        with self._cv:
+            self.read_gen += 1
+
+
+class _ReaderHandle:
+    """Pin-counted cache entry for one mmap'd :class:`BitXReader`.
+
+    Eviction (LRU overflow, gc, quarantine) *retires* the handle: the map is
+    closed immediately when unpinned, else deterministically by the last
+    ``release`` — no reliance on GC finalizers, so container fds cannot
+    accumulate under churn (the PR-2-era leak), and a reader mid-decode on
+    another thread is never yanked."""
+
+    __slots__ = ("reader", "pins", "retired")
+
+    def __init__(self, reader: BitXReader):
+        self.reader = reader
+        self.pins = 0
+        self.retired = False
 
 
 class _LRUCache:
@@ -258,6 +388,54 @@ class _BaseTensorMap:
                 self._sf = None
 
 
+class _PreparedUpload:
+    """Stage-A output of the cross-file pipeline: whole-file hash, open
+    safetensors map, header blob. Pure reads only — no store state is
+    touched, so preparation of upload N+1 can run on a worker thread while
+    upload N encodes."""
+
+    __slots__ = ("path", "repo_id", "filename", "key", "declared_base",
+                 "raw_size", "fhash", "sf", "header_blob", "t0", "error")
+
+    def __init__(self, path: str, repo_id: str, filename: str,
+                 declared_base: Optional[str]):
+        self.path = path
+        self.repo_id = repo_id
+        self.filename = filename
+        self.key = f"{repo_id}/{filename}"
+        self.declared_base = declared_base
+        self.t0 = time.perf_counter()
+        self.raw_size = 0
+        self.fhash = ""
+        self.sf: Optional[SafetensorsFile] = None
+        self.header_blob = b""
+        self.error: Optional[BaseException] = None
+
+    def close(self) -> None:
+        if self.sf is not None:
+            self.sf.close()
+            self.sf = None
+
+
+@dataclass
+class _PendingWrite:
+    """A container whose decisions are committed (stage B) but whose
+    merge+write is still in flight (stage C on the writer thread).
+    ``prev_rec`` snapshots the index record this upload replaced (a
+    re-registration), so a failed write can restore it instead of leaving
+    the key unretrievable."""
+
+    pf: _PreparedUpload
+    res: IngestResult
+    writer: BitXWriter
+    plan: List
+    cpath: str
+    key: str
+    gen: int
+    prev_rec: Optional[Dict] = None
+    future: Optional[Future] = None
+
+
 class ZLLMStore:
     """Content-addressed zLLM store rooted at a directory.
 
@@ -270,7 +448,8 @@ class ZLLMStore:
                  sample_elems: int = 65536, use_bitx: bool = True,
                  use_tensor_dedup: bool = True, workers: int = 0,
                  zstd_threads: int = 0, tensor_cache_bytes: int = 256 << 20,
-                 reader_cache_size: int = 16):
+                 reader_cache_size: int = 16, pipeline_depth: int = 2,
+                 entropy_procs: int = 0):
         self.root = root
         os.makedirs(os.path.join(root, "containers"), exist_ok=True)
         self.zstd_level = zstd_level
@@ -278,6 +457,12 @@ class ZLLMStore:
         self.use_bitx = use_bitx
         self.use_tensor_dedup = use_tensor_dedup
         self.workers = max(0, int(workers))
+        # cross-file pipelining: how many uploads ahead of the decision stage
+        # stage A (whole-file sha256 + header parse) may run, and how many
+        # deferred container writes may be in flight (the bounded hand-off)
+        self.pipeline_depth = max(0, int(pipeline_depth))
+        # opt-in process-pool entropy backend (0 = entropy on worker threads)
+        self.entropy_procs = max(0, int(entropy_procs))
         self.file_dedup = FileDedup()
         self.tensor_dedup = TensorDedup()
         self.families = FamilyRegistry(threshold=threshold, sample_elems=sample_elems)
@@ -299,15 +484,34 @@ class ZLLMStore:
         self.results: List[IngestResult] = []
         # caches
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._writer_pool: Optional[ThreadPoolExecutor] = None
+        self._entropy_pool: Optional[ProcessPoolExecutor] = None
+        self._entropy_failed = False
         self._cache_lock = threading.RLock()
-        # no on_evict close: an evicted reader may still be mid-decode on
-        # another thread (or held across _decode_container's record loop);
-        # dropping the reference lets GC finalize the mmap once the last
-        # frame view dies. Explicit close happens only in store.close().
-        self._reader_cache = _LRUCache(reader_cache_size)
+        # readers are pin-counted handles: eviction retires a handle and the
+        # mmap closes deterministically once the last in-flight decode
+        # releases it (see _ReaderHandle) — never mid-decode, never left to GC
+        self._reader_cache = _LRUCache(reader_cache_size,
+                                       on_evict=self._retire_reader)
         self._tensor_cache = _LRUCache(max_items=4096, max_bytes=tensor_cache_bytes)
         self._base_maps: Dict[str, _BaseTensorMap] = {}
+        # parsed name->(idx, dtype, shape) maps of near-dup headers, keyed by
+        # the entry's pinned target + content hash (tensor-granular serving
+        # must not re-parse the header blob per request)
+        self._near_dup_name_cache = _LRUCache(64)
         self.base_map_stats = {"hits": 0, "misses": 0, "primed": 0, "invalidations": 0}
+        # publish epochs: container paths whose deferred write has not hit
+        # disk yet; readers (near-dup probe, concurrent retrieval) block on
+        # the event instead of opening a half-written file
+        self._publish_lock = threading.Lock()
+        self._pending_publish: Dict[str, threading.Event] = {}
+        # read/write gate + read generation (serving snapshot isolation)
+        self._gate = _ReadGate()
+        # admin mutex: ingest batches, deletes, gc and fsck are mutually
+        # exclusive (they all mutate index/lifecycle/pin state); retrievals
+        # never take it. Reentrant for delete_repo -> delete_file. Lock
+        # order is always admin lock THEN gate — never the reverse.
+        self._admin_lock = threading.RLock()
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -320,16 +524,46 @@ class ZLLMStore:
                                             thread_name_prefix="zllm")
         return self._pool
 
+    def _writer_executor(self) -> ThreadPoolExecutor:
+        """Single dedicated thread for deferred container merges/writes. It
+        blocks on encode futures, so it must NOT share the main pool: with
+        every pool slot occupied by a blocked merge, the encode jobs they
+        wait on could never run."""
+        if self._writer_pool is None:
+            self._writer_pool = ThreadPoolExecutor(max_workers=1,
+                                                   thread_name_prefix="zllm-write")
+        return self._writer_pool
+
+    def _entropy_executor(self) -> Optional[ProcessPoolExecutor]:
+        """Opt-in process pool for the entropy stage. Gated: sandboxes
+        without working fork/spawn fall back to in-thread compression (the
+        containers stay bit-identical either way)."""
+        if self.entropy_procs <= 0 or self._entropy_failed:
+            return None
+        if self._entropy_pool is None:
+            pool = None
+            try:
+                pool = ProcessPoolExecutor(max_workers=self.entropy_procs)
+                # probe: surface broken process spawning here, not mid-encode
+                pool.submit(_entropy_compress, 1, 0, [b""]).result(timeout=60)
+                self._entropy_pool = pool
+            except Exception:
+                self._entropy_failed = True
+                if pool is not None:  # reap any workers the probe spawned
+                    pool.shutdown(wait=False, cancel_futures=True)
+                return None
+        return self._entropy_pool
+
     def close(self):
-        """Shut the worker pool down and drop mmap-backed caches. Must not
+        """Shut the worker pools down and drop mmap-backed caches. Must not
         race in-flight retrievals (shut down your own callers first)."""
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        for attr in ("_pool", "_writer_pool", "_entropy_pool"):
+            pool = getattr(self, attr)
+            if pool is not None:
+                pool.shutdown(wait=True)
+                setattr(self, attr, None)
         with self._cache_lock:
-            for reader in self._reader_cache.values():
-                reader.close()
-            self._reader_cache.clear()
+            self._reader_cache.clear()   # on_evict retires + closes handles
             self._tensor_cache.clear()
         for bm in {id(m): m for m in self._base_maps.values()}.values():
             bm.close()
@@ -345,45 +579,203 @@ class ZLLMStore:
     # Ingest
     # ------------------------------------------------------------------
     def ingest_repo(self, repo_dir: str, repo_id: Optional[str] = None) -> List[IngestResult]:
-        repo_id = repo_id or os.path.basename(os.path.normpath(repo_dir))
-        meta = parse_repo_metadata(repo_dir)
-        if meta.get("base_model"):
-            self.metadata_base[repo_id] = meta["base_model"]
-        out = []
-        for fname in sorted(os.listdir(repo_dir)):
-            if fname.endswith(".safetensors"):
-                out.append(self.ingest_file(os.path.join(repo_dir, fname), repo_id, fname))
-        return out
+        return self.ingest_repos([(repo_dir, repo_id)])
+
+    def ingest_repos(self, repo_dirs: Iterable) -> List[IngestResult]:
+        """Pipelined multi-repo ingest: every shard of every repo flows
+        through one bounded cross-file pipeline, so FileDedup hashing of
+        upload N+1 overlaps the tensor encode of upload N even across repo
+        boundaries. ``repo_dirs`` items are ``repo_dir`` or
+        ``(repo_dir, repo_id)``."""
+        specs = []
+        for item in repo_dirs:
+            repo_dir, repo_id = item if isinstance(item, tuple) else (item, None)
+            repo_id = repo_id or os.path.basename(os.path.normpath(repo_dir))
+            meta = parse_repo_metadata(repo_dir)
+            if meta.get("base_model"):
+                self.metadata_base[repo_id] = meta["base_model"]
+            for fname in sorted(os.listdir(repo_dir)):
+                if fname.endswith(".safetensors"):
+                    specs.append((os.path.join(repo_dir, fname), repo_id, fname, None))
+        return self.ingest_many(specs)
 
     def ingest_file(self, path: str, repo_id: str, filename: Optional[str] = None,
                     declared_base: Optional[str] = None) -> IngestResult:
-        filename = filename or os.path.basename(path)
-        key = f"{repo_id}/{filename}"
-        raw_size = os.path.getsize(path)
-        t0 = time.perf_counter()
+        return self.ingest_many([(path, repo_id, filename, declared_base)])[0]
 
-        # ① FileDedup
-        fhash, is_new_file = self.file_dedup.scan_file(path, key)
+    def ingest_many(self, uploads: Iterable, prefetch: Optional[int] = None) -> List[IngestResult]:
+        """Cross-file pipelined ingest over a batch of uploads.
+
+        ``uploads`` items are ``(path, repo_id)``, ``(path, repo_id,
+        filename)`` or ``(path, repo_id, filename, declared_base)``.
+
+        Three stages per upload, hand-offs bounded by ``prefetch`` (default
+        ``pipeline_depth``):
+
+        * **Stage A (pool):** whole-file sha256 + safetensors open + header
+          read — pure reads, so upload N+1's FileDedup hashing overlaps
+          upload N's tensor encode.
+        * **Stage B (this thread, strictly in submission order):** the
+          decision stage. It owns ALL global state — dedup indexes, family
+          registry, lifecycle graph, tensor pins — so pipelined decisions
+          are literally the serial decisions, and the containers stay
+          bit-identical to per-file serial ingest (tested). The new version
+          and index entry are published here (per-file publish epoch) while
+          the bytes are still being encoded; readers of the not-yet-written
+          path block on the epoch instead of seeing a torn file.
+        * **Stage C (writer thread):** await the encode futures, merge in
+          tensor order, write the container, release the publish epoch.
+
+        ``workers <= 1`` or ``prefetch == 0`` degrades to the serial
+        reference path (all three stages inline per file).
+
+        A failed write rolls back its own decisions and poisons the rest of
+        the batch (later uploads may have dedup'd against the failed
+        container); committed earlier uploads are kept. Ingest is
+        single-caller: run one ingest batch at a time (concurrent *serving*
+        is fine — that is what the read gate is for). Admin operations —
+        gc, delete, fsck — take the same admin lock, so calling them from
+        another thread mid-batch is safe: they wait for the batch.
+        """
+        with self._admin_lock:
+            return self._ingest_many_locked(uploads, prefetch)
+
+    def _ingest_many_locked(self, uploads: Iterable,
+                            prefetch: Optional[int]) -> List[IngestResult]:
+        specs = []
+        for u in uploads:
+            path, repo_id, filename, declared = (tuple(u) + (None, None))[:4]
+            specs.append((path, repo_id, filename or os.path.basename(path), declared))
+        depth = self.pipeline_depth if prefetch is None else max(0, int(prefetch))
+        pool = self._executor()
+        # a batch of one has nothing to overlap with: run it inline (the
+        # PR-1 latency path) instead of paying the pool/writer-thread handoff
+        pipelined = pool is not None and depth > 0 and len(specs) > 1
+        out: List[IngestResult] = []
+        inflight: "deque[_PendingWrite]" = deque()
+        ahead: "deque[Future]" = deque()
+        # (key, res) of whole-file-dedup / near-dup entries decided in this
+        # batch: if the batch fails, any of these pinned to a rolled-back
+        # container must be undone too (their bytes exist nowhere else)
+        ref_entries: List[Tuple[str, IngestResult]] = []
+        spec_iter = iter(specs)
+        batch_t0 = time.perf_counter()
+
+        def top_up():
+            while len(ahead) <= depth:
+                spec = next(spec_iter, None)
+                if spec is None:
+                    break
+                ahead.append(pool.submit(self._prepare_upload, *spec))
+
+        try:
+            if pipelined:
+                top_up()
+                while ahead:
+                    pf = ahead.popleft().result()
+                    top_up()  # keep stage A ``depth`` uploads ahead
+                    res, pw = self._ingest_decide(pf)
+                    out.append(res)
+                    self.results.append(res)
+                    if pw is None:
+                        if res.file_dedup_hit or res.near_dup_hit:
+                            ref_entries.append((f"{res.repo_id}/{res.filename}",
+                                                res))
+                        self._account_stats(res)
+                        continue
+                    pw.future = self._writer_executor().submit(
+                        self._finish_container, pw)
+                    inflight.append(pw)
+                    while inflight and inflight[0].future.done():
+                        self._commit_write(inflight.popleft())
+                    while len(inflight) > depth:  # bound in-flight writes
+                        self._commit_write(inflight.popleft())
+            else:
+                for spec in specs:
+                    pf = self._prepare_upload(*spec)
+                    res, pw = self._ingest_decide(pf)
+                    out.append(res)
+                    self.results.append(res)
+                    if pw is None:
+                        self._account_stats(res)
+                    else:
+                        self._commit_write(pw)
+            while inflight:
+                self._commit_write(inflight.popleft())
+        except BaseException:
+            # Fail fast but leave the store consistent: everything decided
+            # after the failure may have resolved against the failed
+            # container, so roll the whole in-flight suffix back (even
+            # writes that landed — they become unreachable and unsound),
+            # then undo dedup/near-dup entries whose pinned target just got
+            # rolled back, and release prefetched file handles.
+            while inflight:
+                pw = inflight.popleft()
+                if pw.future is not None:
+                    try:
+                        pw.future.result()
+                    except BaseException:
+                        pass
+                self._rollback_failed_write(pw)
+            for key, res in ref_entries:
+                self._rollback_ref_entry(key, res)
+            while ahead:
+                try:
+                    ahead.popleft().result().close()
+                except BaseException:
+                    pass
+            raise
+        finally:
+            # batch wall-clock, not the sum of (overlapping) per-file times
+            self.stats.ingest_seconds += time.perf_counter() - batch_t0
+        return out
+
+    def _prepare_upload(self, path: str, repo_id: str, filename: str,
+                        declared_base: Optional[str]) -> "_PreparedUpload":
+        """Stage A: pure reads only (no store state) — safe on any worker."""
+        pf = _PreparedUpload(path, repo_id, filename, declared_base)
+        try:
+            pf.raw_size = os.path.getsize(path)
+            pf.fhash, _ = sha256_file(path)
+            pf.sf = SafetensorsFile(path)
+            pf.sf.advise("sequential")  # ingest walks tensors in order
+            pf.header_blob = self._read_header_blob(path)
+        except BaseException as e:
+            pf.close()
+            pf.error = e
+        return pf
+
+    def _ingest_decide(self, pf: "_PreparedUpload") -> Tuple[IngestResult, Optional["_PendingWrite"]]:
+        """Stage B: the serial decision stage (see :meth:`ingest_many`).
+        Returns ``(result, pending_write)``; the pending write is ``None``
+        when the upload fully resolved as a whole-file dup or near-dup."""
+        if pf.error is not None:
+            raise pf.error
+        key, fhash, raw_size = pf.key, pf.fhash, pf.raw_size
+
+        # ① FileDedup (hash computed in stage A, registered here, in order)
+        is_new_file = self.file_dedup.observe(fhash, raw_size, key)
         ref = self.file_hash_to_key.get(fhash)
         if not is_new_file and ref is not None and ref in self.file_index:
-            res = IngestResult(repo_id, filename, raw_size, 0, file_dedup_hit=True,
-                               ingest_seconds=time.perf_counter() - t0)
+            pf.close()
+            res = IngestResult(pf.repo_id, pf.filename, raw_size, 0,
+                               file_dedup_hit=True,
+                               ingest_seconds=time.perf_counter() - pf.t0)
             if ref != key:
                 self._set_index_entry(key, self._pinned_ref(ref, fhash, raw_size))
             # ref == key: identical content re-ingested under its own key —
             # keep the existing container record (a self-referencing dedup
             # record would send retrieval into infinite recursion)
-            self._account(res)
             self.stats.n_file_dedup += 1
-            return res
+            return res, None
         self.file_hash_to_key[fhash] = key
 
-        res = IngestResult(repo_id, filename, raw_size, 0)
+        res = IngestResult(pf.repo_id, pf.filename, raw_size, 0)
         entries: List[Tuple[str, str, Tuple[int, ...], str]] = []
-
-        with SafetensorsFile(path) as sf:
-            sf.advise("sequential")  # ingest walks tensors in serialization order
-            header_blob = self._read_header_blob(path)
+        sf = pf.sf
+        gen: Optional[int] = None
+        pw: Optional[_PendingWrite] = None
+        try:
             get_hash = self._hash_stage(sf)
             # near-identical re-ingest (same tensors, different header
             # metadata): store the header + a pinned reference, no container.
@@ -391,41 +783,201 @@ class ZLLMStore:
             # so the hash/encode overlap of the parallel engine is preserved.
             near = self._near_dup_probe(sf, get_hash)
             if near is not None:
-                return self._ingest_near_dup(res, sf, key, fhash, raw_size,
-                                             header_blob, near, t0)
+                res = self._ingest_near_dup(res, sf, key, fhash, raw_size,
+                                            pf.header_blob, near, pf.t0)
+                pf.close()  # a full probe match awaited every tensor hash
+                return res, None
             # ③a/③b family resolution (before encoding, so BitX knows its base)
-            base_id, base_source = self._resolve_base(repo_id, path, declared_base)
+            base_id, base_source = self._resolve_base(pf.repo_id, pf.path,
+                                                      pf.declared_base)
             res.base_id, res.base_source = base_id, base_source
             base_tensors = self._base_tensor_map(base_id) if base_id else {}
             gen = self.lifecycle.next_generation(key)
             writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
-            self._encode_tensors(sf, writer, res, key, gen, base_tensors,
-                                 entries, get_hash)
+            plan = self._plan_tensors(sf, writer, res, key, gen, base_tensors,
+                                      entries, get_hash)
+            writer.file_metadata.update({
+                "repo_id": pf.repo_id, "filename": pf.filename, "file_hash": fhash,
+                "base_id": base_id or "", "raw_size": raw_size,
+                "header_blob_z": base64.b64encode(zlib.compress(pf.header_blob)).decode(),
+            })
+            cpath = self._container_path(key, gen)
+            pw = _PendingWrite(pf, res, writer, plan, cpath, key, gen,
+                               prev_rec=self.file_index.get(key))
+            # Publish protocol: the version + index entry become visible NOW
+            # so later decisions dedup/pin against this upload exactly as in
+            # serial mode, while readers block on the publish epoch until the
+            # bytes are actually on disk (size 0 is fixed up at commit).
+            self.lifecycle.register_version(key, gen, cpath, 0)
+            self._mark_pending(cpath)
+            self._set_index_entry(key, {"kind": "container", "path": cpath, "gen": gen,
+                                        "file_hash": fhash, "raw_size": raw_size,
+                                        "base_id": base_id or ""})
+            # register as a family base iff stored standalone (no base of its own)
+            if base_id is None:
+                self.families.register(pf.repo_id, pf.path)
+                self._register_base(pf.repo_id, key, pf.path, entries)
+            return res, pw
+        except BaseException:
+            # Stage B failed (truncated source, unreadable base, ...): undo
+            # whatever this upload published. With a _PendingWrite built, the
+            # full write-rollback applies (index entry, version, pins, base
+            # bindings, publish epoch); before that, only the tensor pins of
+            # the planning loop can exist — scrub them so a later ingest can
+            # never write a dedup record against a container that was never
+            # registered. The source mmap is released either way (a closed fd
+            # does not invalidate views still held by in-flight encode jobs).
+            if pw is not None:
+                self._rollback_failed_write(pw)
+            else:
+                # the whole-file hash registration above must not survive
+                # either: a later identical upload would false-dedup against
+                # this key's OLD generation (different bytes)
+                self._release_file_hash(key, fhash)
+                if gen is not None:
+                    self._scrub_tensor_pins(key, gen)
+            pf.close()
+            raise
 
-        writer.file_metadata.update({
-            "repo_id": repo_id, "filename": filename, "file_hash": fhash,
-            "base_id": base_id or "", "raw_size": raw_size,
-            "header_blob_z": base64.b64encode(zlib.compress(header_blob)).decode(),
-        })
-        cpath = self._container_path(key, gen)
-        os.makedirs(os.path.dirname(cpath), exist_ok=True)
-        stored = writer.write(cpath)
+    def _scrub_tensor_pins(self, key: str, gen: int) -> int:
+        """Drop every tensor-pool pin into container version (key, gen).
+        Called exactly when a generation dies outside gc — failed-write
+        rollback, stage-B rollback, quarantine — so no future ingest can
+        dedup against payloads that are gone (gc has its own multi-version
+        sweep)."""
+        stale = [h for h, (k, g, _) in self.tensor_locations.items()
+                 if k == key and g == gen]
+        for h in stale:
+            del self.tensor_locations[h]
+            self.tensor_dedup.forget(h)
+        return len(stale)
+
+    def _finish_container(self, pw: "_PendingWrite") -> int:
+        """Stage C: await the encode futures, merge strictly in tensor order,
+        write the container, release the publish epoch. Runs inline (serial)
+        or on the writer thread (pipelined); the bytes are identical."""
+        try:
+            self._merge_plan(pw.writer, pw.plan)
+            os.makedirs(os.path.dirname(pw.cpath), exist_ok=True)
+            stored = pw.writer.write(pw.cpath)
+        except BaseException:
+            # drain the remaining encode futures before the finally closes
+            # the source mmap (mirrors _plan_tensors' stage-B drain)
+            for _, _, _, _, payload in pw.plan:
+                if isinstance(payload, Future) and not payload.cancel():
+                    payload.exception()  # wait + mark retrieved
+            raise
+        finally:
+            pw.pf.close()
+            # unblock epoch waiters even on failure: they fail at open
+            # instead of hanging, and _commit_write rolls the decisions back
+            self._publish(pw.cpath)
         with self._cache_lock:
-            self._reader_cache.pop(cpath)  # generation paths are never reused,
-            # but drop any stale mmap defensively
-        res.stored_bytes = stored
-        res.ingest_seconds = time.perf_counter() - t0
+            self._reader_cache.pop(pw.cpath)  # generation paths are never
+            # reused, but drop any stale mmap defensively
+        return stored
 
-        self.lifecycle.register_version(key, gen, cpath, stored)
-        self._set_index_entry(key, {"kind": "container", "path": cpath, "gen": gen,
-                                    "file_hash": fhash, "raw_size": raw_size,
-                                    "base_id": base_id or ""})
-        # register as a family base iff stored standalone (no base of its own)
-        if base_id is None:
-            self.families.register(repo_id, path)
-            self._register_base(repo_id, key, path, entries)
-        self._account(res)
-        return res
+    def _commit_write(self, pw: "_PendingWrite") -> None:
+        """Harvest one deferred write in submission order: fix up sizes and
+        account on success, roll the decisions back on failure."""
+        try:
+            stored = (pw.future.result() if pw.future is not None
+                      else self._finish_container(pw))
+        except BaseException:
+            self._rollback_failed_write(pw)
+            raise
+        pw.res.stored_bytes = stored
+        pw.res.ingest_seconds = time.perf_counter() - pw.pf.t0
+        self.lifecycle.set_nbytes(pw.key, pw.gen, stored)
+        self._account_stats(pw.res)
+
+    def _rollback_failed_write(self, pw: "_PendingWrite") -> None:
+        """Undo stage-B decisions for a container that never (soundly) made
+        it to disk: index entry, lifecycle version, tensor pins, base/family
+        registration, publish epoch, the on-disk file if any, and the
+        result row. A re-registration restores the PREVIOUS index record —
+        the old generation is still on disk (copy-on-write) and must stay
+        retrievable; only its base/family bindings are conservatively
+        dropped (new fine-tunes store standalone until the next successful
+        base registration — a space cost, never a correctness one)."""
+        rec = self.file_index.get(pw.key)
+        if (rec is not None and rec.get("kind") == "container"
+                and rec.get("gen") == pw.gen):
+            if pw.prev_rec is not None and self._rec_resolvable(pw.key,
+                                                               pw.prev_rec):
+                # re-point the key at the record it had before this upload;
+                # _set_index_entry releases the failed upload's file hash
+                self._set_index_entry(pw.key, pw.prev_rec)
+                prev_hash = pw.prev_rec.get("file_hash")
+                if prev_hash:  # re-arm whole-file dedup for the old bytes
+                    self.file_hash_to_key.setdefault(prev_hash, pw.key)
+                    self.file_dedup.index.setdefault(prev_hash, pw.key)
+            else:
+                # no previous record, or it pins a generation that was
+                # itself rolled back earlier in this batch (the key was
+                # ingested twice) — restoring it would dangle
+                self.file_index.pop(pw.key, None)
+                self._release_file_hash(pw.key, pw.pf.fhash)
+        self.lifecycle.discard(pw.key, pw.gen)
+        self._scrub_tensor_pins(pw.key, pw.gen)
+        self._unbind_base(pw.key, pw.pf.repo_id)
+        self._publish(pw.cpath)  # no-op unless pending: waiters must not hang
+        with self._cache_lock:
+            # a reader may have slipped in between epoch release and this
+            # rollback; retire it so the deleted file's mmap/fd is dropped
+            self._reader_cache.pop(pw.cpath)
+        try:
+            os.remove(pw.cpath)
+        except OSError:
+            pass
+        try:
+            self.results.remove(pw.res)
+        except ValueError:
+            pass
+
+    def _rec_resolvable(self, key: str, rec: Dict) -> bool:
+        """Does this index record point at a live container version?"""
+        if rec.get("kind") == "container":
+            return self.lifecycle.exists(key, rec.get("gen", 0))
+        return self.lifecycle.exists(rec["ref"], rec["ref_gen"])
+
+    def _rollback_ref_entry(self, key: str, res: IngestResult) -> None:
+        """Undo a whole-file-dedup / near-dup index entry whose pinned
+        target was rolled back with the failed batch suffix: the entry's
+        bytes exist nowhere, so keeping it would claim data the store
+        cannot serve. Leaves resolvable entries alone."""
+        rec = self.file_index.get(key)
+        if (rec is None or rec.get("kind") not in ("file_dedup", "near_dup")
+                or self.lifecycle.exists(rec["ref"], rec["ref_gen"])):
+            return
+        self.file_index.pop(key)
+        fhash = rec.get("file_hash")
+        if fhash:
+            self._release_file_hash(key, fhash)
+        # reverse the _account_stats fold and the hit counters
+        self.stats.raw_bytes -= res.raw_bytes
+        self.stats.stored_bytes -= res.stored_bytes
+        self.stats.n_files -= 1
+        if rec["kind"] == "file_dedup":
+            self.stats.n_file_dedup -= 1
+        else:
+            self.stats.n_near_dup -= 1
+        try:
+            self.results.remove(res)
+        except ValueError:
+            pass
+
+    def _unbind_base(self, key: str, repo_id: str) -> None:
+        """Drop base/family registrations that point at ``key`` (shared by
+        delete_file and the ingest rollback paths): without this, bit-
+        distance matching would keep electing a base whose tensor map is
+        gone — a silent zipnn fallback for new fine-tunes."""
+        for bid in (key, repo_id):
+            if self.base_key_of.get(bid) == key:
+                self.invalidate_base_map(bid)
+                self.base_paths.pop(bid, None)
+                self.base_key_of.pop(bid, None)
+                self.families.unregister(bid)
 
     def _set_index_entry(self, key: str, rec: Dict) -> None:
         """Commit an index record, releasing the whole-file hash of any
@@ -441,6 +993,7 @@ class ZLLMStore:
         new_hash = rec.get("file_hash")
         if new_hash:
             self._keys_by_file_hash.setdefault(new_hash, set()).add(key)
+        self._gate.bump()  # new view: serving caches keyed by read_gen roll over
 
     def _release_file_hash(self, key: str, fhash: str) -> None:
         """``key`` no longer serves the bytes hashing to ``fhash``: repoint
@@ -503,7 +1056,6 @@ class ZLLMStore:
                                     "n_tensors": n, "header_blob_z": blob_z})
         res.stored_bytes = len(blob_z)
         res.ingest_seconds = time.perf_counter() - t0
-        self._account(res)
         self.stats.n_near_dup += 1
         return res
 
@@ -522,13 +1074,13 @@ class ZLLMStore:
             return None
         tkey, tgen, _ = loc
         try:
-            reader = self._reader(self.lifecycle.version_path(tkey, tgen))
+            with self._reader_ctx(self.lifecycle.version_path(tkey, tgen)) as reader:
+                recs = reader.records
+                if len(recs) == len(sf.infos) and all(
+                        recs[i].self_hash == get_hash(i) for i in range(len(recs))):
+                    return tkey, tgen
         except (KeyError, RuntimeError, OSError, ValueError):
             return None
-        recs = reader.records
-        if len(recs) == len(sf.infos) and all(
-                recs[i].self_hash == get_hash(i) for i in range(len(recs))):
-            return tkey, tgen
         return None
 
     def _hash_stage(self, sf: SafetensorsFile) -> Callable[[int], str]:
@@ -553,27 +1105,43 @@ class ZLLMStore:
         return get_hash
 
     # ------------------------------------------------------------------
-    def _encode_tensors(self, sf: SafetensorsFile, writer: BitXWriter,
-                        res: IngestResult, key: str, gen: int,
-                        base_tensors: Dict[str, Tuple],
-                        entries: List[Tuple[str, str, Tuple[int, ...], str]],
-                        get_hash: Callable[[int], str]) -> None:
-        """(Serial) decide → encode → ordered merge, per pre-hashed tensor.
-
-        ``workers>1`` overlaps the encode stage across the pool; the decision
-        loop and the merge stay serial and in tensor order, so the emitted
-        container is bit-identical to the serial path. Every dedup hit and
-        BitX base reference also records a lifecycle edge from this container
-        version to the pinned version it resolves into — the refcount graph
-        gc() sweeps against.
+    def _plan_tensors(self, sf: SafetensorsFile, writer: BitXWriter,
+                      res: IngestResult, key: str, gen: int,
+                      base_tensors: Dict[str, Tuple],
+                      entries: List[Tuple[str, str, Tuple[int, ...], str]],
+                      get_hash: Callable[[int], str]) -> List[Tuple]:
+        """Serial decision loop per pre-hashed tensor (stage 2 of the
+        per-file pipeline): dedup lookups, codec selection and
+        ``tensor_locations`` registration are order-dependent, so they are
+        never parallelized. Encode jobs fan out across the pool; the
+        returned plan is merged strictly in tensor order by
+        :meth:`_merge_plan`, so the emitted container is bit-identical to
+        the serial path. Every dedup hit and BitX base reference also
+        records a lifecycle edge from this container version to the pinned
+        version it resolves into — the refcount graph gc() sweeps against.
         """
         pool = self._executor()
+        epool = self._entropy_executor()
         infos = sf.infos
         self_vid = make_vid(key, gen)
 
-        # Stage 2: serial decision loop (order-dependent: dedup lookups and
-        # tensor_locations registration must see earlier tensors of this file)
         plan: List[Tuple[Any, str, str, Optional[str], Any]] = []
+        try:
+            self._plan_loop(sf, writer, res, key, gen, self_vid, base_tensors,
+                            entries, get_hash, pool, epool, plan)
+        except BaseException:
+            # drain already-submitted encode futures before the caller
+            # releases the source mmap — doomed jobs must not keep running
+            for _, _, _, _, payload in plan:
+                if isinstance(payload, Future) and not payload.cancel():
+                    payload.exception()  # wait + swallow
+            raise
+        return plan
+
+    def _plan_loop(self, sf, writer, res, key, gen, self_vid, base_tensors,
+                   entries, get_hash, pool, epool,
+                   plan: List[Tuple[Any, str, str, Optional[str], Any]]) -> None:
+        infos = sf.infos
         for i, ti in enumerate(infos):
             res.n_tensors += 1
             thash = get_hash(i)
@@ -601,7 +1169,8 @@ class ZLLMStore:
                 else:
                     kind, base_hash, base_loader = "raw", None, None
                     res.n_raw += 1
-                job = self._encode_job(writer.codec, kind, sf, ti, base_loader)
+                job = self._encode_job(writer.codec, kind, sf, ti, base_loader,
+                                       epool)
                 payload = (pool.submit(job)
                            if pool is not None and ti.nbytes >= _PARALLEL_MIN_BYTES
                            else job())
@@ -612,7 +1181,9 @@ class ZLLMStore:
             # Record index == tensor index (dedup entries are records too).
             self.tensor_locations.setdefault(thash, (key, gen, i))
 
-        # Stage 4: ordered merge — append strictly in tensor order
+    @staticmethod
+    def _merge_plan(writer: BitXWriter, plan: List[Tuple]) -> None:
+        """Stage 4: ordered merge — append strictly in tensor order."""
         for ti, thash, kind, base_hash, payload in plan:
             if kind == "dedup":
                 writer.add_dedup(ti.name, ti.dtype_str, ti.shape, thash, ti.nbytes)
@@ -621,21 +1192,47 @@ class ZLLMStore:
                 writer.add_precomputed(ti.name, ti.dtype_str, ti.shape, kind,
                                        base_hash, thash, frames, raw)
 
-    @staticmethod
-    def _encode_job(codec: BitXCodec, kind: str, sf: SafetensorsFile, ti,
-                    base_loader) -> Callable[[], Tuple[List[bytes], int]]:
+    def _encode_job(self, codec: BitXCodec, kind: str, sf: SafetensorsFile, ti,
+                    base_loader, epool) -> Callable[[], Tuple[List[bytes], int]]:
         """Closure encoding one tensor; safe to run on any worker thread
-        (codec contexts are thread-local, sf/base reads are mmap slices)."""
+        (codec contexts are thread-local, sf/base reads are mmap slices).
+        With the opt-in process entropy backend the numpy stages (XOR,
+        plane split) stay on the calling thread and only the entropy stage
+        ships to a child process — the frames are identical either way."""
         def encode() -> Tuple[List[bytes], int]:
             raw = sf.tensor_bytes(ti.name)
             if kind == "raw":
+                if epool is not None:
+                    return self._entropy_frames(epool, [bytes(raw)]), len(raw)
                 return [codec.encode_raw(bytes(raw))], len(raw)
             arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
             if kind == "bitx":
                 base_arr = base_loader()
+                if epool is not None:
+                    planes = xor_delta_planes_np(base_arr.reshape(-1),
+                                                 arr.reshape(-1))
+                    return (self._entropy_frames(
+                        epool, [p.tobytes() for p in planes]), int(arr.nbytes))
                 return codec.encode_delta(base_arr.reshape(-1), arr.reshape(-1))
+            if epool is not None:
+                planes = byte_planes_np(arr)
+                return (self._entropy_frames(epool, [p.tobytes() for p in planes]),
+                        int(arr.nbytes))
             return codec.encode_planes(arr)
         return encode
+
+    def _entropy_frames(self, epool: ProcessPoolExecutor,
+                        blobs: List[bytes]) -> List[bytes]:
+        try:
+            return epool.submit(_entropy_compress, self.zstd_level,
+                                self.zstd_threads, blobs).result()
+        except Exception:
+            # broken child pool mid-run: fall back to in-thread entropy —
+            # the frames are identical, only the executor changes
+            self._entropy_failed = True
+            c = zstd.ZstdCompressor(level=self.zstd_level,
+                                    threads=self.zstd_threads)
+            return [c.compress(b) for b in blobs]
 
     # ------------------------------------------------------------------
     def _resolve_base(self, repo_id: str, path: str,
@@ -748,13 +1345,89 @@ class ZLLMStore:
         name = key + (".bitx" if gen == 0 else f"@g{gen}.bitx")
         return os.path.join(self.root, "containers", name)
 
-    def _account(self, res: IngestResult):
-        self.results.append(res)
+    def _account_stats(self, res: IngestResult):
+        """Fold a finished ingest result into the store totals. Results are
+        appended to ``self.results`` at decision time (submission order);
+        these sums commute, so deferred-write commits may fold out of order.
+        ``stats.ingest_seconds`` is NOT summed here: per-file times overlap
+        under the cross-file pipeline, so ``ingest_many`` accounts batch
+        wall-clock instead (keeping ``ingest_throughput_mbps`` honest)."""
         self.stats.raw_bytes += res.raw_bytes
         self.stats.stored_bytes += res.stored_bytes
         self.stats.n_files += 1
-        self.stats.ingest_seconds += res.ingest_seconds
         self.stats.live_bytes = self.lifecycle.live_bytes()
+
+    # ------------------------------------------------------------------
+    # Publish epochs + pin-counted readers (the concurrency substrate the
+    # serving layer builds on)
+    # ------------------------------------------------------------------
+    @property
+    def read_gen(self) -> int:
+        """Monotonic mutation counter: bumped by every ingest commit,
+        delete, gc and quarantine. The async serving layer keys its
+        single-flight table and response cache by it, so a request issued
+        after a mutation never coalesces onto a stale in-flight decode."""
+        return self._gate.read_gen
+
+    def _mark_pending(self, cpath: str) -> None:
+        with self._publish_lock:
+            self._pending_publish[cpath] = threading.Event()
+
+    def _publish(self, cpath: str) -> None:
+        with self._publish_lock:
+            ev = self._pending_publish.pop(cpath, None)
+        if ev is not None:
+            ev.set()
+
+    def _await_publish(self, cpath: str) -> None:
+        with self._publish_lock:
+            ev = self._pending_publish.get(cpath)
+        if ev is not None:
+            ev.wait()
+
+    @staticmethod
+    def _retire_reader(handle: _ReaderHandle) -> None:
+        """Eviction hook (LRU overflow / gc / quarantine; runs under the
+        cache lock): close the mmap now when idle, else the last in-flight
+        release closes it — deterministic either way, never mid-decode."""
+        handle.retired = True
+        if handle.pins == 0:
+            handle.reader.close()
+
+    def _acquire_reader(self, cpath: str) -> _ReaderHandle:
+        """Pin an LRU-cached mmap reader for a container path.
+        Generation-aware by construction (version paths are never reused);
+        blocks until a pending pipelined write of this path is published."""
+        self._await_publish(cpath)
+        with self._cache_lock:
+            handle = self._reader_cache.get(cpath)
+            if handle is not None:
+                handle.pins += 1
+                return handle
+        reader = BitXReader.open(cpath)  # slow path outside the lock
+        with self._cache_lock:
+            handle = self._reader_cache.get(cpath)
+            if handle is None:
+                handle = _ReaderHandle(reader)
+                self._reader_cache.put(cpath, handle)
+            else:
+                reader.close()  # lost the open race; keep the cached map
+            handle.pins += 1
+            return handle
+
+    def _release_reader(self, handle: _ReaderHandle) -> None:
+        with self._cache_lock:
+            handle.pins -= 1
+            if handle.retired and handle.pins == 0:
+                handle.reader.close()
+
+    @contextmanager
+    def _reader_ctx(self, cpath: str):
+        handle = self._acquire_reader(cpath)
+        try:
+            yield handle.reader
+        finally:
+            self._release_reader(handle)
 
     # ------------------------------------------------------------------
     # Retrieval
@@ -764,64 +1437,141 @@ class ZLLMStore:
         """Reconstruct the original safetensors file bit-exactly. Pinned
         references (file_dedup / near_dup) decode the exact container
         generation they were ingested against, regardless of what their
-        target key points at today."""
-        key = f"{repo_id}/{filename}"
-        rec = self.file_index[key]
-        if rec.get("quarantined"):
-            raise RuntimeError(f"{key}: container was quarantined by fsck; "
-                               f"restore from quarantine/ or re-ingest")
-        if rec["kind"] == "file_dedup":
-            data = self._decode_container(self._ref_path(rec))
-        elif rec["kind"] == "near_dup":
-            header_blob = zlib.decompress(base64.b64decode(rec["header_blob_z"]))
-            data = self._decode_container(self._ref_path(rec),
-                                          header_override=header_blob)
-        else:
-            data = self._decode_container(rec["path"])
-        if verify:
-            assert sha256_bytes(data) == rec["file_hash"], f"retrieval hash mismatch for {key}"
+        target key points at today. Holds the read gate: a concurrent
+        ``gc()`` cannot reclaim a generation out from under this decode."""
+        data, _ = self._retrieve_with_digest(repo_id, filename, verify,
+                                             want_digest=False)
         if out_path:
             with open(out_path, "wb") as f:
                 f.write(data)
         return data
 
+    def retrieve_file_digest(self, repo_id: str, filename: str,
+                             verify: bool = True) -> Tuple[bytes, str]:
+        """(file bytes, sha256 hexdigest). The digest is computed under the
+        same read-gate hold as the decode, so it is always consistent with
+        the returned bytes — and the serving layer never hashes a response
+        twice (``verify`` reuses this one digest for the index check)."""
+        return self._retrieve_with_digest(repo_id, filename, verify,
+                                          want_digest=True)
+
+    def _retrieve_with_digest(self, repo_id: str, filename: str, verify: bool,
+                              want_digest: bool) -> Tuple[bytes, str]:
+        with self._gate.read():
+            key = f"{repo_id}/{filename}"
+            rec = self.file_index[key]
+            if rec.get("quarantined"):
+                raise RuntimeError(f"{key}: container was quarantined by fsck; "
+                                   f"restore from quarantine/ or re-ingest")
+            if rec["kind"] == "file_dedup":
+                data = self._decode_container(self._ref_path(rec))
+            elif rec["kind"] == "near_dup":
+                header_blob = zlib.decompress(base64.b64decode(rec["header_blob_z"]))
+                data = self._decode_container(self._ref_path(rec),
+                                              header_override=header_blob)
+            else:
+                data = self._decode_container(rec["path"])
+            # lazy digest: verify=False callers (throughput benches) skip it
+            digest = sha256_bytes(data) if (verify or want_digest) else ""
+            if verify:
+                assert digest == rec["file_hash"], f"retrieval hash mismatch for {key}"
+        return data, digest
+
+    def retrieve_tensor(self, repo_id: str, filename: str, tensor_name: str,
+                        verify: bool = True) -> Tuple[bytes, Dict]:
+        """Decode ONE tensor of a stored file (the serving hot path: a
+        client wants an embedding table, not a 10 GB shard). Returns
+        ``(raw little-endian bytes, {"dtype", "shape", "nbytes", "codec"})``.
+        Pinned references resolve exactly like :meth:`retrieve_file`; only
+        the requested record (plus its dedup/BitX dependencies) is decoded.
+        Near-dup entries resolve the name through their OWN header — the
+        one part of a near-dup that may differ from its pinned target
+        (renamed/permuted tensors over record-identical bytes)."""
+        with self._gate.read():
+            key = f"{repo_id}/{filename}"
+            rec = self.file_index[key]
+            if rec.get("quarantined"):
+                raise RuntimeError(f"{key}: container was quarantined by fsck; "
+                                   f"restore from quarantine/ or re-ingest")
+            if rec["kind"] == "near_dup":
+                idx, dtype_str, shape = self._near_dup_tensor_lookup(
+                    rec, tensor_name, key)
+                cpath = self._ref_path(rec)
+            else:
+                # container: own records. file_dedup: byte-identical file ->
+                # identical header -> the target's record names ARE this
+                # file's names.
+                idx = dtype_str = shape = None
+                cpath = (rec["path"] if rec["kind"] == "container"
+                         else self._ref_path(rec))
+            with self._reader_ctx(cpath) as reader:
+                if idx is None:
+                    try:
+                        idx = reader.index_of(tensor_name)
+                    except KeyError:
+                        raise KeyError(f"tensor {tensor_name!r} not in {key}") from None
+                r = reader.records[idx]
+                arr = reader.decode_tensor(idx, self._resolve_tensor_hash,
+                                           self._resolve_tensor_hash)
+                data = np.ascontiguousarray(arr).tobytes()
+                if verify:
+                    assert sha256_bytes(data) == r.self_hash, \
+                        f"tensor hash mismatch for {key}:{tensor_name}"
+                meta = {"dtype": dtype_str or r.dtype_str,
+                        "shape": list(shape) if shape is not None else list(r.shape),
+                        "nbytes": len(data), "codec": r.codec}
+        return data, meta
+
+    def _near_dup_tensor_lookup(self, rec: Dict, tensor_name: str,
+                                key: str) -> Tuple[int, str, Tuple[int, ...]]:
+        """(record index, dtype tag, shape) of ``tensor_name`` inside a
+        near-dup entry, read from the entry's own header blob. The near-dup
+        invariant is hash-equality RECORD-FOR-RECORD in serialization
+        order, so index i of this header decodes as record i of the pinned
+        target — names, dtype tags and shapes come from here. Parsed maps
+        are memoized (LRU) so per-tensor serving pays the decompress+parse
+        once per entry, not per request."""
+        cache_key = (rec["ref"], rec["ref_gen"], rec.get("file_hash"))
+        with self._cache_lock:
+            name_map = self._near_dup_name_cache.get(cache_key)
+        if name_map is None:
+            blob = zlib.decompress(base64.b64decode(rec["header_blob_z"]))
+            infos, _, _ = read_header_blob(blob)  # serialization == record order
+            name_map = {ti.name: (i, ti.dtype_str, ti.shape)
+                        for i, ti in enumerate(infos)}
+            with self._cache_lock:
+                self._near_dup_name_cache.put(cache_key, name_map)
+        hit = name_map.get(tensor_name)
+        if hit is None:
+            raise KeyError(f"tensor {tensor_name!r} not in {key}")
+        return hit
+
     def _ref_path(self, rec: Dict) -> str:
         """Container path for a pinned (ref, ref_gen) index record."""
         return self.lifecycle.version_path(rec["ref"], rec["ref_gen"])
 
-    def _reader(self, cpath: str) -> BitXReader:
-        """LRU-cached mmap reader per container path. Generation-aware by
-        construction: version paths are unique and never reused, and gc()/
-        quarantine evict their entries eagerly."""
-        with self._cache_lock:
-            reader = self._reader_cache.get(cpath)
-            if reader is None:
-                reader = BitXReader.open(cpath)
-                self._reader_cache.put(cpath, reader)
-            return reader
-
     def _decode_container(self, cpath: str,
                           header_override: Optional[bytes] = None) -> bytes:
-        reader = self._reader(cpath)
-        header_blob = (header_override if header_override is not None else
-                       zlib.decompress(
-                           base64.b64decode(reader.file_metadata["header_blob_z"])))
-        resolver = self._resolve_tensor_hash
+        with self._reader_ctx(cpath) as reader:
+            header_blob = (header_override if header_override is not None else
+                           zlib.decompress(
+                               base64.b64decode(reader.file_metadata["header_blob_z"])))
+            resolver = self._resolve_tensor_hash
 
-        def decode(idx: int) -> bytes:
-            arr = reader.decode_tensor(idx, resolver, resolver)
-            return np.ascontiguousarray(arr).tobytes()
+            def decode(idx: int) -> bytes:
+                arr = reader.decode_tensor(idx, resolver, resolver)
+                return np.ascontiguousarray(arr).tobytes()
 
-        n = len(reader.records)
-        pool = self._executor()
-        n_big = sum(1 for r in reader.records if r.raw_size >= _PARALLEL_MIN_BYTES)
-        if pool is not None and n_big > 1:
-            # workers never re-enter the pool (dependency resolution decodes
-            # inline), so mapping from the ingest pool cannot deadlock
-            chunks = list(pool.map(decode, range(n)))
-        else:
-            chunks = [decode(i) for i in range(n)]
-        return b"".join([header_blob] + chunks)
+            n = len(reader.records)
+            pool = self._executor()
+            n_big = sum(1 for r in reader.records if r.raw_size >= _PARALLEL_MIN_BYTES)
+            if pool is not None and n_big > 1:
+                # workers never re-enter the pool (dependency resolution decodes
+                # inline), so mapping from the ingest pool cannot deadlock
+                chunks = list(pool.map(decode, range(n)))
+            else:
+                chunks = [decode(i) for i in range(n)]
+            return b"".join([header_blob] + chunks)
 
     def _resolve_tensor_hash(self, thash: str, _depth: int = 0) -> np.ndarray:
         """Fetch a tensor from the pool by content hash (dedup/bitx deps),
@@ -833,9 +1583,9 @@ class ZLLMStore:
         if hit is not None:
             return hit
         key, gen, idx = self.tensor_locations[thash]
-        reader = self._reader(self.lifecycle.version_path(key, gen))
         resolver = lambda h: self._resolve_tensor_hash(h, _depth + 1)
-        arr = reader.decode_tensor(idx, resolver, resolver)
+        with self._reader_ctx(self.lifecycle.version_path(key, gen)) as reader:
+            arr = reader.decode_tensor(idx, resolver, resolver)
         with self._cache_lock:
             self._tensor_cache.put(thash, arr, int(arr.nbytes))
         return arr
@@ -853,8 +1603,10 @@ class ZLLMStore:
     # ------------------------------------------------------------------
     def _anchor_vids(self):
         """Container versions directly referenced by live index entries —
-        the GC roots. Everything transitively reachable from here survives."""
-        for key, rec in self.file_index.items():
+        the GC roots. Everything transitively reachable from here survives.
+        Iterates an atomic snapshot (list() holds the GIL) so stats readers
+        on other threads never race a concurrent ingest's insertions."""
+        for key, rec in list(self.file_index.items()):
             if rec["kind"] == "container":
                 yield make_vid(key, rec.get("gen", 0))
             elif "ref_gen" in rec:
@@ -864,6 +1616,10 @@ class ZLLMStore:
         """Drop a file's index entry. Its container version (if any) stays on
         disk until ``gc()`` proves no dependant pins it. Returns False for
         unknown keys."""
+        with self._admin_lock:
+            return self._delete_file_locked(repo_id, filename)
+
+    def _delete_file_locked(self, repo_id: str, filename: str) -> bool:
         key = f"{repo_id}/{filename}"
         rec = self.file_index.pop(key, None)
         if rec is None:
@@ -871,21 +1627,18 @@ class ZLLMStore:
         fhash = rec.get("file_hash")
         if fhash:
             self._release_file_hash(key, fhash)
-        # unbind base registrations that point at this key — including the
-        # family entry, or bit-distance matching would keep electing a base
-        # whose tensor map is gone (silent zipnn fallback for new fine-tunes)
-        for bid in (key, repo_id):
-            if self.base_key_of.get(bid) == key:
-                self.invalidate_base_map(bid)
-                self.base_paths.pop(bid, None)
-                self.base_key_of.pop(bid, None)
-                self.families.unregister(bid)
+        self._unbind_base(key, repo_id)
         self.stats.n_deleted += 1
+        self._gate.bump()
         return True
 
     def delete_repo(self, repo_id: str) -> int:
         """Drop every file of a repo plus its family/base registrations.
         Containers are reclaimed by the next ``gc()`` once unreferenced."""
+        with self._admin_lock:
+            return self._delete_repo_locked(repo_id)
+
+    def _delete_repo_locked(self, repo_id: str) -> int:
         prefix = repo_id + "/"
         n = 0
         for key in [k for k in self.file_index if k.startswith(prefix)]:
@@ -898,7 +1651,19 @@ class ZLLMStore:
     def gc(self) -> Dict[str, int]:
         """Reclaim every container version unreachable from live index
         entries (cascading refcount sweep), delete the files, scrub tensor
-        hashes that pointed into them, and evict stale mmap readers."""
+        hashes that pointed into them, and evict stale mmap readers.
+
+        Holds the admin lock (mutual exclusion with ingest batches, deletes
+        and fsck) and then the write gate for the sweep itself: in-flight
+        retrievals finish on the pre-gc state first (they can never be
+        handed a reclaimed generation), retrievals arriving during the
+        sweep wait the few milliseconds it takes — the serving layer's
+        snapshot isolation."""
+        with self._admin_lock:
+            with self._gate.write():
+                return self._gc_locked()
+
+    def _gc_locked(self) -> Dict[str, int]:
         reclaimed = self.lifecycle.collect(set(self._anchor_vids()))
         dropped_refs = 0
         if reclaimed:
@@ -939,7 +1704,13 @@ class ZLLMStore:
         copy when any live container still holds that payload; corrupt
         containers are quarantined (moved to ``<root>/quarantine``, index
         entries flagged, graph node kept so dependants stay repairable).
+
+        Takes the admin lock (mutual exclusion with ingest/delete/gc).
         """
+        with self._admin_lock:
+            return self._fsck_locked(repair, spot_check)
+
+    def _fsck_locked(self, repair: bool, spot_check: Optional[int]) -> FsckReport:
         report = FsckReport()
         alt: Optional[Dict[str, Tuple[str, int, int]]] = None
 
@@ -1005,15 +1776,42 @@ class ZLLMStore:
                               f"{make_vid(rec['ref'], rec['ref_gen'])} is not live"))
                 elif rec["kind"] == "near_dup" and rec.get("n_tensors") is not None:
                     try:
-                        reader = self._reader(self._ref_path(rec))
+                        with self._reader_ctx(self._ref_path(rec)) as reader:
+                            n_records = len(reader.records)
                     except Exception as e:  # target corrupt: flagged above on
                         # its own version; this entry is dangling meanwhile
                         report.dangling.append(
                             (key, f"near_dup target unreadable: {e}"))
                     else:
-                        if len(reader.records) != rec["n_tensors"]:
+                        if n_records != rec["n_tensors"]:
                             report.dangling.append(
                                 (key, "near_dup target record count changed"))
+
+        # pass 4 (ROADMAP rung b): orphan scan — container files on disk that
+        # no live or quarantined version references. Crash debris from an
+        # interrupted ingest; flagged always, deleted under repair=True.
+        # SAFETY: an empty version graph with containers on disk almost
+        # certainly means the index was never loaded — deleting "orphans"
+        # then would wipe the whole store, so repair refuses and reports.
+        known = {os.path.abspath(v.path) for v in self.lifecycle.versions.values()}
+        croot = os.path.join(self.root, "containers")
+        for dirpath, _, files in os.walk(croot):
+            for fn in sorted(files):
+                p = os.path.abspath(os.path.join(dirpath, fn))
+                if not fn.endswith(".bitx") or p in known:
+                    continue
+                report.orphans.append(p)
+                if repair and not known:
+                    report.dangling.append(
+                        (p, "orphan delete refused: version graph is empty "
+                            "(index not loaded?)"))
+                elif repair:
+                    try:
+                        os.remove(p)
+                    except OSError as e:
+                        report.dangling.append((p, f"orphan delete failed: {e}"))
+                    else:
+                        report.repaired.append((p, "orphan container deleted"))
         return report
 
     def _hash_resolves(self, thash: str) -> bool:
@@ -1024,10 +1822,11 @@ class ZLLMStore:
         if not self.lifecycle.exists(key, gen):
             return False
         try:
-            reader = self._reader(self.lifecycle.version_path(key, gen))
+            with self._reader_ctx(self.lifecycle.version_path(key, gen)) as reader:
+                return (idx < len(reader.records)
+                        and reader.records[idx].self_hash == thash)
         except (KeyError, RuntimeError, OSError, ValueError, AssertionError):
             return False
-        return idx < len(reader.records) and reader.records[idx].self_hash == thash
 
     def _payload_locations(self) -> Dict[str, Tuple[str, int, int]]:
         """hash -> (key, gen, idx) over every live version's payload-bearing
@@ -1037,23 +1836,24 @@ class ZLLMStore:
             if info.quarantined:
                 continue
             try:
-                reader = self._reader(info.path)
+                with self._reader_ctx(info.path) as reader:
+                    for i, r in enumerate(reader.records):
+                        if r.codec != "dedup":
+                            out.setdefault(r.self_hash, (info.key, info.gen, i))
             except (OSError, ValueError, AssertionError):
                 continue
-            for i, r in enumerate(reader.records):
-                if r.codec != "dedup":
-                    out.setdefault(r.self_hash, (info.key, info.gen, i))
         return out
 
     def _fsck_version_refs(self, info, check_ref) -> None:
         """Reference pass: every dedup target and BitX base hash of this
         version must resolve to a live container frame."""
         try:
-            reader = self._reader(info.path)
+            with self._reader_ctx(info.path) as reader:
+                records = list(reader.records)
         except Exception:
             return  # already reported corrupt by the content pass
         vid = info.vid
-        for r in reader.records:
+        for r in records:
             if r.codec == "dedup":
                 check_ref(vid, r.self_hash, "dedup target")
             elif r.codec == "bitx":
@@ -1066,9 +1866,13 @@ class ZLLMStore:
         if not os.path.exists(info.path):
             return "container file missing"
         try:
-            reader = self._reader(info.path)
+            with self._reader_ctx(info.path) as reader:
+                return self._spot_check_reader(reader, report, spot_check)
         except Exception as e:  # bad magic, short header, backend mismatch...
             return f"unreadable container: {e}"
+
+    def _spot_check_reader(self, reader: BitXReader, report: FsckReport,
+                           spot_check: Optional[int]) -> Optional[str]:
         if reader.payload_size < reader.expected_payload_size:
             return (f"truncated payload: {reader.payload_size} < "
                     f"{reader.expected_payload_size} bytes")
@@ -1104,32 +1908,32 @@ class ZLLMStore:
         qdir = os.path.join(self.root, "quarantine")
         os.makedirs(qdir, exist_ok=True)
         qpath = os.path.join(qdir, info.vid.replace("/", "__"))
-        with self._cache_lock:
-            self._reader_cache.pop(info.path)
-        if os.path.exists(info.path):
-            os.replace(info.path, qpath)
-        self.lifecycle.quarantine(info.key, info.gen, qpath)
-        rec = self.file_index.get(info.key)
-        if (rec is not None and rec.get("kind") == "container"
-                and rec.get("gen", 0) == info.gen):
-            rec["quarantined"] = True
-        # scrub pool hashes pinned to the quarantined payload: future ingests
-        # must re-store those tensors fresh, never dedup against a container
-        # that retrieval refuses to read. fsck's reference pass re-pins
-        # surviving dependants to other live copies where possible.
-        stale = [h for h, (k, g, _) in self.tensor_locations.items()
-                 if k == info.key and g == info.gen]
-        for h in stale:
-            del self.tensor_locations[h]
-            self.tensor_dedup.forget(h)
-        report.quarantined.append(info.vid)
-        self.stats.live_bytes = self.lifecycle.live_bytes()
+        with self._gate.write():  # no in-flight reader sees the file move
+            with self._cache_lock:
+                self._reader_cache.pop(info.path)
+            if os.path.exists(info.path):
+                os.replace(info.path, qpath)
+            self.lifecycle.quarantine(info.key, info.gen, qpath)
+            rec = self.file_index.get(info.key)
+            if (rec is not None and rec.get("kind") == "container"
+                    and rec.get("gen", 0) == info.gen):
+                rec["quarantined"] = True
+            # scrub pool hashes pinned to the quarantined payload: future
+            # ingests must re-store those tensors fresh, never dedup against
+            # a container that retrieval refuses to read. fsck's reference
+            # pass re-pins surviving dependants to other live copies where
+            # possible.
+            self._scrub_tensor_pins(info.key, info.gen)
+            report.quarantined.append(info.vid)
+            self.stats.live_bytes = self.lifecycle.live_bytes()
 
     def _superseded_bytes(self) -> int:
         """Bytes held by pinned-but-superseded generations — live only
-        because some dependant still resolves into them."""
+        because some dependant still resolves into them. Snapshot-safe for
+        the same reason as :meth:`_anchor_vids` (the serving /stats route
+        calls this while ingest runs)."""
         anchored = set(self._anchor_vids())
-        return sum(v.nbytes for v in self.lifecycle.versions.values()
+        return sum(v.nbytes for v in list(self.lifecycle.versions.values())
                    if not v.quarantined and v.vid not in anchored)
 
     # ------------------------------------------------------------------
@@ -1246,10 +2050,11 @@ class ZLLMStore:
                 continue
             src = make_vid(key, rec["gen"])
             try:
-                reader = self._reader(rec["path"])
+                with self._reader_ctx(rec["path"]) as reader:
+                    records = list(reader.records)
             except (OSError, ValueError, AssertionError):
                 continue  # unreadable container: fsck will report it
-            for r in reader.records:
+            for r in records:
                 h = r.self_hash if r.codec == "dedup" else r.base_hash
                 loc = self.tensor_locations.get(h) if h else None
                 if loc is not None:
@@ -1282,5 +2087,8 @@ class ZLLMStore:
             "base_map_cache": dict(self.base_map_stats),
             "retrieval_caches": self.retrieval_cache_stats,
             "workers": self.workers,
+            "pipeline_depth": self.pipeline_depth,
+            "entropy_procs": 0 if self._entropy_failed else self.entropy_procs,
+            "read_gen": self.read_gen,
             "ingest_throughput_MBps": round(self.stats.ingest_throughput_mbps, 1),
         }

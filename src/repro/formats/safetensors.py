@@ -38,6 +38,7 @@ __all__ = [
     "save_file",
     "load_file",
     "read_header",
+    "read_header_blob",
     "iter_tensors",
 ]
 
@@ -179,6 +180,17 @@ def read_header(path: str | os.PathLike) -> Tuple[List[TensorInfo], Dict[str, st
     with open(path, "rb") as f:
         (hlen,) = struct.unpack(_HEADER_LEN_FMT, f.read(8))
         hjson = f.read(hlen)
+    return _parse_header(hjson, hlen)
+
+
+def read_header_blob(blob: bytes) -> Tuple[List[TensorInfo], Dict[str, str], int]:
+    """:func:`read_header` over in-memory file bytes (``[8-byte len][JSON
+    header]...``) — e.g. the header blob a near-dup index entry stores."""
+    (hlen,) = struct.unpack(_HEADER_LEN_FMT, blob[:8])
+    return _parse_header(bytes(blob[8:8 + hlen]), hlen)
+
+
+def _parse_header(hjson: bytes, hlen: int) -> Tuple[List[TensorInfo], Dict[str, str], int]:
     header = json.loads(hjson)
     metadata = {str(k): str(v) for k, v in (header.pop("__metadata__", {}) or {}).items()}
     infos = [

@@ -1,1 +1,14 @@
-"""serve subsystem."""
+"""serve subsystem.
+
+Two servers live here, matching ZipLLM's two serving surfaces:
+
+* ``repro.serve.store_server`` — the async *storage* server: concurrent
+  bit-exact file/tensor retrieval over the mmap'd zLLM store (stdlib
+  asyncio; no jax dependency).
+* ``repro.serve.engine`` — the *model* serving engine: batched
+  prefill/decode with cold-start loading straight from the compressed
+  store (imports jax; do not import it from storage-only contexts).
+
+Submodules are intentionally not re-exported here so importing the storage
+server never drags in the jax stack.
+"""

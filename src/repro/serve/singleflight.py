@@ -1,0 +1,73 @@
+"""Single-flight deduplication for concurrent async work (stdlib asyncio).
+
+When N concurrent requests ask for the same expensive computation (decoding
+the same container record, reconstructing the same file), exactly one —
+the *leader* — runs it; the other N-1 await the leader's future and share
+the result. This is the asyncio analogue of Go's ``singleflight`` package,
+and the piece that keeps the retrieval server's worker pool from decoding
+one hot checkpoint eight times side by side.
+
+Keys must already encode *everything* the result depends on. The store
+server keys flights by ``(store.read_gen, kind, repo, file[, tensor])`` —
+the read generation rolls over on every ingest/delete/gc, so a request
+issued after a mutation can never coalesce onto a stale in-flight decode
+(see the read-gate notes in ``repro.core.pipeline``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import Any, Awaitable, Callable, Dict, Hashable
+
+__all__ = ["SingleFlight"]
+
+
+class SingleFlight:
+    """Coalesce concurrent async calls per key. Event-loop-confined: call
+    :meth:`run` only from coroutines on one loop (no internal locking is
+    needed precisely because of that confinement)."""
+
+    def __init__(self):
+        self._inflight: Dict[Hashable, asyncio.Future] = {}
+        self.leaders = 0   # flights actually executed
+        self.joined = 0    # calls that shared another call's flight
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    async def run(self, key: Hashable, thunk: Callable[[], Awaitable[Any]]) -> Any:
+        """Return ``await thunk()``, sharing one execution among all
+        concurrent callers with the same ``key``.
+
+        The leader's outcome — result or exception — propagates to every
+        joiner. A joiner being cancelled does not cancel the shared flight
+        (the future is shielded); a cancelled *leader* cancels the flight
+        for everyone, which is the honest outcome since its work stopped.
+        """
+        existing = self._inflight.get(key)
+        if existing is not None:
+            self.joined += 1
+            return await asyncio.shield(existing)
+
+        fut: asyncio.Future = asyncio.get_running_loop().create_future()
+        self._inflight[key] = fut
+        self.leaders += 1
+        try:
+            result = await thunk()
+        except BaseException as e:
+            self._inflight.pop(key, None)
+            if not fut.cancelled():
+                fut.set_exception(e)
+                fut.exception()  # mark retrieved: no-joiner flights must not
+                # warn "exception was never retrieved" at GC time
+            raise
+        else:
+            self._inflight.pop(key, None)
+            if not fut.cancelled():
+                fut.set_result(result)
+            return result
+
+    def stats(self) -> Dict[str, int]:
+        return {"leaders": self.leaders, "joined": self.joined,
+                "inflight": self.inflight}

@@ -1,0 +1,432 @@
+"""Async retrieval engine + HTTP front for the zLLM store (stdlib-only).
+
+ZipLLM's target deployment is hub-scale: tens of PB of model weights served
+to millions of users. ``ZLLMStore`` provides the storage-side concurrency
+substrate (mmap readers with pin counts, a read gate with read generations,
+publish epochs — see ``repro.core.pipeline``); this module turns it into a
+serving system:
+
+* :class:`RetrievalEngine` — asyncio facade. Decodes run on a bounded
+  thread pool (sha256/zstd/XOR release the GIL, so concurrent retrievals
+  genuinely overlap); concurrent requests for the same object are
+  *single-flighted* (one decode, N waiters — ``repro.serve.singleflight``);
+  finished responses land in a byte-budgeted LRU. Every flight and cache
+  entry is keyed by the store's ``read_gen``, so an ingest / delete / gc
+  rolls the caches over atomically: a request issued after a mutation can
+  never be served a pre-mutation decode (snapshot isolation, with the
+  store's read gate guaranteeing the decode itself never races physical
+  reclamation).
+
+* :class:`StoreServer` — a minimal HTTP/1.1 front over asyncio streams
+  (deliberately dependency-free; this is the paper-repro analogue of the
+  production gateway, not a gateway itself):
+
+  ========================================  =====================================
+  ``GET /healthz``                          liveness + read_gen
+  ``GET /stats``                            engine + store counters (JSON)
+  ``GET /repo/<repo_id>/file/<filename>``   the bit-exact safetensors file
+  ``GET /repo/<repo_id>/tensor/<name>``     one tensor's raw little-endian bytes
+  ``[?file=<filename>]``                    (default file: model.safetensors)
+  ========================================  =====================================
+
+  ``repo_id`` may contain slashes (``org/model``); the ``file``/``tensor``
+  path markers disambiguate (file: second-to-last segment; tensor:
+  rightmost marker). Tensor names containing a literal ``tensor`` or
+  ``file`` segment need the query form
+  ``/repo/<repo_id>/tensor?name=<tensor>``. Tensor responses carry
+  ``x-tensor-dtype`` / ``x-tensor-shape`` headers; file responses carry
+  ``x-content-sha256``. Errors map to 404 (unknown repo/file/tensor), 410
+  (quarantined by fsck) and 500 (decode/backend failures).
+
+* :class:`ServerThread` — runs the server on a private event loop in a
+  daemon thread, for synchronous harnesses (tests, benches, the soak).
+
+Run standalone::
+
+    PYTHONPATH=src python -m repro.serve.store_server --root /path/to/store
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Optional, Tuple
+from urllib.parse import parse_qs, unquote, urlsplit
+
+from repro.core.pipeline import ZLLMStore, _LRUCache
+from repro.serve.singleflight import SingleFlight
+
+__all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "main"]
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found", 405: "Method Not Allowed",
+            410: "Gone", 500: "Internal Server Error"}
+
+
+class RetrievalEngine:
+    """Concurrent retrieval over one :class:`ZLLMStore`.
+
+    Loop-confined: construct and call from a single event loop. The store
+    may be mutated concurrently from *other* threads (ingest, delete, gc) —
+    that is the supported serving topology; what is not supported is two
+    engines fronting one store from two loops with one response cache.
+    """
+
+    def __init__(self, store: ZLLMStore, *, max_concurrency: int = 8,
+                 cache_bytes: int = 128 << 20, verify: bool = True):
+        self.store = store
+        self.verify = verify
+        self._pool = ThreadPoolExecutor(max_workers=max(1, max_concurrency),
+                                        thread_name_prefix="zllm-serve")
+        self._flight = SingleFlight()
+        # cache_bytes <= 0 disables response caching entirely (the serving
+        # bench measures concurrent decodes, not cache hits)
+        self._cache = (_LRUCache(max_items=1024, max_bytes=cache_bytes)
+                       if cache_bytes > 0 else None)
+        self._cache_gen = -1  # read_gen the cached entries belong to
+        self.requests = 0
+        self.errors = 0
+
+    # -- retrieval ------------------------------------------------------
+    async def get_file(self, repo_id: str, filename: str = "model.safetensors") -> bytes:
+        """Bit-exact safetensors bytes for ``repo_id/filename``."""
+        data, _ = await self.get_file_digest(repo_id, filename)
+        return data
+
+    async def get_file_digest(self, repo_id: str,
+                              filename: str = "model.safetensors") -> Tuple[bytes, str]:
+        """(bytes, sha256 hexdigest). The digest comes from the store's own
+        gate-held decode (one hash per flight, on the executor, always
+        consistent with the returned bytes) and is cached with the
+        response — never recomputed per request on the event loop."""
+        return await self._fetch(
+            ("file", repo_id, filename),
+            lambda: self.store.retrieve_file_digest(repo_id, filename,
+                                                    verify=self.verify))
+
+    async def get_tensor(self, repo_id: str, tensor_name: str,
+                         filename: str = "model.safetensors") -> Tuple[bytes, Dict]:
+        """One tensor's raw bytes + metadata for ``repo_id/filename``."""
+        return await self._fetch(
+            ("tensor", repo_id, filename, tensor_name),
+            lambda: self.store.retrieve_tensor(repo_id, filename, tensor_name,
+                                               verify=self.verify))
+
+    async def _fetch(self, key: Tuple, call):
+        """Cache → single-flight → executor. The composite key includes the
+        store's read_gen: one mutation and every subsequent request misses
+        the old view, while an in-flight pre-mutation decode still completes
+        under the store's read gate."""
+        self.requests += 1
+        gen = self.store.read_gen
+        ck = (gen,) + key
+        if self._cache is not None:
+            if gen != self._cache_gen:
+                # only current-generation entries are ever servable again —
+                # purge instead of letting stale bytes squat on the budget
+                self._cache.clear()
+                self._cache_gen = gen
+            hit = self._cache.get(ck)
+            if hit is not None:
+                return hit
+        loop = asyncio.get_running_loop()
+
+        async def thunk():
+            return await loop.run_in_executor(self._pool, call)
+
+        try:
+            result = await self._flight.run(ck, thunk)
+        except Exception:
+            self.errors += 1
+            raise
+        if self._cache is not None:
+            nbytes = len(result[0]) if isinstance(result, tuple) else len(result)
+            self._cache.put(ck, result, nbytes)
+        return result
+
+    # -- admin ----------------------------------------------------------
+    async def run_gc(self) -> Dict[str, int]:
+        """Run ``store.gc()`` off-loop. Safe during serving AND during an
+        ingest batch on another thread: gc serializes behind the store's
+        admin lock, its write gate drains in-flight decodes, and read_gen
+        rolls the engine caches over."""
+        return await asyncio.get_running_loop().run_in_executor(
+            self._pool, self.store.gc)
+
+    def stats(self) -> Dict:
+        return {
+            "requests": self.requests,
+            "errors": self.errors,
+            "read_gen": self.store.read_gen,
+            "singleflight": self._flight.stats(),
+            "response_cache": ({"items": len(self._cache),
+                                "hits": self._cache.hits,
+                                "misses": self._cache.misses}
+                               if self._cache is not None else {"disabled": True}),
+            "workers": self._pool._max_workers,
+            "verify": self.verify,
+        }
+
+    async def aclose(self) -> None:
+        await asyncio.get_running_loop().run_in_executor(
+            None, lambda: self._pool.shutdown(wait=True))
+
+
+class StoreServer:
+    """Minimal asyncio HTTP/1.1 front over a :class:`RetrievalEngine`."""
+
+    def __init__(self, store: ZLLMStore, host: str = "127.0.0.1", port: int = 0,
+                 *, max_concurrency: int = 8, cache_bytes: int = 128 << 20,
+                 verify: bool = True):
+        self.engine = RetrievalEngine(store, max_concurrency=max_concurrency,
+                                      cache_bytes=cache_bytes, verify=verify)
+        self._host_arg, self._port_arg = host, port
+        self.host: Optional[str] = None
+        self.port: Optional[int] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> Tuple[str, int]:
+        self._server = await asyncio.start_server(self._handle, self._host_arg,
+                                                  self._port_arg)
+        self.host, self.port = self._server.sockets[0].getsockname()[:2]
+        return self.host, self.port
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        await self.engine.aclose()
+
+    # -- request handling ------------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            request = await asyncio.wait_for(reader.readline(), timeout=30)
+            parts = request.decode("latin-1").split()
+            if len(parts) < 2:
+                return
+            method, target = parts[0], parts[1]
+            while True:  # drain headers; bodies are not supported (GET only)
+                line = await asyncio.wait_for(reader.readline(), timeout=30)
+                if line in (b"\r\n", b"\n", b""):
+                    break
+            if method != "GET":
+                await self._respond(writer, 405, {"error": "GET only"})
+                return
+            await self._route(writer, target)
+        except (asyncio.TimeoutError, ConnectionError):
+            pass
+        except ValueError:
+            # oversized request/header line (StreamReader limit overrun) —
+            # answer 400 instead of leaking an unhandled task exception
+            try:
+                await self._respond(writer, 400,
+                                    {"error": "request line or headers too large"})
+            except Exception:
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _route(self, writer, target: str) -> None:
+        url = urlsplit(target)
+        segs = [unquote(s) for s in url.path.split("/") if s]
+        qs = parse_qs(url.query)
+        try:
+            if url.path == "/healthz":
+                await self._respond(writer, 200, {"ok": True,
+                                                  "read_gen": self.engine.store.read_gen})
+            elif url.path == "/stats":
+                # store.summary() walks index/lifecycle dicts — run it on
+                # the executor so a slow store never stalls the event loop
+                store_stats = await asyncio.get_running_loop().run_in_executor(
+                    self.engine._pool, self.engine.store.summary)
+                await self._respond(writer, 200, {"server": self.engine.stats(),
+                                                  "store": store_stats})
+            elif len(segs) >= 4 and segs[0] == "repo" and segs[-2] == "file":
+                repo_id = "/".join(segs[1:-2])
+                data, sha = await self.engine.get_file_digest(repo_id, segs[-1])
+                await self._respond_bytes(writer, data,
+                                          [("x-content-sha256", sha)])
+            elif (len(segs) >= 3 and segs[0] == "repo" and segs[-1] == "tensor"
+                  and "name" in qs):
+                # unambiguous form: /repo/<repo_id>/tensor?name=<tensor> —
+                # for names where the path grammar below would mis-split
+                repo_id = "/".join(segs[1:-1])
+                data, meta = await self.engine.get_tensor(
+                    repo_id, qs["name"][0],
+                    qs.get("file", ["model.safetensors"])[0])
+                await self._respond_tensor(writer, data, meta)
+            elif len(segs) >= 4 and segs[0] == "repo" and "tensor" in segs[2:-1]:
+                # path form: rightmost "tensor" marker splits repo id from
+                # tensor name (both may contain slashes; a tensor name with
+                # a literal "tensor" segment needs the ?name= form above)
+                i = len(segs) - 1 - segs[::-1].index("tensor")
+                repo_id = "/".join(segs[1:i])
+                tensor_name = "/".join(segs[i + 1:])
+                filename = qs.get("file", ["model.safetensors"])[0]
+                data, meta = await self.engine.get_tensor(repo_id, tensor_name,
+                                                          filename)
+                await self._respond_tensor(writer, data, meta)
+            else:
+                await self._respond(writer, 404, {"error": f"no route for {url.path}"})
+        except KeyError as e:
+            await self._respond(writer, 404, {"error": str(e)})
+        except RuntimeError as e:
+            status = 410 if "quarantined" in str(e) else 500
+            await self._respond(writer, status, {"error": str(e)})
+        except Exception as e:  # backend mismatch, decode failure, ...
+            await self._respond(writer, 500,
+                                {"error": f"{type(e).__name__}: {e}"})
+
+    async def _respond_tensor(self, writer, data: bytes, meta: Dict) -> None:
+        await self._respond_bytes(writer, data, [
+            ("x-tensor-dtype", meta["dtype"]),
+            ("x-tensor-shape", json.dumps(meta["shape"])),
+            ("x-tensor-codec", meta["codec"]),
+        ])
+
+    async def _respond(self, writer, status: int, obj: Dict) -> None:
+        body = (json.dumps(obj) + "\n").encode()
+        await self._write(writer, status, body, "application/json", [])
+
+    async def _respond_bytes(self, writer, data: bytes, extra) -> None:
+        await self._write(writer, 200, data, "application/octet-stream",
+                          [("x-read-gen", str(self.engine.store.read_gen))] + extra)
+
+    @staticmethod
+    async def _write(writer, status: int, body: bytes, ctype: str, extra) -> None:
+        head = [f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}",
+                f"content-type: {ctype}",
+                f"content-length: {len(body)}",
+                "connection: close"]
+        head += [f"{k}: {v}" for k, v in extra]
+        writer.write(("\r\n".join(head) + "\r\n\r\n").encode())
+        writer.write(body)
+        await writer.drain()
+
+
+class ServerThread:
+    """Run a :class:`StoreServer` on a private event loop in a daemon
+    thread — the harness for synchronous callers (tests, benches, soak).
+    Usable as a context manager; ``host``/``port`` are set after start."""
+
+    def __init__(self, store: ZLLMStore, **server_kw):
+        self._store = store
+        self._kw = server_kw
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self.server: Optional[StoreServer] = None
+        self.host: Optional[str] = None
+        self.port: Optional[int] = None
+
+    def start(self) -> "ServerThread":
+        started = threading.Event()
+        fail: list = []
+
+        def run():
+            loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(loop)
+            try:
+                self.server = StoreServer(self._store, **self._kw)
+                host_port = loop.run_until_complete(self.server.start())
+            except BaseException as e:  # surface startup failures (e.g.
+                # EADDRINUSE) to the caller; self._loop stays None so a
+                # defensive stop() returns immediately instead of waiting on
+                # a loop that will never run
+                fail.append(e)
+                self.server = None
+                loop.close()
+                started.set()
+                return
+            self._loop = loop
+            self.host, self.port = host_port
+            started.set()
+            try:
+                loop.run_forever()
+            finally:
+                loop.close()
+
+        self._thread = threading.Thread(target=run, daemon=True,
+                                        name="zllm-server")
+        self._thread.start()
+        started.wait(timeout=60)
+        if fail:
+            raise fail[0]
+        assert self.port is not None, "server failed to start within 60s"
+        return self
+
+    def submit(self, coro):
+        """Schedule a coroutine on the server loop; returns a concurrent
+        Future (e.g. ``submit(engine.run_gc()).result()``)."""
+        return asyncio.run_coroutine_threadsafe(coro, self._loop)
+
+    def stop(self) -> None:
+        if self._loop is None:
+            return
+        if self.server is not None:
+            asyncio.run_coroutine_threadsafe(self.server.aclose(),
+                                             self._loop).result(timeout=60)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=60)
+        self._loop = None
+
+    def __enter__(self) -> "ServerThread":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Serve a zLLM store over HTTP (asyncio, stdlib-only)")
+    ap.add_argument("--root", required=True, help="store root directory")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8421)
+    ap.add_argument("--store-workers", type=int, default=2,
+                    help="ZLLMStore decode pool size")
+    ap.add_argument("--serve-workers", type=int, default=8,
+                    help="concurrent retrieval executor size")
+    ap.add_argument("--cache-mb", type=int, default=128)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip sha256 verification of responses")
+    args = ap.parse_args(argv)
+
+    store = ZLLMStore(args.root, workers=args.store_workers)
+    if not store.load_index():
+        print(f"store_server: no index.json under {args.root} "
+              f"(serving an empty store)", flush=True)
+
+    async def amain():
+        server = StoreServer(store, args.host, args.port,
+                             max_concurrency=args.serve_workers,
+                             cache_bytes=args.cache_mb << 20,
+                             verify=not args.no_verify)
+        host, port = await server.start()
+        print(f"store_server: serving {args.root} on http://{host}:{port}",
+              flush=True)
+        await server.serve_forever()
+
+    try:
+        asyncio.run(amain())
+    except KeyboardInterrupt:
+        pass
+    finally:
+        store.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

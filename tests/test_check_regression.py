@@ -1,0 +1,55 @@
+"""CI bench regression gate semantics (benchmarks.check_regression):
+shared gated keys fail on a real drop, keys present in only one file warn
+instead of failing (new metrics must not hard-fail CI until the baseline is
+regenerated), and the serving concurrent-retrieval metric is gated."""
+
+from benchmarks.check_regression import GATED_SUFFIXES, compare
+
+
+def test_shared_key_regression_fails():
+    base = {"zllm": {"workers_1": {"ingest_MBps": 100.0, "retrieve_MBps": 200.0}}}
+    fresh = {"zllm": {"workers_1": {"ingest_MBps": 60.0, "retrieve_MBps": 190.0}}}
+    rows, failures, warnings = compare(base, fresh, max_drop=0.25)
+    assert failures == ["zllm.workers_1.ingest_MBps"]
+    assert not warnings and len(rows) == 2
+
+
+def test_concurrent_retrieval_metric_is_gated():
+    assert any("concurrent_retrieve_MBps".endswith(s) for s in GATED_SUFFIXES)
+    base = {"serving": {"concurrent_retrieve_MBps": 100.0}}
+    fresh = {"serving": {"concurrent_retrieve_MBps": 50.0}}
+    _, failures, _ = compare(base, fresh, max_drop=0.25)
+    assert failures == ["serving.concurrent_retrieve_MBps"]
+    _, failures, _ = compare(base, {"serving": {"concurrent_retrieve_MBps": 90.0}},
+                             max_drop=0.25)
+    assert not failures
+
+
+def test_missing_keys_warn_but_tolerated():
+    base = {"zllm": {"ingest_MBps": 100.0, "old_retrieve_MBps": 50.0},
+            "hf_fastcdc": {"retrieve_MBps": "line-rate"}}
+    fresh = {"zllm": {"ingest_MBps": 99.0},
+             "serving": {"concurrent_retrieve_MBps": 120.0},
+             "hf_fastcdc": {"retrieve_MBps": "line-rate"}}
+    rows, failures, warnings = compare(base, fresh, max_drop=0.25)
+    assert not failures and len(rows) == 1
+    assert len(warnings) == 2  # baseline-only AND fresh-only gated keys
+    assert any("old_retrieve_MBps" in w and "missing from fresh" in w
+               for w in warnings)
+    assert any("concurrent_retrieve_MBps" in w and "no baseline" in w
+               for w in warnings)
+    # non-numeric-on-BOTH-sides ("line-rate") stays silently skipped
+    assert not any("hf_fastcdc" in w for w in warnings)
+
+
+def test_numeric_gate_turning_string_warns():
+    """A gated key flipping from numeric to string must warn — otherwise a
+    throughput gate can vanish from CI with zero output."""
+    base = {"zllm": {"retrieve_MBps": 28.5}}
+    fresh = {"zllm": {"retrieve_MBps": "line-rate"}}
+    rows, failures, warnings = compare(base, fresh, max_drop=0.25)
+    assert not rows and not failures
+    assert len(warnings) == 1 and "no longer numeric" in warnings[0]
+    # and the reverse direction (string baseline, numeric fresh) warns too
+    _, _, warnings = compare(fresh, base, max_drop=0.25)
+    assert len(warnings) == 1 and "became numeric" in warnings[0]

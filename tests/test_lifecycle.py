@@ -535,3 +535,159 @@ def test_lifecycle_graph_json_roundtrip():
     reclaimed = back.collect({make_vid("b/m.safetensors", 0)})
     assert [v.vid for v in reclaimed] == [make_vid("a/m.safetensors", 1)]
     assert back.next_generation("a/m.safetensors") == 2  # gens never reused
+
+
+# ---------------------------------------------------------------------------
+# Satellites: fsck orphan scan, deterministic mmap lifecycle (fd leak)
+# ---------------------------------------------------------------------------
+
+def test_fsck_orphan_scan_flags_and_repairs_crash_debris(churn, tmp_path):
+    """Containers on disk referenced by no index entry (an interrupted
+    ingest's debris) are flagged by fsck and deleted under repair=True;
+    legitimate containers and the quarantine/ dir are never touched."""
+    store, paths, _ = churn
+    croot = os.path.join(store.root, "containers")
+    debris = [os.path.join(croot, "org", "crashed@g3.bitx"),
+              os.path.join(croot, "stray.bitx")]
+    for p in debris:
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(b"BITX0001" + b"\x00" * 64)  # plausible junk
+    # a non-container file in the tree is ignored entirely
+    with open(os.path.join(croot, "notes.txt"), "w") as f:
+        f.write("not a container")
+
+    report = store.fsck(repair=False, spot_check=None)
+    assert sorted(report.orphans) == sorted(os.path.abspath(p) for p in debris)
+    assert report.ok  # orphans are debris, not corruption of live state
+    assert all(os.path.exists(p) for p in debris)  # repair=False only flags
+
+    report = store.fsck(repair=True, spot_check=None)
+    assert len(report.orphans) == 2 and len(report.repaired) >= 2
+    assert not any(os.path.exists(p) for p in debris)
+    after = store.fsck(repair=False, spot_check=None)
+    assert after.ok and not after.orphans
+    # live data untouched by the orphan sweep
+    assert store.retrieve_file("u/ft", "model.safetensors") == _read(paths["ft"])
+
+
+def _open_fds():
+    return len(os.listdir("/proc/self/fd"))
+
+
+def test_reader_fds_stable_under_gc_retrieve_churn(tmp_path):
+    """Regression: LRU-evicted and gc-evicted BitXReaders must close their
+    mmaps deterministically. A tiny reader cache churned over many
+    containers across repeated gc+retrieve rounds must not grow the
+    process's open-fd count."""
+    if not os.path.isdir("/proc/self/fd"):
+        pytest.skip("needs /proc (Linux)")
+    n_repos = 6
+    paths = {}
+    for i in range(n_repos):
+        p = str(tmp_path / "hub" / f"org{i}" / "m" / "model.safetensors")
+        _write_model(p, np.random.RandomState(200 + i), scale=1.0)
+        paths[f"org{i}/m"] = p
+    store = ZLLMStore(str(tmp_path / "store"), reader_cache_size=2, workers=0)
+    for rid, p in paths.items():
+        store.ingest_file(p, rid)
+
+    for rid in paths:  # warm every reader once (cache size 2 => churn)
+        store.retrieve_file(rid, "model.safetensors", verify=False)
+    baseline = _open_fds()
+    victims = ["org4/m", "org5/m"]
+    for round_ in range(3):
+        for rid, p in paths.items():
+            if rid in victims:
+                continue
+            assert store.retrieve_file(rid, "model.safetensors") == _read(p)
+        if round_ == 1:
+            for rid in victims:
+                store.delete_repo(rid.split("/")[0])
+            swept = store.gc()
+            assert swept["collected"] >= 2  # gc evicts + closes their readers
+    assert _open_fds() <= baseline, "reader fds leaked across gc+retrieve churn"
+    store.close()
+    assert _open_fds() < baseline  # close() drops every cached map
+
+
+def test_retired_reader_closes_at_last_release_not_mid_decode(tmp_path):
+    """An evicted handle pinned by an in-flight decode must stay usable and
+    close exactly when the pin count hits zero."""
+    p = str(tmp_path / "hub" / "org" / "m" / "model.safetensors")
+    _write_model(p, np.random.RandomState(77))
+    store = ZLLMStore(str(tmp_path / "store"), reader_cache_size=1)
+    store.ingest_file(p, "org/m")
+    cpath = store.file_index["org/m/model.safetensors"]["path"]
+
+    handle = store._acquire_reader(cpath)
+    assert handle.pins == 1 and not handle.retired
+    with store._cache_lock:
+        store._reader_cache.pop(cpath)      # evict while pinned
+    assert handle.retired
+    assert handle.reader.records            # still usable: mmap not closed
+    assert handle.reader.payload_size > 0
+    store._release_reader(handle)           # last release closes the map
+    assert handle.reader._mmap is None
+    store.close()
+
+
+def test_retrieve_tensor_resolves_names_via_near_dup_own_header(tmp_path):
+    """Regression (found in review): a near-dup whose header RENAMES the
+    tensors (record bytes identical, names permuted) must serve
+    retrieve_tensor by ITS names — never silently return the target's
+    same-named record."""
+    rng = np.random.RandomState(88)
+    x = (rng.randn(2048) * 0.02).astype(np.float32)
+    y = (rng.randn(2048) * 0.02).astype(np.float32)
+    a_path = str(tmp_path / "hub" / "a" / "model.safetensors")
+    b_path = str(tmp_path / "hub" / "b" / "model.safetensors")
+    # A: record 0 = alpha(x), record 1 = beta(y). B: identical bytes per
+    # record, but record 0 is NAMED beta and record 1 alpha.
+    _write_tensors(a_path, {"alpha": x, "beta": y})
+    _write_tensors(b_path, {"beta": x, "alpha": y})
+
+    store = ZLLMStore(str(tmp_path / "store"))
+    store.ingest_file(a_path, "org/a")
+    res = store.ingest_file(b_path, "org/b")
+    assert res.near_dup_hit, "setup: B must take the near-dup path"
+
+    data, meta = store.retrieve_tensor("org/b", "model.safetensors", "alpha")
+    assert data == y.tobytes() and meta["dtype"] == "F32"
+    data, _ = store.retrieve_tensor("org/b", "model.safetensors", "beta")
+    assert data == x.tobytes()
+    # A itself is untouched by B's renaming
+    data, _ = store.retrieve_tensor("org/a", "model.safetensors", "alpha")
+    assert data == x.tobytes()
+    with pytest.raises(KeyError):
+        store.retrieve_tensor("org/b", "model.safetensors", "gamma")
+    # file-level retrieval of B stays bit-exact too
+    assert store.retrieve_file("org/b", "model.safetensors") == _read(b_path)
+    store.close()
+
+
+def test_fsck_repair_refuses_orphan_wipe_when_index_not_loaded(tmp_path):
+    """Safety regression (found in review): fsck(repair=True) on a store
+    whose index was never loaded must NOT treat every container on disk as
+    an orphan and wipe the store."""
+    rng = np.random.RandomState(121)
+    p = str(tmp_path / "hub" / "org" / "m" / "model.safetensors")
+    _write_model(p, rng)
+    with ZLLMStore(str(tmp_path / "store")) as s1:
+        s1.ingest_file(p, "org/m")
+        s1.save_index()
+        cpath = s1.file_index["org/m/model.safetensors"]["path"]
+
+    fresh = ZLLMStore(str(tmp_path / "store"))   # index NOT loaded
+    report = fresh.fsck(repair=True, spot_check=0)
+    assert os.path.exists(cpath), "repair wiped a store with an unloaded index"
+    assert len(report.orphans) == 1
+    assert any("refused" in msg for _, msg in report.dangling)
+    fresh.close()
+
+    loaded = ZLLMStore(str(tmp_path / "store"))
+    assert loaded.load_index()
+    report = loaded.fsck(repair=True, spot_check=None)
+    assert report.ok and not report.orphans
+    assert loaded.retrieve_file("org/m", "model.safetensors") == _read(p)
+    loaded.close()

@@ -90,6 +90,283 @@ def test_parallel_stats_match_serial(tmp_path, corpus_dir):
         assert summaries[1][key] == summaries[4][key], key
 
 
+def test_pipelined_multifile_bit_identical_to_serial(tmp_path, corpus_dir):
+    """The multi-file extension of the workers-1-vs-4 equivalence: the whole
+    corpus through ONE cross-file pipelined ingest_many batch (stage A
+    prefetch + deferred writes) must produce byte-identical containers to
+    per-file serial ingest, with results in submission order."""
+    root, manifest = corpus_dir
+    uploads = [(os.path.join(root, rid, "model.safetensors"), rid)
+               for rid, _ in manifest]
+
+    s_serial = ZLLMStore(str(tmp_path / "serial"), workers=1)
+    serial_results = [s_serial.ingest_file(p, rid) for p, rid in uploads]
+
+    s_pipe = ZLLMStore(str(tmp_path / "pipe"), workers=4, pipeline_depth=3)
+    pipe_results = s_pipe.ingest_many(uploads)
+
+    c1 = _container_bytes(str(tmp_path / "serial"))
+    c2 = _container_bytes(str(tmp_path / "pipe"))
+    assert c1.keys() == c2.keys() and len(c1) > 0
+    for name in c1:
+        assert c1[name] == c2[name], f"pipelined container diverged: {name}"
+
+    # per-upload decisions match in submission order
+    assert len(pipe_results) == len(serial_results)
+    for rs, rp in zip(serial_results, pipe_results):
+        for f in ("repo_id", "filename", "raw_bytes", "stored_bytes",
+                  "file_dedup_hit", "near_dup_hit", "base_id", "n_tensors",
+                  "n_dedup", "n_bitx", "n_zipnn", "n_raw"):
+            assert getattr(rs, f) == getattr(rp, f), f
+    # aggregate stats and retrieval match too
+    for key in ("raw_bytes", "stored_bytes", "reduction_ratio",
+                "file_dedup_hits", "near_dup_hits", "tensor_dedup"):
+        assert s_serial.summary()[key] == s_pipe.summary()[key], key
+    for p, rid in uploads:
+        assert s_pipe.retrieve_file(rid, "model.safetensors") == open(p, "rb").read()
+    s_serial.close()
+    s_pipe.close()
+
+
+def test_ingest_repos_cross_repo_pipeline_matches_per_repo(tmp_path, corpus_dir):
+    root, manifest = corpus_dir
+    s_a = ZLLMStore(str(tmp_path / "per-repo"), workers=1)
+    for rid, _ in manifest:
+        s_a.ingest_repo(os.path.join(root, rid), rid)
+    s_b = ZLLMStore(str(tmp_path / "cross"), workers=4)
+    s_b.ingest_repos([(os.path.join(root, rid), rid) for rid, _ in manifest])
+    ca, cb = _container_bytes(str(tmp_path / "per-repo")), _container_bytes(str(tmp_path / "cross"))
+    assert ca.keys() == cb.keys() and all(ca[k] == cb[k] for k in ca)
+    s_a.close()
+    s_b.close()
+
+
+def test_process_entropy_backend_bit_identical(tmp_path):
+    """Opt-in ProcessPoolExecutor entropy stage: same containers, bit for
+    bit, as the in-thread entropy path (frames are pure functions of
+    bytes/level/threads). Skips nothing: if fork is unavailable the store
+    degrades to threads and the assertion still holds."""
+    rng = np.random.RandomState(21)
+    base_dir = str(tmp_path / "hub" / "org" / "b")
+    base = _write_model(os.path.join(base_dir, "model.safetensors"), rng,
+                        n_tensors=4, n=65536 // 4)
+    ft_dir = str(tmp_path / "hub" / "u" / "ft")
+    _write_finetune(os.path.join(ft_dir, "model.safetensors"), base, rng)
+    uploads = [(os.path.join(base_dir, "model.safetensors"), "org/b"),
+               (os.path.join(ft_dir, "model.safetensors"), "u/ft")]
+
+    s_thread = ZLLMStore(str(tmp_path / "threads"), workers=2)
+    s_thread.ingest_many(uploads)
+    s_proc = ZLLMStore(str(tmp_path / "procs"), workers=2, entropy_procs=2)
+    s_proc.ingest_many(uploads)
+
+    ct = _container_bytes(str(tmp_path / "threads"))
+    cp = _container_bytes(str(tmp_path / "procs"))
+    assert ct.keys() == cp.keys() and len(ct) == 2
+    for name in ct:
+        assert ct[name] == cp[name], f"entropy-procs container diverged: {name}"
+    s_thread.close()
+    s_proc.close()
+
+
+def test_pipelined_write_failure_rolls_back_cleanly(tmp_path, monkeypatch):
+    """A failed deferred container write must not leave the index pointing
+    at a container that never landed: the batch raises, the failed upload's
+    decisions are rolled back — including a later upload that whole-file-
+    dedup'd against the failed container — earlier uploads stay
+    retrievable, fsck is clean."""
+    import shutil
+    import time as time_mod
+    rng = np.random.RandomState(31)
+    dirs = []
+    for i in range(3):
+        d = str(tmp_path / "hub" / f"org{i}" / "m")
+        _write_model(os.path.join(d, "model.safetensors"),
+                     np.random.RandomState(100 + i), scale=1.0)
+        dirs.append(d)
+    # upload 3: byte-identical to upload 1 → file-dedup pin against the
+    # container whose write is about to fail
+    dup_dir = str(tmp_path / "hub" / "org3" / "m")
+    os.makedirs(dup_dir, exist_ok=True)
+    shutil.copyfile(os.path.join(dirs[1], "model.safetensors"),
+                    os.path.join(dup_dir, "model.safetensors"))
+    dirs.append(dup_dir)
+    uploads = [(os.path.join(d, "model.safetensors"), f"org{i}/m")
+               for i, d in enumerate(dirs)]
+
+    store = ZLLMStore(str(tmp_path / "store"), workers=2, pipeline_depth=2)
+    from repro.core.bitx import BitXWriter
+    real_write = BitXWriter.write
+    calls = []
+
+    def failing_write(self, path):
+        calls.append(path)
+        if len(calls) == 2:  # second container write blows up (disk full);
+            # the sleep lets the decision stage reach the dedup upload first
+            time_mod.sleep(0.5)
+            raise OSError(28, "No space left on device")
+        return real_write(self, path)
+
+    monkeypatch.setattr(BitXWriter, "write", failing_write)
+    with pytest.raises(OSError):
+        store.ingest_many(uploads)
+    monkeypatch.setattr(BitXWriter, "write", real_write)
+
+    # upload 0 committed; 1 (failed), 2 (poisoned suffix) and 3 (dedup pin
+    # into the failed container) all rolled back
+    assert "org0/m/model.safetensors" in store.file_index
+    for i in (1, 2, 3):
+        assert f"org{i}/m/model.safetensors" not in store.file_index, i
+    assert len(store.results) == store.stats.n_files == 1
+    assert store.retrieve_file("org0/m", "model.safetensors") == \
+        open(uploads[0][0], "rb").read()
+    report = store.fsck(repair=False, spot_check=None)
+    assert report.ok and not report.orphans, report.summary()
+    # the rolled-back uploads re-ingest cleanly afterwards; the dup now
+    # dedups against upload 1's NEW (successful) container
+    res = store.ingest_many(uploads[1:])
+    assert [r.file_dedup_hit for r in res] == [False, False, True]
+    for p, rid in uploads[1:]:
+        assert store.retrieve_file(rid, "model.safetensors") == open(p, "rb").read()
+    store.close()
+
+
+def test_gc_during_ingest_batch_serializes_safely(tmp_path):
+    """gc()/delete from another thread during an ingest batch must
+    serialize behind the admin lock — never corrupt index/lifecycle state
+    mid-decision."""
+    import threading
+    paths = []
+    for i in range(6):
+        p = str(tmp_path / "hub" / f"org{i}" / "m" / "model.safetensors")
+        _write_model(p, np.random.RandomState(300 + i), scale=1.0)
+        paths.append((p, f"org{i}/m"))
+    store = ZLLMStore(str(tmp_path / "store"), workers=2, pipeline_depth=2)
+    store.ingest_file(*paths[0])
+    store.delete_repo("org0")          # something for gc to reclaim
+
+    sweeps = []
+    t = threading.Thread(target=lambda: sweeps.append(store.gc()))
+    t.start()                          # races the batch below for the lock
+    store.ingest_many(paths[1:])
+    t.join(timeout=60)
+    assert sweeps and sweeps[0]["collected"] in (0, 1)
+    store.gc()                         # idempotent follow-up sweep
+    for p, rid in paths[1:]:
+        assert store.retrieve_file(rid, "model.safetensors") == open(p, "rb").read()
+    report = store.fsck(repair=False, spot_check=None)
+    assert report.ok and not report.orphans, report.summary()
+    store.close()
+
+
+def test_failed_batch_reregistering_key_twice_leaves_no_dangling_entry(
+        tmp_path, monkeypatch):
+    """Regression (found in review): a batch that ingests the SAME key twice
+    and fails must not 'restore' the second upload's index entry to the
+    first upload's generation — that generation was rolled back moments
+    earlier. The key must simply vanish and the bytes re-ingest cleanly."""
+    v1_path = str(tmp_path / "v1" / "model.safetensors")
+    v2_path = str(tmp_path / "v2" / "model.safetensors")
+    _write_model(v1_path, np.random.RandomState(51), scale=1.0)
+    _write_model(v2_path, np.random.RandomState(52), scale=1.0)
+    v1 = open(v1_path, "rb").read()
+
+    store = ZLLMStore(str(tmp_path / "store"), workers=2, pipeline_depth=2)
+    from repro.core.bitx import BitXWriter
+    monkeypatch.setattr(BitXWriter, "write",
+                        lambda self, path: (_ for _ in ()).throw(
+                            OSError(28, "No space left on device")))
+    with pytest.raises(OSError):
+        store.ingest_many([(v1_path, "org/m"), (v2_path, "org/m")])
+    monkeypatch.undo()
+
+    assert "org/m/model.safetensors" not in store.file_index
+    assert not store.results and store.stats.n_files == 0
+    report = store.fsck(repair=False, spot_check=None)
+    assert report.ok and not report.orphans, report.summary()
+    # v1's bytes must re-ingest as fresh content, not dedup against a ghost
+    res = store.ingest_file(v1_path, "other/m")
+    assert not res.file_dedup_hit
+    assert store.retrieve_file("other/m", "model.safetensors") == v1
+    store.close()
+
+
+def test_stage_b_failure_releases_file_hash_registration(tmp_path, monkeypatch):
+    """Regression (found in review): a stage-B failure BEFORE the pending
+    write exists must release the upload's whole-file hash registration —
+    otherwise a later identical upload false-dedups against the key's old
+    generation (different bytes)."""
+    v1_dir = str(tmp_path / "v1" / "org")
+    _write_model(os.path.join(v1_dir, "model.safetensors"),
+                 np.random.RandomState(61), scale=1.0)
+    v1 = open(os.path.join(v1_dir, "model.safetensors"), "rb").read()
+    v2_path = str(tmp_path / "v2" / "model.safetensors")
+    _write_model(v2_path, np.random.RandomState(62), scale=1.0)
+    v2 = open(v2_path, "rb").read()
+
+    store = ZLLMStore(str(tmp_path / "store"))
+    store.ingest_repo(v1_dir, "org")
+
+    real_plan = ZLLMStore._plan_tensors
+    monkeypatch.setattr(ZLLMStore, "_plan_tensors",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("source truncated under ingest")))
+    with pytest.raises(OSError):
+        store.ingest_file(v2_path, "org")   # failed re-registration, stage B
+    monkeypatch.setattr(ZLLMStore, "_plan_tensors", real_plan)
+
+    assert store.retrieve_file("org", "model.safetensors") == v1
+    # v2's bytes must ingest FRESH under another key, not dedup to org@old
+    res = store.ingest_file(v2_path, "other/m")
+    assert not res.file_dedup_hit
+    assert store.retrieve_file("other/m", "model.safetensors") == v2
+    report = store.fsck(repair=False, spot_check=None)
+    assert report.ok, report.summary()
+    store.close()
+
+
+def test_failed_reregistration_write_restores_previous_entry(tmp_path, monkeypatch):
+    """Regression (found in review): rolling back a FAILED re-registration
+    write must restore the key's previous index record — the old generation
+    is still on disk and must stay retrievable, and gc() must not reclaim
+    it."""
+    rng = np.random.RandomState(41)
+    v1_dir = str(tmp_path / "v1" / "org")
+    _write_model(os.path.join(v1_dir, "model.safetensors"), rng, scale=1.0)
+    v1 = open(os.path.join(v1_dir, "model.safetensors"), "rb").read()
+    v2_path = str(tmp_path / "v2" / "model.safetensors")
+    _write_model(v2_path, np.random.RandomState(99), scale=1.0)
+
+    store = ZLLMStore(str(tmp_path / "store"), workers=2)
+    store.ingest_repo(v1_dir, "org")
+
+    from repro.core.bitx import BitXWriter
+    monkeypatch.setattr(BitXWriter, "write",
+                        lambda self, path: (_ for _ in ()).throw(
+                            OSError(28, "No space left on device")))
+    with pytest.raises(OSError):
+        store.ingest_file(v2_path, "org")
+    monkeypatch.undo()
+
+    # the key still serves the OLD generation, and gc reclaims nothing
+    assert store.retrieve_file("org", "model.safetensors") == v1
+    assert store.gc()["collected"] == 0
+    assert store.retrieve_file("org", "model.safetensors") == v1
+    report = store.fsck(repair=False, spot_check=None)
+    assert report.ok and not report.orphans, report.summary()
+    # whole-file dedup still recognizes the old bytes
+    copy_path = str(tmp_path / "copy" / "model.safetensors")
+    os.makedirs(os.path.dirname(copy_path), exist_ok=True)
+    open(copy_path, "wb").write(v1)
+    assert store.ingest_file(copy_path, "mirror").file_dedup_hit
+    # and the re-registration succeeds once the disk recovers
+    res = store.ingest_file(v2_path, "org")
+    assert not res.file_dedup_hit
+    assert store.retrieve_file("org", "model.safetensors") == \
+        open(v2_path, "rb").read()
+    store.close()
+
+
 # ---------------------------------------------------------------------------
 # Base-map cache: one hash pass per base, ever
 # ---------------------------------------------------------------------------
