@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Ctx, Timer, corpus_bytes, emit
+from benchmarks.common import Ctx, Timer, chain_copy, corpus_bytes, emit
 from repro.core import zstd_compat as zstd
 from repro.core.chunkdedup import ChunkDedup, FastCDC
 from repro.core.pipeline import ZLLMStore
@@ -95,9 +95,13 @@ def workers_sweep(ctx: Ctx, workers=(1, 4)) -> dict:
     proot = PIPELINED_STORE_ROOT
     shutil.rmtree(proot, ignore_errors=True)
     store = ZLLMStore(proot, workers=max(workers), pipeline_depth=2)
-    uploads = [(ctx.model_file(rid), rid) for rid, _ in ctx.manifest]
+    # ingest_repos (NOT raw ingest_many over file paths): repo metadata must
+    # be parsed exactly as in the serial per-repo sweep, or metadata-declared
+    # bases (lora/vocab repos at default scale) silently resolve differently
+    # and the bit-identity assertion below fails
     with Timer() as t_in:
-        store.ingest_many(uploads)
+        store.ingest_repos([(ctx.repo_path(rid), rid)
+                            for rid, _ in ctx.manifest])
     with Timer() as t_out:
         for rid, _ in ctx.manifest:
             store.retrieve_file(rid, "model.safetensors", verify=False)
@@ -205,6 +209,58 @@ def serving_bench(ctx: Ctx, store_root: str, concurrency: int = 8,
     }
 
 
+def compaction_bench(ctx: Ctx, workers: int = 2) -> dict:
+    """Churn workload for the lifecycle metrics gated in CI: build a
+    dedup-chain of partial re-registrations over the corpus's largest base
+    (stranding dead payloads in superseded generations), delete the
+    fine-tune repos, sweep with the *incremental* collector (recording its
+    max exclusive read-gate pause), then ``compact()`` — reporting the net
+    bytes reclaimed and the reclaim ratio against the superseded total.
+    Every surviving file is verified bit-exact afterwards."""
+
+    root = "/tmp/repro-bench-compaction"
+    scratch = "/tmp/repro-bench-compaction-chain"
+    shutil.rmtree(root, ignore_errors=True)
+    shutil.rmtree(scratch, ignore_errors=True)
+    with ZLLMStore(root, workers=workers) as store:
+        for rid, _ in ctx.manifest:
+            store.ingest_repo(ctx.repo_path(rid), rid)
+        base_rid = next(rid for rid, kind in ctx.manifest if kind == "base")
+        prev = os.path.join(scratch, "g0", "model.safetensors")
+        chain_copy(ctx.model_file(base_rid), prev, seed=31, residue=None)
+        store.ingest_file(prev, "bench-compact/base")
+        for r in range(3):
+            p = os.path.join(scratch, f"g{r + 1}", "model.safetensors")
+            chain_copy(prev, p, seed=32 + r, residue=r)
+            store.ingest_file(p, "bench-compact/base")
+            prev = p
+        chain_bytes = open(prev, "rb").read()
+        for rid, kind in ctx.manifest:
+            if kind == "finetune":
+                store.delete_repo(rid)
+        with Timer() as t_gc:
+            swept = store.gc(incremental=True, max_pause_ms=50.0)
+        superseded = store.summary()["lifecycle"]["superseded_bytes"]
+        with Timer() as t_c:
+            rep = store.compact()
+        assert store.retrieve_file("bench-compact/base",
+                                   "model.safetensors") == chain_bytes
+        assert store.fsck(spot_check=1).ok
+        return {
+            "superseded_bytes": superseded,
+            "compaction_reclaimed_bytes": rep["net_reclaimed_bytes"],
+            "compaction_reclaim_ratio": round(
+                rep["net_reclaimed_bytes"] / superseded, 4) if superseded else 0.0,
+            "compaction_moved_records": rep["moved_records"],
+            "compaction_exclusive_hold_ms": rep["exclusive_hold_ms"],
+            "compaction_wall_s": round(t_c.seconds, 4),
+            "incremental_gc_max_pause_ms": swept["max_pause_ms"],
+            "incremental_gc_steps": swept["steps"],
+            "incremental_gc_collected": swept["collected"],
+            "incremental_gc_wall_s": round(t_gc.seconds, 4),
+        }
+
+
 def _assert_identical_containers(root_a: str, root_b: str) -> None:
     ca, cb = os.path.join(root_a, "containers"), os.path.join(root_b, "containers")
     for dirpath, _, files in os.walk(ca):
@@ -263,6 +319,11 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
     # --- cross-file pipelining + concurrent serving (PR 3) ---------------
     out["pipelined_two_uploads"] = two_upload_overlap(ctx, workers=max(workers))
     out["serving"] = serving_bench(ctx, PIPELINED_STORE_ROOT)
+
+    # --- compaction + incremental GC (PR 4): the CI-gated lifecycle
+    # metrics (compaction_reclaimed_bytes higher-is-better,
+    # incremental_gc_max_pause_ms lower-is-better) ------------------------
+    out["lifecycle_compaction"] = compaction_bench(ctx)
 
     serial = out["zllm"][f"workers_{workers[0]}"]
     out["relative_ordering_ok"] = bool(

@@ -30,8 +30,25 @@ import sys
 from typing import Dict, List, Tuple
 
 # concurrent_retrieve_MBps is matched by the retrieve_MBps suffix already;
-# listed explicitly so the serving gate survives a suffix reshuffle
-GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps")
+# listed explicitly so the serving gate survives a suffix reshuffle.
+# compaction_reclaimed_bytes gates like a throughput: a big drop means
+# compact() stopped reclaiming superseded generations.
+GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
+                  "compaction_reclaimed_bytes")
+
+# Lower-is-better keys: fail when the FRESH value RISES past
+# baseline * (1 + max_rise). Pause times are noisy (scheduler, shared
+# runners), so the default rise budget is deliberately loose (--max-rise,
+# 3.0 = 4x baseline) AND sub-floor values never fail: a legitimately FULL
+# gc step is allowed to spend its whole configured budget (50 ms in
+# compaction_bench) inside the gate, and a 0.3ms -> 2ms scheduler hiccup is
+# not a regression either, so the floor sits at 5x the step budget — only
+# "incremental gc became stop-the-world"-scale pauses can fail. NOTE: the
+# committed baseline's lifecycle_compaction section is recorded at the
+# --tiny scale CI compares against — reclaimed BYTES scale with the
+# corpus, unlike the MB/s keys.
+GATED_INVERSE_SUFFIXES = ("incremental_gc_max_pause_ms",)
+INVERSE_FAIL_FLOOR = 250.0  # ms: rises that stay under this never fail
 
 
 def _flatten(d: Dict, prefix: str = "") -> Dict:
@@ -45,17 +62,22 @@ def _flatten(d: Dict, prefix: str = "") -> Dict:
     return out
 
 
-def compare(baseline: Dict, fresh: Dict,
-            max_drop: float) -> Tuple[List[Tuple], List[str], List[str]]:
+def compare(baseline: Dict, fresh: Dict, max_drop: float,
+            max_rise: float = 3.0) -> Tuple[List[Tuple], List[str], List[str]]:
     """Returns (rows, failing keys, warnings); a row is
-    (key, base, fresh, drop, status). Warnings cover gated keys present in
-    only one file — tolerated (new metrics need a baseline regeneration to
-    become enforced; dropped metrics may be a sweep-config change) but
-    surfaced so a silently vanished gate cannot go unnoticed."""
+    (key, base, fresh, drop, status). Higher-is-better keys
+    (GATED_SUFFIXES) fail on a fractional *drop* > ``max_drop``;
+    lower-is-better keys (GATED_INVERSE_SUFFIXES) fail on a fractional
+    *rise* > ``max_rise`` (their row's drop column is the negative rise).
+    Warnings cover gated keys present in only one file — tolerated (new
+    metrics need a baseline regeneration to become enforced; dropped
+    metrics may be a sweep-config change) but surfaced so a silently
+    vanished gate cannot go unnoticed."""
     b, f = _flatten(baseline), _flatten(fresh)
     rows, failures, warnings = [], [], []
     for key in sorted(b):
-        if not key.endswith(GATED_SUFFIXES):
+        inverse = key.endswith(GATED_INVERSE_SUFFIXES)
+        if not (key.endswith(GATED_SUFFIXES) or inverse):
             continue
         bv, fv = b[key], f.get(key)
         if isinstance(bv, (int, float)) and fv is None:
@@ -74,14 +96,19 @@ def compare(baseline: Dict, fresh: Dict,
                                 f"the baseline is {bv!r} — not enforced until "
                                 f"the baseline is regenerated")
             continue
-        drop = 1.0 - fv / bv if bv else 0.0
-        failed = drop > max_drop
-        rows.append((key, bv, fv, drop, "FAIL" if failed else "ok"))
+        if inverse:
+            rise = fv / bv - 1.0 if bv else 0.0
+            failed = rise > max_rise and fv > INVERSE_FAIL_FLOOR
+            rows.append((key, bv, fv, -rise, "FAIL" if failed else "ok"))
+        else:
+            drop = 1.0 - fv / bv if bv else 0.0
+            failed = drop > max_drop
+            rows.append((key, bv, fv, drop, "FAIL" if failed else "ok"))
         if failed:
             failures.append(key)
     for key in sorted(f):
-        if (key.endswith(GATED_SUFFIXES) and key not in b
-                and isinstance(f[key], (int, float))):
+        if (key.endswith(GATED_SUFFIXES + GATED_INVERSE_SUFFIXES)
+                and key not in b and isinstance(f[key], (int, float))):
             warnings.append(f"gated key {key!r} has no baseline entry "
                             f"(fresh {f[key]}) — not enforced until the "
                             f"baseline is regenerated")
@@ -94,11 +121,15 @@ def main() -> int:
     ap.add_argument("--fresh", required=True, help="this run's bench JSON")
     ap.add_argument("--max-drop", type=float, default=0.25,
                     help="maximum tolerated fractional throughput drop")
+    ap.add_argument("--max-rise", type=float, default=3.0,
+                    help="maximum tolerated fractional rise of "
+                         "lower-is-better keys (gc pause)")
     args = ap.parse_args()
 
     baseline = json.load(open(args.baseline))
     fresh = json.load(open(args.fresh))
-    rows, failures, warnings = compare(baseline, fresh, args.max_drop)
+    rows, failures, warnings = compare(baseline, fresh, args.max_drop,
+                                       args.max_rise)
 
     if not rows:
         print("check_regression: no comparable throughput keys found", file=sys.stderr)

@@ -21,6 +21,38 @@ EXPERIMENTS = Path(__file__).resolve().parents[1] / "experiments"
 BENCH_OUT = EXPERIMENTS / "bench"
 
 
+def chain_copy(src: str, dst: str, seed: int, residue=None, rounds: int = 3) -> None:
+    """Copy safetensors ``src`` with tensors whose index ``% rounds ==
+    residue`` replaced by fresh random content of the same shape/dtype
+    (``residue=None`` randomizes every float tensor). Random replacements
+    have a large bit distance, so re-registrations store standalone and
+    *dedup* the unchanged tensors against pins in earlier generations — the
+    churn chain that strands dead payloads inside superseded generations
+    for ``compact()`` to reclaim. Shared by ``fsck_smoke``'s compact leg
+    and ``bench_throughput.compaction_bench`` so the smoke's >=30% reclaim
+    assertion and the CI-gated ``compaction_reclaimed_bytes`` metric keep
+    measuring the same workload."""
+    import ml_dtypes
+    import numpy as np
+    from repro.formats import safetensors as st
+
+    tensors = st.load_file(src)
+    rng = np.random.RandomState(seed)
+    out = {}
+    for j, (name, arr) in enumerate(tensors.items()):
+        change = residue is None or j % rounds == residue
+        if not change or arr.dtype.kind not in ("f", "u"):
+            out[name] = arr
+        elif arr.dtype == np.uint16:  # bf16 weights load as uint16 bit views
+            out[name] = rng.randn(*arr.shape).astype(ml_dtypes.bfloat16)
+        elif arr.dtype.kind == "f":
+            out[name] = rng.randn(*arr.shape).astype(arr.dtype)
+        else:
+            out[name] = arr
+    os.makedirs(os.path.dirname(dst), exist_ok=True)
+    st.save_file(out, dst)
+
+
 @dataclass
 class Ctx:
     corpus_root: str

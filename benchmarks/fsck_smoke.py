@@ -20,7 +20,7 @@ import sys
 import ml_dtypes
 import numpy as np
 
-from benchmarks.common import Ctx, build_ctx
+from benchmarks.common import Ctx, build_ctx, chain_copy
 from repro.core.pipeline import ZLLMStore
 from repro.formats import safetensors as st
 
@@ -111,6 +111,54 @@ def run(ctx: Ctx) -> int:
             failures.append("fsck repair left orphan debris on disk")
         else:
             print("fsck_smoke: orphan debris flagged and repaired")
+
+        # churn 4 (compact leg): superseded-generation pressure. A fresh
+        # standalone family is re-registered 3x with a rotating third of its
+        # tensors randomized — later generations dedup the unchanged tensors
+        # against pins in earlier ones, stranding the replaced payloads in
+        # superseded generations gc cannot reclaim. Then delete the
+        # fine-tune half of the corpus, sweep incrementally, and compact():
+        # >= 30% of the superseded bytes must come back, every survivor
+        # bit-exact, and fsck must validate all post-compact pins.
+        chain_rid = "compactfam/base"
+        chain_dir = "/tmp/repro-fsck-smoke-chain"
+        shutil.rmtree(chain_dir, ignore_errors=True)
+        src = ctx.model_file(base_rid)
+        prev = os.path.join(chain_dir, "g0", "model.safetensors")
+        chain_copy(src, prev, seed=71, residue=None)  # fresh family content
+        store.ingest_file(prev, chain_rid)
+        for r in range(3):
+            p = os.path.join(chain_dir, f"g{r + 1}", "model.safetensors")
+            chain_copy(prev, p, seed=72 + r, residue=r)
+            res = store.ingest_file(p, chain_rid)
+            print(f"fsck_smoke: chain gen {r + 1}: {res.n_dedup} dedup / "
+                  f"{res.n_tensors} tensors")
+            prev = p
+        chain_bytes = open(prev, "rb").read()
+        victims = {victim}
+        for rid, kind in ctx.manifest:
+            if kind == "finetune":
+                victims.add(rid)
+        for rid in victims - {victim}:  # the earlier victim is already gone
+            store.delete_repo(rid)
+        swept = store.gc(incremental=True, max_pause_ms=50.0)
+        print(f"fsck_smoke: incremental gc: {swept['collected']} collected "
+              f"in {swept['steps']} step(s), max pause "
+              f"{swept['max_pause_ms']:.2f} ms")
+        superseded = store.summary()["lifecycle"]["superseded_bytes"]
+        rep = store.compact()
+        ratio = (rep["net_reclaimed_bytes"] / superseded) if superseded else 0.0
+        print(f"fsck_smoke: compact retired {rep['retired_versions']} gen(s), "
+              f"moved {rep['moved_records']} record(s), net reclaimed "
+              f"{rep['net_reclaimed_bytes']}/{superseded} superseded bytes "
+              f"({ratio:.0%}), exclusive hold {rep['exclusive_hold_ms']:.2f} ms")
+        if superseded and ratio < 0.30:
+            failures.append(f"compact reclaimed only {ratio:.0%} of superseded "
+                            f"bytes (require >= 30%)")
+        if store.retrieve_file(chain_rid, "model.safetensors") != chain_bytes:
+            failures.append("chain head not bit-identical after compact")
+        n = _verify_all(store, ctx, skip=tuple({base_rid} | victims))
+        print(f"fsck_smoke: {n} survivors bit-exact after compact")
 
         report = store.fsck(repair=False, spot_check=None)
         print("fsck_smoke: fsck", report.summary())

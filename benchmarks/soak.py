@@ -118,14 +118,35 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
                         p2 = os.path.join(scratch, f"re{rnd}", "model.safetensors")
                         _perturbed_copy(p, p2)
                         store.ingest_file(p2, again)
-                    # 3) delete the oldest soak repo + gc under traffic
+                    # 3) delete the oldest soak repo + gc under traffic —
+                    #    alternating stop-the-world and incremental sweeps
+                    #    so both reclamation paths soak under live load
                     if len(churned) > 3:
                         victim = churned.pop(0)
                         store.delete_repo(victim)
-                        swept = store.gc()
-                        log.line(f"round {rnd}: gc collected "
-                                 f"{swept['collected']}, freed "
-                                 f"{swept['reclaimed_bytes']}B")
+                        if rnd % 2 == 0:
+                            swept = store.gc(incremental=True,
+                                             max_pause_ms=50.0)
+                            log.line(f"round {rnd}: incremental gc collected "
+                                     f"{swept['collected']} in "
+                                     f"{swept['steps']} step(s), freed "
+                                     f"{swept['reclaimed_bytes']}B, max pause "
+                                     f"{swept['max_pause_ms']:.2f}ms")
+                        else:
+                            swept = store.gc()
+                            log.line(f"round {rnd}: gc collected "
+                                     f"{swept['collected']}, freed "
+                                     f"{swept['reclaimed_bytes']}B")
+                    # 3b) compact every 4th round: rewrite still-referenced
+                    #     records out of superseded generations while the
+                    #     clients keep hammering the stable population
+                    if rnd % 4 == 0:
+                        rep = store.compact()
+                        log.line(f"round {rnd}: compact retired "
+                                 f"{rep['retired_versions']} gen(s), moved "
+                                 f"{rep['moved_records']} rec(s), net freed "
+                                 f"{rep['net_reclaimed_bytes']}B, hold "
+                                 f"{rep['exclusive_hold_ms']:.2f}ms")
                     # 4) periodic light fsck under traffic
                     if rnd % 5 == 0:
                         rep = store.fsck(repair=False, spot_check=1)
@@ -150,6 +171,7 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
         # orphan scan (crash debris would mean the publish protocol leaked)
         report = store.fsck(repair=False, spot_check=None)
         log.line(f"final fsck: {report.summary()}")
+        log.line(f"lifecycle: {store.summary()['lifecycle']}")
         if not report.ok:
             failures.append(f"final fsck dirty: {report.summary()}")
         if report.orphans:

@@ -24,6 +24,7 @@ from __future__ import annotations
 import io
 import json
 import mmap
+import os
 import struct
 import threading
 from dataclasses import dataclass, field
@@ -38,6 +39,7 @@ __all__ = [
     "TensorRecord",
     "BitXWriter",
     "BitXReader",
+    "TMP_SUFFIX",
     "xor_delta_planes_np",
     "merge_planes_xor_np",
     "byte_planes_np",
@@ -45,6 +47,13 @@ __all__ = [
 
 MAGIC = b"BITX0001"
 DEFAULT_ZSTD_LEVEL = 3
+
+# Containers are written to ``<path>.part`` and atomically renamed into
+# place, so a crash mid-write can never leave a torn file at a path the
+# index might reference. Leftover ``.part`` files are crash debris; the
+# store's fsck orphan scan recognizes the suffix and deletes them under
+# repair (they are never referenced by the version graph).
+TMP_SUFFIX = ".part"
 
 
 def _bit_view_np(arr: np.ndarray) -> np.ndarray:
@@ -282,10 +291,34 @@ class BitXWriter:
             out.write(f)
         return out.getvalue()
 
-    def write(self, path: str) -> int:
+    def write(self, path: str, *, fault_hook=None, fsync: bool = False) -> int:
+        """Write the container atomically: bytes land at ``path + TMP_SUFFIX``
+        first and are renamed into place, so a crash at any instant leaves
+        either no file, a ``.part`` temp (orphan-scan debris), or the
+        complete container — never a torn file at the final path.
+
+        ``fault_hook(point_name)`` is the crash-injection hook for the
+        recovery test harness; it may raise to simulate a kill at that
+        point. No cleanup runs when it does — the on-disk state is exactly
+        what a real crash would leave (callers that *handle* failures, e.g.
+        the ingest rollback, remove both ``path`` and the temp themselves).
+        ``fsync=True`` flushes the temp file to stable storage before the
+        rename (the compaction path, where the old copies are deleted soon
+        after)."""
         blob = self.tobytes()
-        with open(path, "wb") as f:
+        if fault_hook is not None:
+            fault_hook("writer.before_write")
+        tmp = path + TMP_SUFFIX
+        with open(tmp, "wb") as f:
             f.write(blob)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        if fault_hook is not None:
+            fault_hook("writer.after_temp")
+        os.replace(tmp, path)
+        if fault_hook is not None:
+            fault_hook("writer.after_rename")
         return len(blob)
 
 

@@ -185,6 +185,46 @@ class ContainerLifecycle:
         return counts
 
     # -- GC ----------------------------------------------------------------
+    def reachable(self, roots: Iterable[str]) -> Set[str]:
+        """Live version ids transitively reachable from ``roots`` over the
+        edge graph — the mark phase shared by stop-the-world ``collect``,
+        the store's incremental GC steps, and ``compact()``."""
+        live: Set[str] = set()
+        stack = [r for r in roots if r in self.versions]
+        while stack:
+            vid = stack.pop()
+            if vid in live:
+                continue
+            live.add(vid)
+            for dst in self.edges.get(vid, ()):
+                if dst not in live and dst in self.versions:
+                    stack.append(dst)
+        return live
+
+    def gc_roots(self, anchors: Iterable[str]) -> List[str]:
+        """``anchors`` plus every quarantined version: quarantined versions
+        are roots too — their dependency targets must stay alive so a later
+        restore/repair still resolves (the documented quarantine
+        guarantee)."""
+        roots = [a for a in anchors]
+        roots += [vid for vid, v in self.versions.items() if v.quarantined]
+        return roots
+
+    def retire(self, key: str, gen: int) -> Optional[VersionInfo]:
+        """Reclaim one version (GC / compaction accounting: counts toward
+        ``reclaimed_bytes``/``n_collected``, unlike :meth:`discard` which is
+        for versions that never made it to disk). The caller is responsible
+        for having proven the version dead and for deleting the file."""
+        v = self.versions.pop(make_vid(key, gen), None)
+        if v is None:
+            return None
+        self.edges.pop(v.vid, None)
+        if not v.quarantined:
+            self._live_bytes -= v.nbytes
+        self.reclaimed_bytes += v.nbytes
+        self.n_collected += 1
+        return v
+
     def collect(self, anchors: Iterable[str]) -> List[VersionInfo]:
         """Reclaim every version unreachable from ``anchors``.
 
@@ -198,28 +238,11 @@ class ContainerLifecycle:
         scrubs its hash indexes.
         """
         self.n_gc_runs += 1
-        live: Set[str] = set()
-        stack = [a for a in anchors if a in self.versions]
-        # quarantined versions are roots too: their dependency targets must
-        # stay alive so a later restore/repair still resolves (the documented
-        # quarantine guarantee)
-        stack += [vid for vid, v in self.versions.items() if v.quarantined]
-        while stack:
-            vid = stack.pop()
-            if vid in live:
-                continue
-            live.add(vid)
-            for dst in self.edges.get(vid, ()):
-                if dst not in live and dst in self.versions:
-                    stack.append(dst)
+        live = self.reachable(self.gc_roots(anchors))
         reclaimed = [v for vid, v in self.versions.items()
                      if vid not in live and not v.quarantined]
         for v in reclaimed:
-            del self.versions[v.vid]
-            self.edges.pop(v.vid, None)
-            self.reclaimed_bytes += v.nbytes
-            self._live_bytes -= v.nbytes
-        self.n_collected += len(reclaimed)
+            self.retire(v.key, v.gen)
         return reclaimed
 
     def quarantine(self, key: str, gen: int, new_path: str) -> None:

@@ -104,6 +104,20 @@ Container lifecycle & GC (``repro.core.lifecycle``):
   point at a live generation. ``repair=True`` re-pins dangling hashes to a
   surviving copy when one exists and quarantines corrupt containers
   (moved aside, graph node kept so dependants stay repairable).
+* **Compaction & incremental GC.** After churn, payload tensors stay
+  pinned inside superseded generations that gc cannot reclaim (some
+  dependant still resolves into them). ``compact()`` rewrites exactly the
+  still-referenced records — verbatim frame copies, so the BitX math and
+  every byte are preserved — into a fresh ``.compact/pool@gN`` container,
+  re-pins ``tensor_locations`` under one short exclusive gate hold, and
+  retires the old generations entirely. ``gc(incremental=True)`` replaces
+  the stop-the-world sweep with bounded steps (target
+  ``max_pause_ms`` exclusive hold each, resumable cursor persisted in the
+  v3 index) that interleave with ingest and serving. Both persist the
+  index *before* unlinking retired files and write containers via
+  temp-suffix + atomic rename, so a crash at any instant leaves only
+  orphan debris that ``fsck(repair=True)`` removes — never a dangling
+  index or a lost live tensor (proven by tests/test_crash_recovery.py).
 
 This module is also the storage backend of the training framework: the
 checkpoint manager (`repro.checkpoint`) ingests every checkpoint through a
@@ -114,6 +128,7 @@ first checkpoint exactly like fine-tuned models against a base.
 from __future__ import annotations
 
 import base64
+import bisect
 import json
 import os
 import struct
@@ -129,8 +144,8 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 import numpy as np
 
 from repro.core import zstd_compat as zstd
-from repro.core.bitx import (BitXCodec, BitXReader, BitXWriter, byte_planes_np,
-                             xor_delta_planes_np)
+from repro.core.bitx import (TMP_SUFFIX, BitXCodec, BitXReader, BitXWriter,
+                             byte_planes_np, xor_delta_planes_np)
 from repro.core.clustering import FamilyRegistry
 from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes, sha256_file
 from repro.core.lifecycle import ContainerLifecycle, FsckReport, make_vid
@@ -138,7 +153,8 @@ from repro.formats.modelcard import parse_repo_metadata
 from repro.formats.safetensors import (STR_TO_DTYPE, SafetensorsFile,
                                        read_header_blob)
 
-__all__ = ["ZLLMStore", "IngestResult", "StoreStats"]
+__all__ = ["ZLLMStore", "IngestResult", "StoreStats", "COMPACT_KEY",
+           "COMPACT_FAULT_POINTS", "GC_FAULT_POINTS"]
 
 
 def _entropy_compress(level: int, threads: int, blobs: List[bytes]) -> List[bytes]:
@@ -151,7 +167,28 @@ def _entropy_compress(level: int, threads: int, blobs: List[bytes]) -> List[byte
     c = zstd.ZstdCompressor(level=level, threads=threads)
     return [c.compress(b) for b in blobs]
 
-INDEX_FORMAT = 2  # v1 = PR-1 (no generations); v2 adds lifecycle + pinned gens
+# v1 = PR-1 (no generations); v2 adds lifecycle + pinned gens; v3 adds the
+# incremental-GC cursor + compaction state (compact-pool versions travel in
+# the v2 lifecycle section unchanged — v3 is structurally v2 plus optional
+# keys, and v2/v1 indexes load with the new fields defaulted)
+INDEX_FORMAT = 3
+
+# Synthetic container key owned by compact(): rewritten survivor records
+# land in ``containers/.compact/pool@gN.bitx`` versions. The leading dot
+# keeps it out of any plausible ``repo_id/filename`` namespace; compact-pool
+# versions have no file_index entry and stay alive purely through dependant
+# edges (gc reclaims them once the last dependant dies).
+COMPACT_KEY = ".compact/pool"
+
+# Fault points the crash-injection harness (tests/test_crash_recovery.py)
+# may kill compact()/gc() at, via ``store.fault_hook``. The writer.* points
+# fire inside BitXWriter.write (temp write / atomic rename).
+COMPACT_FAULT_POINTS = ("compact.begin", "writer.before_write",
+                        "writer.after_temp", "writer.after_rename",
+                        "compact.after_commit", "compact.after_index",
+                        "compact.after_unlink")
+GC_FAULT_POINTS = ("gc.step.begin", "gc.step.after_commit",
+                   "gc.step.after_index", "gc.step.after_unlink")
 
 _FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
 
@@ -197,6 +234,12 @@ class StoreStats:
     live_bytes: int = 0
     reclaimed_bytes: int = 0
     n_deleted: int = 0
+    # compaction + incremental-GC accounting: net bytes freed by compact()
+    # (retired superseded generations minus the rewritten survivor bytes)
+    # and the longest exclusive read-gate hold of any incremental gc step
+    compaction_reclaimed_bytes: int = 0
+    compact_runs: int = 0
+    gc_max_pause_ms: float = 0.0
 
     @property
     def reduction_ratio(self) -> float:
@@ -512,6 +555,14 @@ class ZLLMStore:
         # never take it. Reentrant for delete_repo -> delete_file. Lock
         # order is always admin lock THEN gate — never the reverse.
         self._admin_lock = threading.RLock()
+        # incremental GC: resumable sweep cursor (last retired vid; persisted
+        # in the v3 index so a restarted store continues where it left off)
+        self._gc_cursor = ""
+        # crash-injection hook: called with a fault-point name (see
+        # COMPACT_FAULT_POINTS / GC_FAULT_POINTS) at each crash-consistency
+        # boundary of compact()/gc(); the recovery harness raises from it to
+        # simulate a kill. Never set in production.
+        self.fault_hook: Optional[Callable[[str], None]] = None
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -926,10 +977,11 @@ class ZLLMStore:
             # a reader may have slipped in between epoch release and this
             # rollback; retire it so the deleted file's mmap/fd is dropped
             self._reader_cache.pop(pw.cpath)
-        try:
-            os.remove(pw.cpath)
-        except OSError:
-            pass
+        for p in (pw.cpath, pw.cpath + TMP_SUFFIX):
+            try:
+                os.remove(p)
+            except OSError:
+                pass
         try:
             self.results.remove(pw.res)
         except ValueError:
@@ -1648,22 +1700,478 @@ class ZLLMStore:
         self.families.unregister(repo_id)
         return n
 
-    def gc(self) -> Dict[str, int]:
+    def _fault(self, point: str) -> None:
+        """Crash-injection boundary: the recovery harness installs
+        ``fault_hook`` and raises from it to simulate a kill at ``point``.
+        Disk-side crash consistency is by *ordering* (container writes are
+        temp+rename; the index is persisted before retired files are
+        unlinked), so no cleanup handlers run when the hook raises — the
+        on-disk state is exactly what a real crash would leave. The store
+        instance may be mid-mutation afterwards; recover by reopening from
+        the root, as a restarted process would."""
+        if self.fault_hook is not None:
+            self.fault_hook(point)
+
+    def gc(self, *, incremental: bool = False, max_pause_ms: float = 50.0,
+           persist: Optional[bool] = None) -> Dict[str, int]:
         """Reclaim every container version unreachable from live index
         entries (cascading refcount sweep), delete the files, scrub tensor
         hashes that pointed into them, and evict stale mmap readers.
 
-        Holds the admin lock (mutual exclusion with ingest batches, deletes
-        and fsck) and then the write gate for the sweep itself: in-flight
-        retrievals finish on the pre-gc state first (they can never be
-        handed a reclaimed generation), retrievals arriving during the
-        sweep wait the few milliseconds it takes — the serving layer's
-        snapshot isolation."""
-        with self._admin_lock:
-            with self._gate.write():
-                return self._gc_locked()
+        **Stop-the-world (default):** holds the admin lock (mutual
+        exclusion with ingest batches, deletes and fsck) and then the write
+        gate for the whole sweep: in-flight retrievals finish on the pre-gc
+        state first (they can never be handed a reclaimed generation),
+        retrievals arriving during the sweep wait the few milliseconds it
+        takes — the serving layer's snapshot isolation. Both modes persist
+        the index (``persist``, default True) *before* unlinking the
+        reclaimed files, so the on-disk index never references a deleted
+        container — the crash-ordering invariant shared with
+        :meth:`compact`.
 
-    def _gc_locked(self) -> Dict[str, int]:
+        **Incremental (``incremental=True``):** the sweep runs as a series
+        of :meth:`gc_step` calls that interleave with ingest and serving —
+        the admin lock is released between steps (a waiting ingest batch
+        gets in) and the write gate is held only for each step's bounded
+        reclaim window (target ``max_pause_ms``; the mark phase runs
+        outside the gate, so readers keep decoding through it). Each step
+        re-marks against the then-current graph, persists the resumable
+        cursor + graph to the index (``persist``, default True) *before*
+        unlinking the step's files, and records its exclusive hold in
+        ``stats.gc_max_pause_ms``. Returns the aggregate sweep dict
+        (``steps``, ``max_pause_ms`` on top of the stop-the-world keys).
+        """
+        if not incremental:
+            with self._admin_lock:
+                with self._gate.write():
+                    out, reclaimed = self._gc_locked()
+                if persist is None or persist:
+                    self.save_index()
+                # unlink AFTER the persist (crash window closed) and outside
+                # the gate: reclaimed versions are unreachable through
+                # tensor_locations the moment the gate drops, and evicted
+                # readers are pin-counted
+                for v in reclaimed:
+                    try:
+                        os.remove(v.path)
+                    except OSError:
+                        pass
+            return out
+        agg = {"collected": 0, "reclaimed_bytes": 0, "dropped_tensor_refs": 0,
+               "steps": 0, "max_pause_ms": 0.0}
+        while True:
+            step = self.gc_step(max_pause_ms=max_pause_ms,
+                                persist=persist if persist is not None else True)
+            agg["steps"] += 1
+            agg["collected"] += step["collected"]
+            agg["reclaimed_bytes"] += step["reclaimed_bytes"]
+            agg["dropped_tensor_refs"] += step["dropped_tensor_refs"]
+            agg["max_pause_ms"] = max(agg["max_pause_ms"], step["pause_ms"])
+            if step["done"]:
+                break
+        agg["live_bytes"] = self.stats.live_bytes
+        return agg
+
+    def gc_step(self, max_pause_ms: float = 50.0,
+                persist: bool = True) -> Dict:
+        """One bounded step of the incremental sweep (see :meth:`gc`).
+
+        Marks reachability *without* the write gate (the admin lock
+        excludes every mutator; retrievals only read the graph), then holds
+        the gate exclusively just long enough to retire a batch of
+        unreachable versions — the batch is cut when the ``max_pause_ms``
+        budget is spent, always making progress (at least one version),
+        and the pool-wide pin scrub runs after the gate drops so the
+        exclusive hold is O(victims), not O(pool).
+        The resumable cursor (last retired vid, persisted in the v3 index)
+        rotates the start point so a long backlog is drained fairly across
+        steps and a restarted store resumes where the crash left it.
+        Files are unlinked *after* the index is persisted (and outside the
+        gate — evicted readers are pin-counted, and retired versions are
+        unreachable through ``tensor_locations`` the moment the gate
+        drops), so the on-disk index never references a deleted container.
+        """
+        with self._admin_lock:
+            return self._gc_step_locked(max_pause_ms, persist)
+
+    def _gc_step_locked(self, max_pause_ms: float, persist: bool) -> Dict:
+        self._fault("gc.step.begin")
+        roots = self.lifecycle.gc_roots(self._anchor_vids())
+        live = self.lifecycle.reachable(roots)
+        garbage = sorted(vid for vid, v in self.lifecycle.versions.items()
+                         if vid not in live and not v.quarantined)
+        out = {"collected": 0, "reclaimed_bytes": 0, "dropped_tensor_refs": 0,
+               "pause_ms": 0.0, "remaining": 0, "done": True}
+        if not garbage:
+            self._gc_cursor = ""
+            self.lifecycle.n_gc_runs += 1  # a completed (possibly empty) sweep
+            return out
+        # resume after the cursor, wrapping (vids sort stably; a vid that
+        # equals the cursor was already retired, so bisect_right is exact)
+        start = bisect.bisect_right(garbage, self._gc_cursor) % len(garbage)
+        ordered = garbage[start:] + garbage[:start]
+        budget = max(max_pause_ms, 0.0) / 1000.0
+        victims: List = []
+        t0 = time.perf_counter()
+        with self._gate.write():
+            for vid in ordered:
+                v = self.lifecycle.versions.get(vid)
+                if v is None:
+                    continue
+                self.lifecycle.retire(v.key, v.gen)
+                with self._cache_lock:
+                    self._reader_cache.pop(v.path)
+                victims.append(v)
+                if time.perf_counter() - t0 >= budget:
+                    break
+        pause_ms = round((time.perf_counter() - t0) * 1000.0, 3)
+        # The O(pool) pin scrub runs OUTSIDE the exclusive hold, keeping the
+        # pause O(victims) regardless of pool size: the retired versions
+        # were unreachable from every anchor, so no live record can resolve
+        # into them — a reader between gate-drop and scrub would need a pin
+        # no retrieval path ever reaches (and ingest, which could mint new
+        # dedup records against stale pins, is excluded by the admin lock).
+        dead = {(v.key, v.gen) for v in victims}
+        stale = [h for h, (k, g, _) in self.tensor_locations.items()
+                 if (k, g) in dead]
+        for h in stale:
+            del self.tensor_locations[h]
+            self.tensor_dedup.forget(h)
+        freed = sum(v.nbytes for v in victims)
+        self.stats.reclaimed_bytes += freed
+        self.stats.live_bytes = self.lifecycle.live_bytes()
+        self.stats.gc_max_pause_ms = max(self.stats.gc_max_pause_ms, pause_ms)
+        remaining = len(ordered) - len(victims)
+        if remaining:
+            self._gc_cursor = victims[-1].vid
+        else:
+            self._gc_cursor = ""
+            self.lifecycle.n_gc_runs += 1
+        self._fault("gc.step.after_commit")
+        if persist:
+            self.save_index()
+        self._fault("gc.step.after_index")
+        for v in victims:
+            try:
+                os.remove(v.path)
+            except OSError:
+                pass
+        self._fault("gc.step.after_unlink")
+        out.update({"collected": len(victims), "reclaimed_bytes": freed,
+                    "dropped_tensor_refs": len(stale),
+                    "pause_ms": pause_ms, "remaining": remaining,
+                    "done": remaining == 0})
+        return out
+
+    # ------------------------------------------------------------------
+    # Compaction: dedup-aware rebalancing of superseded generations
+    # ------------------------------------------------------------------
+    def compact(self, *, persist: bool = True) -> Dict:
+        """Rewrite still-referenced tensor records out of superseded
+        generations and retire those generations entirely.
+
+        After churn (re-registration chains, ``delete_repo``, gc) payload
+        tensors stay pinned inside superseded ``key@gN`` containers: the
+        generation is live only because some dependant's dedup record or
+        BitX base reference resolves into it, while the rest of its bytes
+        are dead weight gc cannot touch. ``compact()``:
+
+        1. **Marks** the anchored versions (live index entries) and scans
+           their records for every dedup target and BitX base hash —
+           the authoritative reference set.
+        2. **Plans** the transitive closure of needed hashes whose pinned
+           payload lives in a superseded generation (a copied BitX record
+           needs its base hash too, which may sit in another superseded
+           generation — the closure chases the whole chain, and kept
+           generations' own reference sets feed back into it, to a
+           fixpoint). Frames are copied **verbatim** (same codec, same
+           bytes — content-addressed base references keep resolving), so
+           the BitX math is untouched and the rewrite is bit-preserving by
+           construction.
+        3. **Skips** any *pure-payload* superseded generation (no
+           dedup-record baggage) whose every record is pinned-here and
+           needed: copying it would only relocate bytes. This is what
+           makes ``compact()`` idempotent — the compact pool's own
+           previous output is exactly such a container, skipped until
+           dependants die and parts of it go dead.
+        4. **Writes** the surviving records into a fresh
+           ``.compact/pool@gN`` container (temp-suffix + atomic rename,
+           fsync'd — crash-safe at every instant).
+        5. **Commits** under one exclusive write-gate hold: registers the
+           new version, re-pins ``tensor_locations`` to it, rebuilds the
+           scanned survivors' edge sets from the authoritative scan,
+           retires the superseded generations and scrubs their dropped
+           pins. In-flight retrievals finish on the pre-compact snapshot;
+           the hold is pointer swaps only (reported as
+           ``exclusive_hold_ms``) — the byte copying in step 4 ran outside
+           the gate, concurrent with serving.
+        6. **Persists** the index (``persist=True``), then unlinks the
+           retired files — the on-disk index never references a deleted
+           container, so a crash anywhere leaves either the old state plus
+           an orphan compact container, or the new state plus orphan
+           retired files; ``fsck(repair=True)`` deletes either kind of
+           debris and every live file stays retrievable (proven by the
+           crash-injection harness).
+
+        ``file_dedup`` / near-dup index entries anchor their pinned target
+        generations, so compaction never moves or retires a version such an
+        entry resolves through (re-verified post-commit by fsck's index
+        pass). Holds the admin lock: mutually exclusive with ingest
+        batches, deletes, gc and fsck; concurrent *retrievals* run
+        throughout except for step 5's bounded hold.
+        """
+        with self._admin_lock:
+            return self._compact_locked(persist)
+
+    def _compact_locked(self, persist: bool) -> Dict:
+        self._fault("compact.begin")
+        anchored = set(self._anchor_vids())
+        # quarantined versions cannot be re-scanned (their bytes are parked
+        # and possibly corrupt): protect everything their recorded edges
+        # reach, exactly like the gc quarantine guarantee
+        qroots = [vid for vid, v in self.lifecycle.versions.items()
+                  if v.quarantined]
+        protected = self.lifecycle.reachable(qroots)
+        superseded = {vid: v for vid, v in self.lifecycle.versions.items()
+                      if vid not in anchored and vid not in protected
+                      and not v.quarantined}
+        report = {"superseded_versions": len(superseded),
+                  "superseded_bytes": sum(v.nbytes for v in superseded.values()),
+                  "moved_records": 0, "moved_bytes": 0,
+                  "retired_versions": 0, "skipped_versions": 0,
+                  "reclaimed_bytes": 0, "net_reclaimed_bytes": 0,
+                  "dropped_pins": 0, "unresolved_refs": 0,
+                  "container": None, "exclusive_hold_ms": 0.0}
+        if not superseded:
+            return report
+
+        # -- step 1: authoritative reference scan of the anchored versions
+        dep_hashes: Dict[str, List[str]] = {}
+        for vid in sorted(anchored):
+            v = self.lifecycle.versions.get(vid)
+            if v is None or v.quarantined:
+                continue
+            try:
+                with self._reader_ctx(v.path) as reader:
+                    hs = []
+                    for rec in reader.records:
+                        if rec.codec == "dedup":
+                            hs.append(rec.self_hash)
+                        elif rec.codec == "bitx":
+                            hs.append(rec.base_hash)
+            except (OSError, ValueError, AssertionError) as e:
+                # an unreadable anchored container means its reference set
+                # is unknown — retiring anything could destroy payloads it
+                # needs. fsck will quarantine it (quarantine edges then
+                # protect its dependencies) and compact becomes safe again.
+                raise RuntimeError(
+                    f"compact: anchored container {vid} is unreadable ({e}); "
+                    f"run fsck(repair=True) first") from e
+            dep_hashes[vid] = hs
+
+        # -- step 2+3: plan which records move and which generations are
+        # kept, to a fixpoint. The needed-hash closure is seeded by the
+        # anchored reference sets PLUS the reference sets of every kept
+        # superseded generation (a kept generation's dedup/base refs must
+        # keep resolving after its neighbours are retired), and a
+        # generation is kept when either
+        #   * it holds an unaccountable pin (``bad``: never retire bytes we
+        #     could not prove dead) — everything its recorded edges reach
+        #     is then kept too, exactly like the gc quarantine guarantee; or
+        #   * it is *pure payload* (no dedup-record baggage) and every
+        #     record is pinned-here and needed — copying it would relocate,
+        #     not reclaim. This is what makes compact() idempotent: its own
+        #     pool output is exactly such a container until dependants die.
+        # Keeping a generation can grow the needed set, which can flip
+        # another generation to fully-needed; both kept-sets only grow, so
+        # the loop terminates.
+        sup_records: Dict[str, List] = {}
+        bad_gens: set = set()
+        for vid, v in superseded.items():
+            try:
+                with self._reader_ctx(v.path) as reader:
+                    sup_records[vid] = list(reader.records)
+            except (OSError, ValueError, AssertionError):
+                bad_gens.add(vid)
+
+        def deps_of(vid: str) -> List[str]:
+            return [r.self_hash if r.codec == "dedup" else r.base_hash
+                    for r in sup_records.get(vid, ())
+                    if r.codec in ("dedup", "bitx")]
+
+        anchor_seed = [h for hs in dep_hashes.values() for h in hs]
+        skipped: set = set()
+        while True:
+            kept = (set(superseded) & self.lifecycle.reachable(bad_gens)) | skipped
+            move_src: Dict[str, Tuple[str, int, int]] = {}  # hash->(key,gen,idx)
+            unresolved = 0
+            grew_bad = False
+            needed: set = set()
+            work = deque(anchor_seed)
+            for vid in kept:
+                work.extend(deps_of(vid))
+            while work:
+                h = work.popleft()
+                if h in needed:
+                    continue
+                needed.add(h)
+                loc = self.tensor_locations.get(h)
+                if loc is None:
+                    unresolved += 1  # pre-existing dangling ref: fsck territory
+                    continue
+                k, g, i = loc
+                vid = make_vid(k, g)
+                if vid not in superseded or vid in kept:
+                    continue  # payload lives in a survivor already
+                recs = sup_records.get(vid)
+                rec = recs[i] if recs is not None and i < len(recs) else None
+                if rec is None or rec.codec == "dedup" or rec.self_hash != h:
+                    # pin does not name the payload it claims — keep the
+                    # whole generation rather than retire unaccounted bytes
+                    unresolved += 1
+                    if vid not in bad_gens:
+                        bad_gens.add(vid)
+                        grew_bad = True
+                    continue
+                if rec.codec == "bitx":
+                    work.append(rec.base_hash)
+                move_src[h] = (k, g, i)
+            if grew_bad:
+                continue  # protection set changed: replan
+            by_src: Dict[str, List[str]] = {}
+            for h, (k, g, _) in move_src.items():
+                by_src.setdefault(make_vid(k, g), []).append(h)
+            new_skips = set()
+            for vid, hashes in by_src.items():
+                v = superseded[vid]
+                recs = sup_records[vid]
+                pinned_here = sum(
+                    1 for i, r in enumerate(recs)
+                    if r.codec != "dedup"
+                    and self.tensor_locations.get(r.self_hash) == (v.key, v.gen, i))
+                if (all(r.codec != "dedup" for r in recs)
+                        and len(hashes) == pinned_here == len(recs)):
+                    new_skips.add(vid)
+            if new_skips <= skipped:
+                break
+            skipped |= new_skips
+        retire_vids = set(superseded) - kept
+        # kept-but-readable generations get their edges rebuilt from their
+        # actual reference sets, same as the anchored survivors (their
+        # bases may move into the compact pool; a stale edge would let a
+        # later gc collect the pool out from under them). Unreadable (bad)
+        # generations keep their recorded edges, whose targets are all kept.
+        for vid in kept:
+            if vid in sup_records:
+                dep_hashes[vid] = deps_of(vid)
+        report["skipped_versions"] = len(kept)
+        report["unresolved_refs"] = unresolved
+        if not retire_vids and not move_src:
+            return report
+
+        # -- step 4: write the compact container (outside the gate; the
+        # copy order is deterministic: source vid, then record index)
+        gen = cpath = cvid = None
+        new_locs: Dict[str, int] = {}
+        stored = 0
+        writer = None
+        if move_src:
+            order = sorted(move_src.items(),
+                           key=lambda kv: (make_vid(kv[1][0], kv[1][1]), kv[1][2]))
+            gen = self.lifecycle.next_generation(COMPACT_KEY)
+            cpath = self._container_path(COMPACT_KEY, gen)
+            writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
+            writer.file_metadata.update({
+                "compact": True,
+                "sources": sorted({make_vid(k, g)
+                                   for (k, g, _) in move_src.values()}),
+            })
+            for h, (k, g_src, i) in order:
+                with self._reader_ctx(self.lifecycle.version_path(k, g_src)) as r:
+                    rec = r.records[i]
+                    frames = [bytes(f) for f in r.frames_for(i)]
+                new_locs[h] = len(writer.records)
+                writer.add_precomputed(rec.name, rec.dtype_str, rec.shape,
+                                       rec.codec, rec.base_hash, rec.self_hash,
+                                       frames, rec.raw_size)
+            os.makedirs(os.path.dirname(cpath), exist_ok=True)
+            stored = writer.write(cpath, fault_hook=self._fault
+                                  if self.fault_hook else None, fsync=True)
+
+        # -- step 5: commit — one exclusive hold, pointer swaps only
+        retire = [superseded[vid] for vid in sorted(retire_vids)]
+        t_excl = time.perf_counter()
+        with self._gate.write():
+            if move_src:
+                self.lifecycle.register_version(COMPACT_KEY, gen, cpath, stored)
+                cvid = make_vid(COMPACT_KEY, gen)
+                for h, idx in new_locs.items():
+                    self.tensor_locations[h] = (COMPACT_KEY, gen, idx)
+                for rec in writer.records:
+                    if rec.codec == "bitx":
+                        loc = self.tensor_locations.get(rec.base_hash)
+                        if loc is not None:
+                            self.lifecycle.add_edge(cvid, make_vid(loc[0], loc[1]))
+            # survivors' edges, rebuilt from the step-1 scan (more precise
+            # than the accumulated ingest/repair edges — and required, or
+            # stale edges into retired gens would pin them in later sweeps)
+            for vid, hs in dep_hashes.items():
+                dsts = set()
+                for h in hs:
+                    loc = self.tensor_locations.get(h)
+                    if loc is not None:
+                        dsts.add(make_vid(loc[0], loc[1]))
+                dsts.discard(vid)
+                if dsts:
+                    self.lifecycle.edges[vid] = dsts
+                else:
+                    self.lifecycle.edges.pop(vid, None)
+            freed = 0
+            for v in retire:
+                self.lifecycle.retire(v.key, v.gen)
+                freed += v.nbytes
+                with self._cache_lock:
+                    self._reader_cache.pop(v.path)
+        hold_ms = (time.perf_counter() - t_excl) * 1000.0
+        # pool-wide pin scrub outside the exclusive hold (same argument as
+        # gc_step: every needed hash was re-pinned above, so the remaining
+        # pins into retired generations are unreachable from any retrieval
+        # path, and ingest is excluded by the admin lock)
+        dead = {(v.key, v.gen) for v in retire}
+        stale = [h for h, (k, g, _) in self.tensor_locations.items()
+                 if (k, g) in dead]
+        for h in stale:
+            del self.tensor_locations[h]
+            self.tensor_dedup.forget(h)
+
+        self.stats.reclaimed_bytes += freed
+        self.stats.compaction_reclaimed_bytes += freed - stored
+        self.stats.compact_runs += 1
+        self.stats.live_bytes = self.lifecycle.live_bytes()
+        self._fault("compact.after_commit")
+        # -- step 6: persist, THEN unlink (crash between the two leaves the
+        # retired files as orphans for fsck, never a dangling index)
+        if persist:
+            self.save_index()
+        self._fault("compact.after_index")
+        for v in retire:
+            try:
+                os.remove(v.path)
+            except OSError:
+                pass
+        self._fault("compact.after_unlink")
+        report.update({"moved_records": len(move_src), "moved_bytes": stored,
+                       "retired_versions": len(retire),
+                       "reclaimed_bytes": freed,
+                       "net_reclaimed_bytes": freed - stored,
+                       "dropped_pins": len(stale), "container": cvid,
+                       "exclusive_hold_ms": round(hold_ms, 3)})
+        return report
+
+    def _gc_locked(self) -> Tuple[Dict[str, int], List]:
+        """In-memory half of the stop-the-world sweep (runs under the write
+        gate); the caller persists the index and unlinks the returned
+        versions' files afterwards."""
         reclaimed = self.lifecycle.collect(set(self._anchor_vids()))
         dropped_refs = 0
         if reclaimed:
@@ -1677,17 +2185,12 @@ class ZLLMStore:
             with self._cache_lock:
                 for v in reclaimed:
                     self._reader_cache.pop(v.path)  # generation-aware eviction
-            for v in reclaimed:
-                try:
-                    os.remove(v.path)
-                except FileNotFoundError:
-                    pass
         freed = sum(v.nbytes for v in reclaimed)
         self.stats.reclaimed_bytes += freed
         self.stats.live_bytes = self.lifecycle.live_bytes()
-        return {"collected": len(reclaimed), "reclaimed_bytes": freed,
-                "dropped_tensor_refs": dropped_refs,
-                "live_bytes": self.stats.live_bytes}
+        return ({"collected": len(reclaimed), "reclaimed_bytes": freed,
+                 "dropped_tensor_refs": dropped_refs,
+                 "live_bytes": self.stats.live_bytes}, reclaimed)
 
     def fsck(self, repair: bool = False, spot_check: Optional[int] = 4) -> FsckReport:
         """Verify the store's reference graph and container integrity.
@@ -1790,6 +2293,11 @@ class ZLLMStore:
         # pass 4 (ROADMAP rung b): orphan scan — container files on disk that
         # no live or quarantined version references. Crash debris from an
         # interrupted ingest; flagged always, deleted under repair=True.
+        # ``.bitx.part`` temp files (a container write killed between the
+        # temp write and the atomic rename — e.g. a crashed compact()) are
+        # crash debris BY CONSTRUCTION, never corruption: the version graph
+        # cannot reference a temp path, so they are deletable even when the
+        # graph-empty safety below refuses everything else.
         # SAFETY: an empty version graph with containers on disk almost
         # certainly means the index was never loaded — deleting "orphans"
         # then would wipe the whole store, so repair refuses and reports.
@@ -1798,10 +2306,11 @@ class ZLLMStore:
         for dirpath, _, files in os.walk(croot):
             for fn in sorted(files):
                 p = os.path.abspath(os.path.join(dirpath, fn))
-                if not fn.endswith(".bitx") or p in known:
+                is_temp = fn.endswith(".bitx" + TMP_SUFFIX)
+                if not (fn.endswith(".bitx") or is_temp) or p in known:
                     continue
                 report.orphans.append(p)
-                if repair and not known:
+                if repair and not known and not is_temp:
                     report.dangling.append(
                         (p, "orphan delete refused: version graph is empty "
                             "(index not loaded?)"))
@@ -1947,6 +2456,7 @@ class ZLLMStore:
         idx = {
             "format": INDEX_FORMAT,
             "stats": vars(self.stats),
+            "gc_cursor": self._gc_cursor,  # v3: resumable incremental-GC sweep
             "lifecycle": self.lifecycle.to_json(),
             "file_index": self.file_index,
             "file_hash_to_key": self.file_hash_to_key,
@@ -2006,6 +2516,9 @@ class ZLLMStore:
             self.lifecycle = ContainerLifecycle.from_json(idx.get("lifecycle", {}))
         else:
             self._upgrade_v1_index(idx)
+        # v3 additions (defaulted on v1/v2 loads): the incremental-GC cursor;
+        # compaction counters ride along in the generic stats dict above
+        self._gc_cursor = idx.get("gc_cursor", "")
         self.base_paths = idx["base_paths"]
         self.base_key_of = idx["base_key_of"]
         self.metadata_base = idx["metadata_base"]
@@ -2078,6 +2591,9 @@ class ZLLMStore:
                 "collected": self.lifecycle.n_collected,
                 "gc_runs": self.lifecycle.n_gc_runs,
                 "deleted_files": self.stats.n_deleted,
+                "compact_runs": self.stats.compact_runs,
+                "compaction_reclaimed_bytes": self.stats.compaction_reclaimed_bytes,
+                "gc_max_pause_ms": round(self.stats.gc_max_pause_ms, 3),
             },
             "tensor_dedup": {
                 "unique_hashes": self.tensor_dedup.stats.n_unique,

@@ -27,6 +27,10 @@ serving system:
   ``GET /repo/<repo_id>/file/<filename>``   the bit-exact safetensors file
   ``GET /repo/<repo_id>/tensor/<name>``     one tensor's raw little-endian bytes
   ``[?file=<filename>]``                    (default file: model.safetensors)
+  ``GET|POST /admin/compact``               dedup-aware compaction of superseded
+                                            generations (returns the report)
+  ``GET|POST /admin/gc``                    garbage collection;
+  ``[?incremental=1&max_pause_ms=50]``      incremental = bounded-pause steps
   ========================================  =====================================
 
   ``repo_id`` may contain slashes (``org/model``); the ``file``/``tensor``
@@ -147,13 +151,25 @@ class RetrievalEngine:
         return result
 
     # -- admin ----------------------------------------------------------
-    async def run_gc(self) -> Dict[str, int]:
+    async def run_gc(self, incremental: bool = False,
+                     max_pause_ms: float = 50.0) -> Dict[str, int]:
         """Run ``store.gc()`` off-loop. Safe during serving AND during an
         ingest batch on another thread: gc serializes behind the store's
         admin lock, its write gate drains in-flight decodes, and read_gen
-        rolls the engine caches over."""
+        rolls the engine caches over. ``incremental=True`` sweeps in
+        bounded steps (target ``max_pause_ms`` exclusive hold each) that
+        interleave with the live traffic instead of stopping the world."""
         return await asyncio.get_running_loop().run_in_executor(
-            self._pool, self.store.gc)
+            self._pool, lambda: self.store.gc(incremental=incremental,
+                                              max_pause_ms=max_pause_ms))
+
+    async def run_compact(self) -> Dict:
+        """Run ``store.compact()`` off-loop: rewrite still-referenced
+        records out of superseded generations and retire them. The byte
+        copying runs concurrently with serving; only the final pointer
+        swap holds the read gate (reported as ``exclusive_hold_ms``)."""
+        return await asyncio.get_running_loop().run_in_executor(
+            self._pool, self.store.compact)
 
     def stats(self) -> Dict:
         return {
@@ -218,8 +234,12 @@ class StoreServer:
                 line = await asyncio.wait_for(reader.readline(), timeout=30)
                 if line in (b"\r\n", b"\n", b""):
                     break
-            if method != "GET":
-                await self._respond(writer, 405, {"error": "GET only"})
+            # admin routes (mutating) accept POST as well as GET — GET kept
+            # for curl/urllib harness convenience; everything else is GET-only
+            is_admin = target.split("?", 1)[0].startswith("/admin/")
+            if method != "GET" and not (method == "POST" and is_admin):
+                await self._respond(writer, 405, {"error": "GET only "
+                                                  "(POST allowed on /admin/*)"})
                 return
             await self._route(writer, target)
         except (asyncio.TimeoutError, ConnectionError):
@@ -247,6 +267,18 @@ class StoreServer:
             if url.path == "/healthz":
                 await self._respond(writer, 200, {"ok": True,
                                                   "read_gen": self.engine.store.read_gen})
+            elif url.path == "/admin/compact":
+                # dedup-aware compaction: rewrite still-referenced records
+                # out of superseded generations, retire the old gens. Runs
+                # on the executor; serving continues except for the commit's
+                # bounded exclusive hold (returned as exclusive_hold_ms).
+                await self._respond(writer, 200, await self.engine.run_compact())
+            elif url.path == "/admin/gc":
+                inc = qs.get("incremental", ["0"])[0].lower() not in ("0", "false", "")
+                pause = float(qs.get("max_pause_ms", ["50"])[0])
+                await self._respond(writer, 200,
+                                    await self.engine.run_gc(incremental=inc,
+                                                             max_pause_ms=pause))
             elif url.path == "/stats":
                 # store.summary() walks index/lifecycle dicts — run it on
                 # the executor so a slow store never stalls the event loop

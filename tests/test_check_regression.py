@@ -3,7 +3,8 @@ shared gated keys fail on a real drop, keys present in only one file warn
 instead of failing (new metrics must not hard-fail CI until the baseline is
 regenerated), and the serving concurrent-retrieval metric is gated."""
 
-from benchmarks.check_regression import GATED_SUFFIXES, compare
+from benchmarks.check_regression import (GATED_INVERSE_SUFFIXES,
+                                         GATED_SUFFIXES, compare)
 
 
 def test_shared_key_regression_fails():
@@ -40,6 +41,52 @@ def test_missing_keys_warn_but_tolerated():
                for w in warnings)
     # non-numeric-on-BOTH-sides ("line-rate") stays silently skipped
     assert not any("hf_fastcdc" in w for w in warnings)
+
+
+def test_compaction_reclaimed_bytes_is_drop_gated():
+    """The PR-4 lifecycle metric: a collapse in reclaimed bytes (compact()
+    silently stopped retiring superseded generations) must fail CI."""
+    assert any("compaction_reclaimed_bytes".endswith(s) for s in GATED_SUFFIXES)
+    base = {"lifecycle_compaction": {"compaction_reclaimed_bytes": 400000}}
+    _, failures, _ = compare(
+        base, {"lifecycle_compaction": {"compaction_reclaimed_bytes": 100000}},
+        max_drop=0.25)
+    assert failures == ["lifecycle_compaction.compaction_reclaimed_bytes"]
+    _, failures, _ = compare(
+        base, {"lifecycle_compaction": {"compaction_reclaimed_bytes": 390000}},
+        max_drop=0.25)
+    assert not failures
+
+
+def test_incremental_gc_pause_is_rise_gated():
+    """Lower-is-better key: the gc pause fails only when it RISES past the
+    loose multiplier (a pause collapse is an improvement, never a failure),
+    and missing-on-either-side still only warns."""
+    assert "incremental_gc_max_pause_ms" in GATED_INVERSE_SUFFIXES
+    base = {"lifecycle_compaction": {"incremental_gc_max_pause_ms": 50.0}}
+    rows, failures, _ = compare(
+        base, {"lifecycle_compaction": {"incremental_gc_max_pause_ms": 500.0}},
+        max_drop=0.25, max_rise=3.0)
+    assert failures == ["lifecycle_compaction.incremental_gc_max_pause_ms"]
+    _, failures, _ = compare(
+        base, {"lifecycle_compaction": {"incremental_gc_max_pause_ms": 175.0}},
+        max_drop=0.25, max_rise=3.0)
+    assert not failures  # 3.5x baseline is within the 4x budget
+    _, failures, _ = compare(
+        base, {"lifecycle_compaction": {"incremental_gc_max_pause_ms": 0.5}},
+        max_drop=0.25, max_rise=3.0)
+    assert not failures  # faster is never a regression
+    _, failures, _ = compare(
+        {"lifecycle_compaction": {"incremental_gc_max_pause_ms": 0.3}},
+        {"lifecycle_compaction": {"incremental_gc_max_pause_ms": 60.0}},
+        max_drop=0.25, max_rise=3.0)
+    assert not failures  # sub-floor: a full in-budget step (or scheduler
+    # noise on a sub-ms baseline) never fails — only stop-the-world-scale
+    # pauses past INVERSE_FAIL_FLOOR can
+    _, failures, warnings = compare({}, base, max_drop=0.25)
+    assert not failures
+    assert any("incremental_gc_max_pause_ms" in w and "no baseline" in w
+               for w in warnings)
 
 
 def test_numeric_gate_turning_string_warns():

@@ -1,0 +1,178 @@
+"""Crash-injection harness for compact() and incremental gc().
+
+The store's crash-consistency story is *ordering*, not handlers: container
+bytes land via temp-suffix + atomic rename, the index is persisted before
+retired files are unlinked, and no cleanup runs when the fault hook raises
+— so killing the process at ANY fault point leaves the disk in one of
+exactly three shapes:
+
+* the old state, possibly plus an orphan compact container or ``.part``
+  temp (debris ``fsck(repair=True)`` deletes);
+* the new state, possibly plus orphan retired containers (same);
+* the new state, clean.
+
+In every shape, every live file must reopen bit-identical and
+``fsck(repair=True)`` must restore all invariants. This suite kills
+compact()/gc() at each declared fault point (``store.fault_hook``), reopens
+the store from disk like a restarted process, and proves exactly that.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (COMPACT_FAULT_POINTS, COMPACT_KEY,
+                                 GC_FAULT_POINTS, ZLLMStore)
+from repro.formats import safetensors as st
+
+N_TENSORS = 6
+N_ELEMS = 256
+
+
+def _write(path, tensors):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(tensors, path)
+
+
+def _fresh(seed, n_tensors=N_TENSORS):
+    rng = np.random.RandomState(seed)
+    return {f"t{i}": rng.randn(N_ELEMS).astype(np.float32)
+            for i in range(n_tensors)}
+
+
+class _Kill(BaseException):
+    """Raised by the fault hook; BaseException so no except-Exception
+    handler on the way out can soften the simulated crash."""
+
+
+def _build_victim(root):
+    """On-disk store with everything a compact/gc crash needs to bite: a
+    dedup chain (superseded generations pinned by later ones => compact
+    moves records AND retires generations, so every fault point fires),
+    plain garbage (deleted repo, never gc'd) and an untouched keeper.
+    Built fresh per test — the index pins absolute container paths, so a
+    copied store root would still point at the original's files. Returns
+    the oracle of live-file bytes."""
+    store = ZLLMStore(os.path.join(root, "store"))
+    cur = _fresh(0)
+    p = os.path.join(root, "hub", "g0", "model.safetensors")
+    _write(p, cur)
+    store.ingest_file(p, "org/b")
+    for r in range(3):
+        for i in range(N_TENSORS):
+            if i % 3 == r:
+                cur[f"t{i}"] = np.random.RandomState(500 + 10 * r + i).randn(
+                    N_ELEMS).astype(np.float32)
+        p = os.path.join(root, "hub", f"g{r + 1}", "model.safetensors")
+        _write(p, dict(cur))
+        assert store.ingest_file(p, "org/b").n_dedup > 0
+    keep = os.path.join(root, "hub", "keep", "model.safetensors")
+    _write(keep, _fresh(42))
+    store.ingest_file(keep, "org/keep")
+    dead = os.path.join(root, "hub", "dead", "model.safetensors")
+    _write(dead, _fresh(43))
+    store.ingest_file(dead, "org/dead")
+    store.delete_repo("org/dead")  # garbage for the gc sweeps
+    store.save_index()
+    oracle = {rid: store.retrieve_file(rid, "model.safetensors")
+              for rid in ("org/b", "org/keep")}
+    store.close()
+    return oracle
+
+
+def _crash_store(root):
+    store = ZLLMStore(os.path.join(root, "store"))
+    assert store.load_index()
+    return store
+
+
+def _verify_recovered(root, oracle):
+    """Reopen like a restarted process: repair must restore every
+    invariant, delete all crash debris, and lose no live tensor."""
+    with ZLLMStore(os.path.join(root, "store")) as s:
+        assert s.load_index()
+        s.fsck(repair=True, spot_check=None)
+        report = s.fsck(repair=False, spot_check=None)
+        assert report.ok, (report.dangling, report.corrupt)
+        assert not report.orphans, report.orphans
+        for rid, data in oracle.items():
+            assert s.retrieve_file(rid, "model.safetensors") == data, \
+                f"live tensor data lost for {rid}"
+        # the recovered store is fully operational: churn + compact work
+        s.compact()
+        for rid, data in oracle.items():
+            assert s.retrieve_file(rid, "model.safetensors") == data
+        assert s.fsck(spot_check=None).ok
+
+
+@pytest.mark.parametrize("point", COMPACT_FAULT_POINTS)
+def test_compact_killed_at_every_fault_point(point, tmp_path):
+    root = str(tmp_path)
+    oracle = _build_victim(root)
+    store = _crash_store(root)
+    fired = []
+
+    def hook(p):
+        if p == point:
+            fired.append(p)
+            raise _Kill(p)
+
+    store.fault_hook = hook
+    with pytest.raises(_Kill):
+        store.compact()
+    assert fired == [point], f"fault point {point} never fired"
+    store.fault_hook = None
+    store.close()  # drop fds; the disk state stays exactly as the kill left it
+    if point == "writer.after_temp":  # the half-written compact output exists
+        assert os.path.exists(store._container_path(COMPACT_KEY, 0) + ".part")
+    _verify_recovered(root, oracle)
+
+
+@pytest.mark.parametrize("point", GC_FAULT_POINTS)
+def test_incremental_gc_killed_at_every_fault_point(point, tmp_path):
+    root = str(tmp_path)
+    oracle = _build_victim(root)
+    store = _crash_store(root)
+    fired = []
+
+    def hook(p):
+        if p == point:
+            fired.append(p)
+            raise _Kill(p)
+
+    store.fault_hook = hook
+    with pytest.raises(_Kill):
+        store.gc(incremental=True, max_pause_ms=0.0)
+    assert fired[:1] == [point], f"fault point {point} never fired"
+    store.fault_hook = None
+    store.close()
+    _verify_recovered(root, oracle)
+
+
+def test_compact_crash_then_resume_completes_the_job(tmp_path):
+    """After a mid-compact kill and repair, a rerun of compact() finishes
+    the reclamation the crashed run started."""
+    root = str(tmp_path)
+    oracle = _build_victim(root)
+    store = _crash_store(root)
+
+    def hook(p):
+        if p == "compact.after_commit":
+            raise _Kill(p)
+
+    store.fault_hook = hook
+    with pytest.raises(_Kill):
+        store.compact()
+    store.close()
+
+    with ZLLMStore(os.path.join(root, "store")) as s:
+        assert s.load_index()
+        s.fsck(repair=True, spot_check=None)
+        rep = s.compact()
+        assert rep["retired_versions"] > 0  # the job completes post-crash
+        rep2 = s.compact()
+        assert rep2["retired_versions"] == 0  # and converges
+        for rid, data in oracle.items():
+            assert s.retrieve_file(rid, "model.safetensors") == data
+        assert s.fsck(spot_check=None).ok

@@ -349,16 +349,18 @@ def _downgrade_index_to_v1(index_path: str) -> None:
     """Rewrite a v2 index the way PR 1 wrote it: no format tag, no lifecycle
     section, 2-tuple tensor locations, no generation fields."""
     idx = json.load(open(index_path))
-    assert idx["format"] == 2
+    assert idx["format"] == 3
     del idx["format"]
     del idx["lifecycle"]
+    idx.pop("gc_cursor", None)  # v3-only key
     idx["tensor_locations"] = {h: [loc[0], loc[2]]
                                for h, loc in idx["tensor_locations"].items()}
     for rec in idx["file_index"].values():
         assert rec.get("gen", rec.get("ref_gen", 0)) == 0  # v1 had no gens
         rec.pop("gen", None)
         rec.pop("ref_gen", None)
-    for k in ("live_bytes", "reclaimed_bytes", "n_deleted", "n_near_dup"):
+    for k in ("live_bytes", "reclaimed_bytes", "n_deleted", "n_near_dup",
+              "compaction_reclaimed_bytes", "compact_runs", "gc_max_pause_ms"):
         idx["stats"].pop(k, None)
     with open(index_path, "w") as f:
         json.dump(idx, f)
@@ -569,6 +571,41 @@ def test_fsck_orphan_scan_flags_and_repairs_crash_debris(churn, tmp_path):
     assert after.ok and not after.orphans
     # live data untouched by the orphan sweep
     assert store.retrieve_file("u/ft", "model.safetensors") == _read(paths["ft"])
+
+
+def test_fsck_recognizes_half_written_compact_temp_as_debris(churn, tmp_path):
+    """Satellite fix: a ``.bitx.part`` temp file (container write killed
+    between temp write and atomic rename — e.g. a crashed compact()) is
+    crash debris, not corruption: flagged as an orphan, deleted under
+    repair=True, and — unlike real containers — deletable even when the
+    version graph is empty (a temp path can never be referenced)."""
+    store, paths, _ = churn
+    croot = os.path.join(store.root, "containers")
+    part = os.path.join(croot, ".compact", "pool@g1.bitx.part")
+    os.makedirs(os.path.dirname(part), exist_ok=True)
+    with open(part, "wb") as f:
+        f.write(b"BITX0001" + b"\x00" * 40)  # truncated half-write
+
+    report = store.fsck(repair=False, spot_check=None)
+    assert os.path.abspath(part) in report.orphans
+    assert report.ok and not report.corrupt  # debris, not corruption
+    assert os.path.exists(part)              # repair=False only flags
+
+    report = store.fsck(repair=True, spot_check=None)
+    assert not os.path.exists(part)
+    assert any(p == os.path.abspath(part) for p, _ in report.repaired)
+    # live data untouched
+    assert store.retrieve_file("u/ft", "model.safetensors") == _read(paths["ft"])
+
+    # graph-empty safety: a fresh store (index NOT loaded) still deletes
+    # temp debris while refusing to touch real containers
+    fresh = ZLLMStore(store.root)
+    with open(part, "wb") as f:
+        f.write(b"junk")
+    rep = fresh.fsck(repair=True, spot_check=0)
+    assert not os.path.exists(part), "temp debris must be deletable always"
+    assert any("refused" in msg for _, msg in rep.dangling)  # real containers kept
+    fresh.close()
 
 
 def _open_fds():

@@ -268,6 +268,95 @@ def test_server_8_concurrent_retrievals_byte_identical_during_gc(served_store):
         assert body == originals["org/base"]
 
 
+def test_8_clients_byte_identical_during_compact_and_incremental_gc(
+        served_store, tmp_path):
+    """Satellite acceptance: 8 concurrent HTTP clients read while compact()
+    AND an incremental gc() run via the admin endpoints; every response is
+    byte-identical to the direct store read, compaction genuinely retires a
+    superseded generation mid-serve, and the max exclusive read-gate hold
+    stays under the configured pause bound."""
+    store, originals = served_store
+    # superseded-but-pinned generation: re-register the family base — the
+    # fine-tunes keep BitX-pinning base@g0 (skip case) — plus a dedup chain
+    # on org/other so compact has real moves+retires, plus plain garbage
+    v2 = str(tmp_path / "v2" / "model.safetensors")
+    _write_model(v2, np.random.RandomState(55), scale=1.0)
+    store.ingest_file(v2, "org/base")
+    other = {f"model.t{i}.weight": np.random.RandomState(60 + i).randn(
+        2048).astype(np.float32) for i in range(5)}
+    for r in range(2):  # partial re-registers -> dedup chain on org/other
+        for i in range(5):
+            if i % 2 == r:
+                other[f"model.t{i}.weight"] = np.random.RandomState(
+                    70 + 10 * r + i).randn(2048).astype(np.float32)
+        p = str(tmp_path / f"o{r}" / "model.safetensors")
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        st.save_file(other, p)
+        store.ingest_file(p, "org/other")
+    store.delete_repo("org/victim")  # garbage for the incremental sweep
+    # post-churn snapshot: what every client must see, byte for byte
+    expected = {rid: store.retrieve_file(rid, "model.safetensors")
+                for rid in originals if rid != "org/victim"}
+    superseded_before = store.summary()["lifecycle"]["superseded_bytes"]
+    assert superseded_before > 0
+
+    pause_bound_ms = 1000.0
+    with ServerThread(store, max_concurrency=8) as srv:
+        errors, mismatches = [], []
+        start = threading.Barrier(9)  # 8 clients + the admin thread
+        admin: dict = {}
+
+        def client(cid):
+            try:
+                start.wait(timeout=30)
+                for round_ in range(4):
+                    for rid in expected:
+                        _, _, body = _http_get(
+                            srv.host, srv.port,
+                            f"/repo/{rid}/file/model.safetensors")
+                        if body != expected[rid]:
+                            mismatches.append((cid, round_, rid))
+            except Exception as e:  # pragma: no cover - failure reporting
+                errors.append((cid, repr(e)))
+
+        def run_admin():
+            try:
+                start.wait(timeout=30)
+                _, _, body = _http_get(srv.host, srv.port, "/admin/compact")
+                admin["compact"] = json.loads(body)
+                _, _, body = _http_get(
+                    srv.host, srv.port,
+                    f"/admin/gc?incremental=1&max_pause_ms={pause_bound_ms}")
+                admin["gc"] = json.loads(body)
+            except Exception as e:  # pragma: no cover - failure reporting
+                errors.append(("admin", repr(e)))
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+        threads.append(threading.Thread(target=run_admin))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        assert not mismatches, mismatches
+
+    # compaction really happened mid-serve...
+    assert admin["compact"]["retired_versions"] >= 1
+    assert admin["compact"]["moved_records"] >= 1
+    assert admin["gc"]["steps"] >= 1
+    # ...and every exclusive hold respected the configured bound
+    assert admin["compact"]["exclusive_hold_ms"] < pause_bound_ms
+    assert admin["gc"]["max_pause_ms"] < pause_bound_ms
+    assert store.stats.gc_max_pause_ms < pause_bound_ms
+
+    # direct post-churn reads agree with what was served, and the store is
+    # clean (all post-compact pins validated)
+    for rid, data in expected.items():
+        assert store.retrieve_file(rid, "model.safetensors") == data
+    assert store.fsck(spot_check=None).ok
+    assert store.summary()["lifecycle"]["superseded_bytes"] < superseded_before
+
+
 def test_reregistration_during_serving_rolls_caches_over(served_store, tmp_path):
     """read_gen snapshot keys: after re-registering a key mid-serve, the
     next request must see the NEW bytes, never a stale cached decode."""
