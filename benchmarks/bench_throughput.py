@@ -209,6 +209,69 @@ def serving_bench(ctx: Ctx, store_root: str, concurrency: int = 8,
     }
 
 
+def http_serving_bench(ctx: Ctx, store_root: str, small_reqs: int = 300,
+                       range_kb: int = 64) -> dict:
+    """The HTTP/1.1 protocol figures gated in CI (PR 5's serving layer):
+
+    * ``keepalive_reqs_per_s`` — small ranged GETs fired back-to-back on
+      ONE persistent connection; after the first request the object is in
+      the response cache, so this measures pure request plumbing
+      (parse → route → slice → respond) with connection reuse.
+    * ``range_read_MBps`` — a cold-start-loader sweep: the largest file
+      fetched as consecutive ``range_kb``-KB ``Range:`` slices over a
+      keep-alive connection (decode-once; slices cut from the cached
+      buffer, ``stored`` frames via sendfile).
+    """
+    import http.client
+
+    from repro.serve.store_server import ServerThread
+
+    store = ZLLMStore(store_root, workers=2)
+    assert store.load_index(), f"no index under {store_root}"
+    target = max((rid for rid, _ in ctx.manifest),
+                 key=lambda rid: os.path.getsize(ctx.model_file(rid)))
+    size = os.path.getsize(ctx.model_file(target))
+    out: dict = {}
+    try:
+        with ServerThread(store, max_concurrency=4) as srv:
+            conn = http.client.HTTPConnection(srv.host, srv.port, timeout=60)
+            path = f"/repo/{target}/file/model.safetensors"
+
+            def ranged(lo: int, hi: int) -> int:  # [lo, hi) -> bytes served
+                conn.request("GET", path,
+                             headers={"Range": f"bytes={lo}-{hi - 1}"})
+                r = conn.getresponse()
+                body = r.read()
+                assert r.status == 206, r.status
+                return len(body)
+
+            ranged(0, 1024)  # warm the response cache (one decode)
+            t0 = time.perf_counter()
+            for i in range(small_reqs):
+                off = (i * 4096) % max(1, size - 1024)
+                ranged(off, off + 1024)
+            t_small = time.perf_counter() - t0
+
+            chunk = range_kb << 10
+            swept = 0
+            t0 = time.perf_counter()
+            for lo in range(0, size, chunk):
+                swept += ranged(lo, min(lo + chunk, size))
+            t_sweep = time.perf_counter() - t0
+            server_http = dict(srv.server.http)
+            conn.close()
+    finally:
+        store.close()
+    assert server_http["connections"] == 1, "keep-alive reuse broke"
+    out["keepalive_reqs_per_s"] = round(small_reqs / t_small, 1) \
+        if t_small > 0 else float("inf")
+    out["keepalive_small_reqs"] = small_reqs
+    out["range_read_MBps"] = _mbps(swept, t_sweep)
+    out["range_read_slices"] = (size + chunk - 1) // chunk
+    out["range_slice_kb"] = range_kb
+    return out
+
+
 def compaction_bench(ctx: Ctx, workers: int = 2) -> dict:
     """Churn workload for the lifecycle metrics gated in CI: build a
     dedup-chain of partial re-registrations over the corpus's largest base
@@ -319,6 +382,8 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
     # --- cross-file pipelining + concurrent serving (PR 3) ---------------
     out["pipelined_two_uploads"] = two_upload_overlap(ctx, workers=max(workers))
     out["serving"] = serving_bench(ctx, PIPELINED_STORE_ROOT)
+    # --- HTTP keep-alive + range-read protocol figures (PR 5) ------------
+    out["serving"].update(http_serving_bench(ctx, PIPELINED_STORE_ROOT))
 
     # --- compaction + incremental GC (PR 4): the CI-gated lifecycle
     # metrics (compaction_reclaimed_bytes higher-is-better,

@@ -33,8 +33,12 @@ from typing import Dict, List, Tuple
 # listed explicitly so the serving gate survives a suffix reshuffle.
 # compaction_reclaimed_bytes gates like a throughput: a big drop means
 # compact() stopped reclaiming superseded generations.
+# keepalive_reqs_per_s / range_read_MBps gate the HTTP/1.1 protocol layer:
+# a drop means connection reuse broke (reconnect per request) or ranged
+# reads fell off the cached-decode / sendfile fast paths.
 GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
-                  "compaction_reclaimed_bytes")
+                  "compaction_reclaimed_bytes", "keepalive_reqs_per_s",
+                  "range_read_MBps")
 
 # Lower-is-better keys: fail when the FRESH value RISES past
 # baseline * (1 + max_rise). Pause times are noisy (scheduler, shared

@@ -1,13 +1,24 @@
-"""CI server smoke: concurrent HTTP clients vs direct store reads.
+"""CI server smoke: concurrent HTTP clients vs direct store reads, plus
+the remote-write → range-read loop against a routed 2-root server.
 
-Ingests the bench corpus, starts the async store server in-process, then
-fires ``--concurrency`` (default 8) client threads that each sweep every
-repo over HTTP while a delete+gc churns mid-flight. Every file response is
-byte-compared against a direct ``ZLLMStore.retrieve_file`` read captured
-before the server started (and tensor responses against the source mmap),
-so the smoke fails on ANY divergence between the serving path and the
-library path — including under concurrent reclamation. Exits non-zero on
-mismatch, HTTP error, or a dirty final fsck.
+Leg 1 (single root): ingests the bench corpus, starts the async store
+server in-process, then fires ``--concurrency`` (default 8) client
+threads that each sweep every repo over HTTP while a delete+gc churns
+mid-flight. Every file response is byte-compared against a direct
+``ZLLMStore.retrieve_file`` read captured before the server started (and
+tensor responses against the source mmap), so the smoke fails on ANY
+divergence between the serving path and the library path — including
+under concurrent reclamation.
+
+Leg 2 (routed 2-root node): feeds the ENTIRE corpus over the network —
+async ``PUT`` per file, drained via ``/admin/jobs`` — against a
+2-root consistent-hash router, then byte-compares whole-file GETs and
+runs ranged tensor GETs (including a BitX-delta fine-tune tensor)
+against direct ``retrieve_tensor`` slices while gc + compact fan out
+across both roots mid-flight. This is the PR's remote-write acceptance
+assertion.
+
+Exits non-zero on mismatch, HTTP error, or a dirty final fsck.
 
     PYTHONPATH=src python -m benchmarks.server_smoke [--tiny] [--scale S]
 """
@@ -19,18 +30,30 @@ import json
 import os
 import shutil
 import sys
+import threading
+import time
 import urllib.request
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 
 from benchmarks.common import Ctx, build_ctx
 from repro.core.pipeline import ZLLMStore
+from repro.formats.modelcard import parse_repo_metadata
 from repro.formats.safetensors import SafetensorsFile
+from repro.serve.router import StoreRouter
 from repro.serve.store_server import ServerThread
 
 
-def _get(base: str, path: str):
-    with urllib.request.urlopen(base + path, timeout=60) as r:
+def _get(base: str, path: str, headers=None):
+    req = urllib.request.Request(base + path, headers=headers or {})
+    with urllib.request.urlopen(req, timeout=60) as r:
         return r.status, dict(r.headers), r.read()
+
+
+def _put(base: str, path: str, data: bytes):
+    req = urllib.request.Request(base + path, data=data, method="PUT")
+    with urllib.request.urlopen(req, timeout=120) as r:
+        return r.status, json.loads(r.read())
 
 
 def run(ctx: Ctx, concurrency: int = 8) -> int:
@@ -93,12 +116,146 @@ def run(ctx: Ctx, concurrency: int = 8) -> int:
         if not report.ok or report.orphans:
             failures.append(f"final fsck dirty: {report.summary()}")
 
+    failures += remote_write_leg(ctx, concurrency=min(4, concurrency))
+
     for f in failures:
         print(f"server_smoke: FAIL {f}", file=sys.stderr)
     if failures:
         return 1
     print("server_smoke: OK")
     return 0
+
+
+def remote_write_leg(ctx: Ctx, concurrency: int = 4) -> list:
+    """Feed the corpus over HTTP into a routed 2-root node, then verify
+    ranged tensor reads against direct store reads with gc + compact
+    fanning out mid-flight."""
+    failures: list = []
+    roots = ["/tmp/repro-server-smoke-r0", "/tmp/repro-server-smoke-r1"]
+    for r in roots:
+        shutil.rmtree(r, ignore_errors=True)
+    router = StoreRouter(OrderedDict(
+        (f"r{i}", ZLLMStore(r, workers=2)) for i, r in enumerate(roots)))
+    try:
+        with ServerThread(router, max_concurrency=concurrency) as srv:
+            base = f"http://{srv.host}:{srv.port}"
+
+            # 1. remote-write the whole corpus: async PUT per file (bases
+            # carry no ?base=; fine-tunes forward their declared base when
+            # the repo metadata names one, like a hub client would)
+            t0 = time.perf_counter()
+            n_put = put_corpus(ctx, base)
+            for name, store in router.items():
+                if not store.wait_ingest_idle(timeout=600):
+                    failures.append(f"root {name}: ingest jobs stuck")
+            _, _, body = _get(base, "/admin/jobs")
+            jobs = json.loads(body)["jobs"]
+            bad = [j for j in jobs if j["state"] != "done"]
+            if bad:
+                failures.append(f"remote-write jobs failed: {bad[:3]}")
+            print(f"server_smoke: remote-wrote {n_put} files over HTTP in "
+                  f"{time.perf_counter() - t0:.1f}s "
+                  f"({len(jobs)} jobs, 2 roots)")
+
+            # 2. whole-file GETs route to the owning root, byte-exact
+            for rid, _ in ctx.manifest:
+                _, _, body = _get(base, f"/repo/{rid}/file/model.safetensors")
+                direct = router.store_for(rid).retrieve_file(
+                    rid, "model.safetensors")
+                if body != direct:
+                    failures.append(f"routed GET {rid} diverged")
+
+            # 3. THE acceptance loop: ranged tensor GETs on a PUT fine-tune
+            # byte-identical to direct retrieve_tensor slices, while gc and
+            # compact run across both roots mid-flight. A perturbed re-PUT
+            # first supersedes a generation so the churn has real work.
+            from benchmarks.fsck_smoke import _perturbed_copy
+            ft = next(rid for rid, kind in ctx.manifest if kind == "finetune")
+            reput = "/tmp/repro-server-smoke-reput.safetensors"
+            _perturbed_copy(ctx.model_file(ft), reput)
+            redata = open(reput, "rb").read()
+            status, out = _put(
+                base, f"/repo/{ft}/file/model.safetensors?sync=1", redata)
+            if status != 200:
+                failures.append(f"re-PUT of {ft} failed: {out}")
+            victim = next(rid for rid, kind in reversed(ctx.manifest)
+                          if kind in ("reupload", "finetune") and rid != ft)
+            router.store_for(victim).delete_repo(victim)
+
+            store = router.store_for(ft)
+            with SafetensorsFile(ctx.model_file(ft)) as sf:
+                names = [ti.name for ti in sf.infos[:6]]
+            directs = {n: store.retrieve_tensor(ft, "model.safetensors", n)[0]
+                       for n in names}
+
+            stop = threading.Event()
+            admin_err: list = []
+
+            def churn():
+                try:
+                    while not stop.is_set():
+                        _get(base, "/admin/gc?incremental=1&max_pause_ms=25")
+                        _get(base, "/admin/compact")
+                except Exception as e:  # pragma: no cover - failure report
+                    admin_err.append(repr(e))
+
+            churn_t = threading.Thread(target=churn, daemon=True)
+            churn_t.start()
+            try:
+                for round_ in range(3):
+                    for n in names:
+                        full = directs[n]
+                        size = len(full)
+                        for lo, hi in [(0, min(256, size)),
+                                       (size // 3, size // 3 + size // 4),
+                                       (max(0, size - 128), size)]:
+                            if hi <= lo:
+                                continue
+                            status, headers, part = _get(
+                                base, f"/repo/{ft}/tensor/{n}",
+                                {"Range": f"bytes={lo}-{hi - 1}"})
+                            if status != 206 or part != full[lo:hi]:
+                                failures.append(
+                                    f"ranged GET {ft}:{n}[{lo}:{hi}] "
+                                    f"diverged from direct retrieve_tensor "
+                                    f"(round {round_})")
+            finally:
+                stop.set()
+                churn_t.join(timeout=60)
+            if admin_err:
+                failures.append(f"admin churn failed: {admin_err[0]}")
+            print(f"server_smoke: {3 * len(names) * 3} ranged tensor reads "
+                  f"byte-exact under gc+compact fan-out")
+
+            # 4. aggregated stats + per-root fsck
+            _, _, body = _get(base, "/stats")
+            stats = json.loads(body)
+            if stats["store"].get("n_roots") != 2:
+                failures.append("aggregated /stats missing n_roots=2")
+            if stats["server"]["http"]["range_requests"] < 9:
+                failures.append("range_requests counter did not advance")
+            _, _, body = _get(base, "/admin/fsck")
+            fsck = json.loads(body)
+            if not fsck.get("ok"):
+                failures.append(f"routed fsck dirty: {fsck}")
+    finally:
+        router.close()
+    return failures
+
+
+def put_corpus(ctx: Ctx, base: str) -> int:
+    """Async-PUT every corpus file; returns the number of uploads."""
+    n = 0
+    for rid, kind in ctx.manifest:
+        meta = parse_repo_metadata(ctx.repo_path(rid))
+        q = f"?base={urllib.request.quote(meta['base_model'], safe='')}" \
+            if meta.get("base_model") else ""
+        data = open(ctx.model_file(rid), "rb").read()
+        status, out = _put(base, f"/repo/{rid}/file/model.safetensors{q}",
+                           data)
+        assert status == 202, (status, out)
+        n += 1
+    return n
 
 
 def main() -> int:

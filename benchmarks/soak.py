@@ -2,12 +2,14 @@
 
 Runs the store as a *system* for ``--minutes``: a stable population of
 repos is served continuously by concurrent HTTP clients (every response
-sha256-verified server-side, byte-compared client-side) while the main
-thread churns a rotating population — perturbed re-registrations, fresh
-ingests through the cross-file pipeline, deletes, gc sweeps and periodic
-light fscks. Finishes with a full fsck (every record decoded +
-sha256-checked) plus the orphan scan; any dangling reference, corruption,
-orphan, client error or byte mismatch fails the run.
+sha256-verified server-side, byte-compared client-side; every third sweep
+fetches the file as two ``Range:`` halves and reassembles them) while the
+main thread churns a rotating population — fresh ingests arriving OVER
+HTTP (``PUT`` → spooled ingest job, like a real hub frontend), perturbed
+re-registrations, deletes, gc sweeps and periodic light fscks. Finishes
+with a full fsck (every record decoded + sha256-checked) plus the orphan
+scan; any dangling reference, corruption, orphan, client error or byte
+mismatch fails the run.
 
 The log (``--log``, default /tmp/repro-soak.log) is uploaded as a CI
 artifact by the nightly workflow.
@@ -70,17 +72,29 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
         with ServerThread(store, max_concurrency=8) as srv:
             base = f"http://{srv.host}:{srv.port}"
 
+            def fetch(url: str, headers=None) -> bytes:
+                req = urllib.request.Request(url, headers=headers or {})
+                with urllib.request.urlopen(req, timeout=60) as r:
+                    return r.read()
+
             def client(cid: int):
                 order = stable[cid % len(stable):] + stable[:cid % len(stable)]
+                sweep = 0
                 while not stop.is_set():
+                    sweep += 1
                     for rid in order:
                         if stop.is_set():
                             break
+                        url = f"{base}/repo/{rid}/file/model.safetensors"
                         try:
-                            with urllib.request.urlopen(
-                                    f"{base}/repo/{rid}/file/model.safetensors",
-                                    timeout=60) as r:
-                                body = r.read()
+                            if sweep % 3 == 0:
+                                # range leg: two halves, reassembled
+                                size = len(originals[rid])
+                                mid = size // 2
+                                body = (fetch(url, {"Range": f"bytes=0-{mid - 1}"})
+                                        + fetch(url, {"Range": f"bytes={mid}-"}))
+                            else:
+                                body = fetch(url)
                         except Exception as e:
                             failures.append(f"client {cid}: {rid}: {e!r}")
                             stop.set()
@@ -105,12 +119,21 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
                 while time.time() < deadline and not stop.is_set():
                     rnd += 1
                     donor = stable[rnd % len(stable)]
-                    # 1) fresh ingest of a perturbed copy (new repo id) —
-                    #    ingest runs concurrently with live serving
+                    # 1) fresh ingest of a perturbed copy (new repo id),
+                    #    arriving OVER HTTP like a hub upload: PUT spools
+                    #    the body and the pipelined ingest job runs
+                    #    concurrently with live serving
                     new_rid = f"soak/r{rnd}"
                     p = os.path.join(scratch, new_rid, "model.safetensors")
                     _perturbed_copy(ctx.model_file(donor), p)
-                    store.ingest_file(p, new_rid)
+                    put = urllib.request.Request(
+                        f"{base}/repo/{new_rid}/file/model.safetensors?sync=1",
+                        data=open(p, "rb").read(), method="PUT")
+                    with urllib.request.urlopen(put, timeout=120) as r:
+                        job = json.loads(r.read())["job"]
+                    if job["state"] != "done":
+                        failures.append(f"round {rnd}: PUT job failed: {job}")
+                        break
                     churned.append(new_rid)
                     # 2) re-register an earlier soak repo (copy-on-write gen)
                     if len(churned) > 1:

@@ -1,14 +1,24 @@
-"""Serving cold-start from the compressed store (paper §4.4.4) with batched
-requests: ingest a base + fine-tune pair, load the FINE-TUNE (stored as a
-BitX delta against its base), reconstruct + verify, and serve a batch of
-generation requests through the static batcher.
+"""Serving cold-start from the compressed store (paper §4.4.4), two ways:
+
+1. **In-process**: ingest a base + fine-tune pair, load the FINE-TUNE
+   (stored as a BitX delta against its base), reconstruct + verify, and
+   serve a batch of generation requests through the static batcher.
+2. **Over HTTP**: start the store server in-process (`ServerThread`) and
+   replay the remote-write → range-read loop a cold-starting loader
+   would use — `PUT` the fine-tune to the server (spooled → pipelined
+   ingest job), then fetch one tensor's byte range with `Range: bytes=`
+   and verify it against the in-process reconstruction. See
+   docs/HTTP_API.md for the full route reference.
 
     PYTHONPATH=src:. python examples/serve_from_compressed.py
 """
 
+import http.client
+import json
 import os
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -20,6 +30,7 @@ from repro.core.pipeline import ZLLMStore
 from repro.formats import safetensors as st
 from repro.models.api import init_params
 from repro.serve.engine import RequestBatcher, ServeEngine
+from repro.serve.store_server import ServerThread
 
 
 def main():
@@ -54,7 +65,7 @@ def main():
     print(f"fine-tune stored at {r.reduction:.1%} reduction "
           f"(base={r.base_id}, source={r.base_source}, bitx tensors={r.n_bitx})")
 
-    # cold start: BitX-decode against the base, hash-verify, serve
+    # cold start, in-process: BitX-decode against the base, verify, serve
     eng = ServeEngine.from_store(store, "user/ft", "model.safetensors", arch)
     print("fine-tune reconstructed + verified from compressed store ✓")
 
@@ -67,6 +78,43 @@ def main():
     for rid_ in reqs:
         print(f"  request {rid_}: -> {batcher.result(rid_).tolist()}")
     print("batched serving done ✓")
+
+    # cold start, over HTTP: remote-write a second fine-tune copy, then
+    # range-read one tensor slice — the network loader path
+    ft_file = os.path.join(tmp, "user/ft", "model.safetensors")
+    body = open(ft_file, "rb").read()
+    with ServerThread(store, max_concurrency=4) as srv:
+        conn = http.client.HTTPConnection(srv.host, srv.port, timeout=60)
+        conn.request("PUT",
+                     "/repo/user/ft-remote/file/model.safetensors"
+                     "?base=org/base&sync=1", body=body)
+        resp = conn.getresponse()
+        job = json.loads(resp.read())["job"]
+        assert resp.status == 200 and job["state"] == "done", job
+        res = job["results"][0]
+        if res["file_dedup_hit"]:
+            print("remote write ingested: exact duplicate of user/ft "
+                  "(FileDedup hit — zero new bytes stored)")
+        else:
+            print(f"remote write ingested: {res['n_tensors']} tensors, "
+                  f"dedup={res['n_dedup']} bitx={res['n_bitx']}")
+
+        name = next(iter(st.load_file(ft_file)))
+        direct, meta = store.retrieve_tensor("user/ft-remote",
+                                             "model.safetensors", name)
+        lo, hi = 0, min(len(direct), 65536)
+        t0 = time.perf_counter()
+        conn.request("GET", f"/repo/user/ft-remote/tensor/{name}",
+                     headers={"Range": f"bytes={lo}-{hi - 1}"})
+        resp = conn.getresponse()
+        part = resp.read()
+        dt = time.perf_counter() - t0
+        assert resp.status == 206 and part == direct[lo:hi]
+        print(f"ranged GET {name}[{lo}:{hi}] over HTTP in {dt * 1e3:.1f} ms "
+              f"(codec={resp.getheader('x-tensor-codec')}) — matches the "
+              f"in-process reconstruction ✓")
+        conn.close()
+    store.close()
 
 
 if __name__ == "__main__":

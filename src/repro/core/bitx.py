@@ -112,7 +112,7 @@ class TensorRecord:
     name: str
     dtype_str: str            # safetensors tag of the original tensor ("BF16", "F32", ...)
     shape: Tuple[int, ...]
-    codec: str                # "bitx" | "zipnn" | "raw" | "dedup"
+    codec: str                # "bitx" | "zipnn" | "raw" | "stored" | "dedup"
     base_hash: Optional[str]  # CAS hash of the base tensor (bitx) / None
     self_hash: str            # CAS hash of this tensor's raw bytes (dedup + verify)
     plane_sizes: List[int] = field(default_factory=list)  # compressed bytes per plane
@@ -213,6 +213,21 @@ class BitXCodec:
     def decode_raw(self, frame: bytes) -> bytes:
         return self._dctx.decompress(frame)
 
+    # -- stored (verbatim) ----------------------------------------------------
+    @staticmethod
+    def choose_raw_codec(data: bytes, frame: bytes) -> Tuple[str, bytes]:
+        """Entropy-stage decision for raw-kind tensors: keep the compressed
+        frame only when it actually shrank the input; otherwise store the
+        bytes VERBATIM under codec ``stored``. A stored frame is a contiguous
+        on-disk span of the original tensor bytes, which is what lets the
+        serving layer answer range requests with zero-copy ``os.sendfile``
+        straight out of the container file. The decision is a pure function
+        of (bytes, entropy backend), so the parallel/process engines stay
+        bit-identical to the serial path."""
+        if len(frame) < len(data):
+            return "raw", frame
+        return "stored", data
+
 
 class BitXWriter:
     """Streams TensorRecords + frames into a .bitx container."""
@@ -268,7 +283,7 @@ class BitXWriter:
         ingest engine encodes off-thread, then merges in tensor order so the
         container bytes match the serial path exactly). Zero-payload dedup
         records go through :meth:`add_dedup` instead."""
-        assert codec in ("bitx", "zipnn", "raw"), codec
+        assert codec in ("bitx", "zipnn", "raw", "stored"), codec
         self.records.append(
             TensorRecord(name, dtype_str, tuple(shape), codec, base_hash, self_hash,
                          [len(f) for f in frames], raw_size)
@@ -348,6 +363,11 @@ class BitXReader:
         self.records = [TensorRecord.from_json(r) for r in header["tensors"]]
         self._name_to_idx: Optional[Dict[str, int]] = None
         self._payload = view[16 + hlen :]
+        # absolute file offset where the frame payload begins — frame spans
+        # (``frame_span``) are payload-relative and need this to become
+        # sendfile-able (path, offset, length) triples
+        self.payload_offset = 16 + hlen
+        self.path: Optional[str] = None  # set by open(); None for byte-backed
         self._mmap: Optional[mmap.mmap] = None
         self._file = None
         # frame offsets in record order
@@ -383,6 +403,7 @@ class BitXReader:
             f.close()  # the fd is the scarce resource — always release it
             raise
         reader._mmap, reader._file = mm, f
+        reader.path = path
         return reader
 
     def close(self) -> None:
@@ -424,6 +445,16 @@ class BitXReader:
     def frames_for(self, idx: int) -> List[memoryview]:
         return [self._payload[b:e] for b, e in self._offsets[idx]]
 
+    def frame_span(self, idx: int) -> Tuple[int, int]:
+        """(absolute file offset, length) of record ``idx``'s contiguous
+        frame bytes. For ``stored`` records this span IS the tensor's raw
+        little-endian bytes on disk — the serving layer's zero-copy
+        ``os.sendfile`` source."""
+        spans = self._offsets[idx]
+        if not spans:
+            return self.payload_offset, 0
+        return self.payload_offset + spans[0][0], spans[-1][1] - spans[0][0]
+
     def decode_tensor(self, idx: int, base_resolver, pool_resolver) -> np.ndarray:
         """Decode record ``idx`` to its raw bit-view array.
 
@@ -447,4 +478,7 @@ class BitXReader:
             return self.codec.decode_planes(frames, np_dtype, r.shape)
         if r.codec == "raw":
             return np.frombuffer(self.codec.decode_raw(frames[0]), np_dtype).reshape(r.shape)
+        if r.codec == "stored":
+            # verbatim frame: the on-disk bytes ARE the tensor bytes
+            return np.frombuffer(frames[0], np_dtype).reshape(r.shape)
         raise ValueError(f"unknown codec {r.codec}")

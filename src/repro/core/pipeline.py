@@ -129,8 +129,10 @@ from __future__ import annotations
 
 import base64
 import bisect
+import itertools
 import json
 import os
+import queue
 import struct
 import threading
 import time
@@ -153,7 +155,7 @@ from repro.formats.modelcard import parse_repo_metadata
 from repro.formats.safetensors import (STR_TO_DTYPE, SafetensorsFile,
                                        read_header_blob)
 
-__all__ = ["ZLLMStore", "IngestResult", "StoreStats", "COMPACT_KEY",
+__all__ = ["ZLLMStore", "IngestResult", "IngestJob", "StoreStats", "COMPACT_KEY",
            "COMPACT_FAULT_POINTS", "GC_FAULT_POINTS"]
 
 
@@ -219,6 +221,33 @@ class IngestResult:
     @property
     def reduction(self) -> float:
         return 1.0 - self.stored_bytes / self.raw_bytes if self.raw_bytes else 0.0
+
+
+@dataclass
+class IngestJob:
+    """Bookkeeping for one spooled-ingest job (the server's remote write
+    path): a batch of uploads queued for the background ingest worker.
+    States advance ``queued → running → done|failed``; terminal jobs keep
+    their per-file results (or the error) for ``/admin/jobs``."""
+
+    job_id: str
+    kind: str                    # "files" (ingest_many specs) | "repo" (dirs)
+    specs: List[Tuple]
+    cleanup: bool = False        # delete spooled source files when finished
+    state: str = "queued"
+    error: str = ""
+    results: List[Dict] = field(default_factory=list)
+    enqueued_at: float = field(default_factory=time.time)
+    started_at: float = 0.0
+    finished_at: float = 0.0
+
+    def to_json(self) -> Dict:
+        return {"job_id": self.job_id, "kind": self.kind, "state": self.state,
+                "n_uploads": len(self.specs), "error": self.error,
+                "results": self.results,
+                "enqueued_at": round(self.enqueued_at, 3),
+                "started_at": round(self.started_at, 3),
+                "finished_at": round(self.finished_at, 3)}
 
 
 @dataclass
@@ -558,6 +587,15 @@ class ZLLMStore:
         # incremental GC: resumable sweep cursor (last retired vid; persisted
         # in the v3 index so a restarted store continues where it left off)
         self._gc_cursor = ""
+        # spooled-ingest job queue (the server's remote write path): one
+        # background worker drains jobs serially — ingest is single-caller
+        # by contract, and every job takes the admin lock anyway, so a
+        # second worker would only contend
+        self._job_cv = threading.Condition()
+        self._jobs: "OrderedDict[str, IngestJob]" = OrderedDict()
+        self._job_queue: "queue.Queue[Optional[IngestJob]]" = queue.Queue()
+        self._job_thread: Optional[threading.Thread] = None
+        self._job_seq = itertools.count(1)
         # crash-injection hook: called with a fault-point name (see
         # COMPACT_FAULT_POINTS / GC_FAULT_POINTS) at each crash-consistency
         # boundary of compact()/gc(); the recovery harness raises from it to
@@ -608,6 +646,10 @@ class ZLLMStore:
     def close(self):
         """Shut the worker pools down and drop mmap-backed caches. Must not
         race in-flight retrievals (shut down your own callers first)."""
+        if self._job_thread is not None:
+            self._job_queue.put(None)  # sentinel: drain queued jobs, then exit
+            self._job_thread.join(timeout=120)
+            self._job_thread = None
         for attr in ("_pool", "_writer_pool", "_entropy_pool"):
             pool = getattr(self, attr)
             if pool is not None:
@@ -1235,42 +1277,58 @@ class ZLLMStore:
 
     @staticmethod
     def _merge_plan(writer: BitXWriter, plan: List[Tuple]) -> None:
-        """Stage 4: ordered merge — append strictly in tensor order."""
+        """Stage 4: ordered merge — append strictly in tensor order. The
+        encode payload carries the final codec: raw-kind tensors the entropy
+        stage could not shrink come back as ``stored`` (verbatim bytes, the
+        zero-copy sendfile span of the serving layer)."""
         for ti, thash, kind, base_hash, payload in plan:
             if kind == "dedup":
                 writer.add_dedup(ti.name, ti.dtype_str, ti.shape, thash, ti.nbytes)
             else:
-                frames, raw = payload.result() if isinstance(payload, Future) else payload
-                writer.add_precomputed(ti.name, ti.dtype_str, ti.shape, kind,
+                codec, frames, raw = (payload.result()
+                                      if isinstance(payload, Future) else payload)
+                writer.add_precomputed(ti.name, ti.dtype_str, ti.shape, codec,
                                        base_hash, thash, frames, raw)
 
     def _encode_job(self, codec: BitXCodec, kind: str, sf: SafetensorsFile, ti,
-                    base_loader, epool) -> Callable[[], Tuple[List[bytes], int]]:
+                    base_loader, epool) -> Callable[[], Tuple[str, List[bytes], int]]:
         """Closure encoding one tensor; safe to run on any worker thread
         (codec contexts are thread-local, sf/base reads are mmap slices).
-        With the opt-in process entropy backend the numpy stages (XOR,
-        plane split) stay on the calling thread and only the entropy stage
-        ships to a child process — the frames are identical either way."""
-        def encode() -> Tuple[List[bytes], int]:
+        Returns ``(final codec, frames, raw size)`` — raw-kind tensors are
+        downgraded to ``stored`` when compression would grow them
+        (``BitXCodec.choose_raw_codec``), a pure function of (bytes,
+        backend), so every engine emits identical containers. With the
+        opt-in process entropy backend the numpy stages (XOR, plane split)
+        stay on the calling thread and only the entropy stage ships to a
+        child process — the frames are identical either way."""
+        def encode() -> Tuple[str, List[bytes], int]:
             raw = sf.tensor_bytes(ti.name)
             if kind == "raw":
+                data = bytes(raw)
                 if epool is not None:
-                    return self._entropy_frames(epool, [bytes(raw)]), len(raw)
-                return [codec.encode_raw(bytes(raw))], len(raw)
+                    frame = self._entropy_frames(epool, [data])[0]
+                else:
+                    frame = codec.encode_raw(data)
+                final, payload = BitXCodec.choose_raw_codec(data, frame)
+                return final, [payload], len(data)
             arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
             if kind == "bitx":
                 base_arr = base_loader()
                 if epool is not None:
                     planes = xor_delta_planes_np(base_arr.reshape(-1),
                                                  arr.reshape(-1))
-                    return (self._entropy_frames(
-                        epool, [p.tobytes() for p in planes]), int(arr.nbytes))
-                return codec.encode_delta(base_arr.reshape(-1), arr.reshape(-1))
+                    return kind, self._entropy_frames(
+                        epool, [p.tobytes() for p in planes]), int(arr.nbytes)
+                frames, raw_size = codec.encode_delta(base_arr.reshape(-1),
+                                                      arr.reshape(-1))
+                return kind, frames, raw_size
             if epool is not None:
                 planes = byte_planes_np(arr)
-                return (self._entropy_frames(epool, [p.tobytes() for p in planes]),
+                return (kind,
+                        self._entropy_frames(epool, [p.tobytes() for p in planes]),
                         int(arr.nbytes))
-            return codec.encode_planes(arr)
+            frames, raw_size = codec.encode_planes(arr)
+            return kind, frames, raw_size
         return encode
 
     def _entropy_frames(self, epool: ProcessPoolExecutor,
@@ -1408,6 +1466,177 @@ class ZLLMStore:
         self.stats.stored_bytes += res.stored_bytes
         self.stats.n_files += 1
         self.stats.live_bytes = self.lifecycle.live_bytes()
+
+    # ------------------------------------------------------------------
+    # Spooled ingest: the server's remote write path. Uploads are streamed
+    # to the spool directory by the HTTP layer, enqueued here, and drained
+    # by ONE background worker through the ordinary pipelined
+    # ``ingest_many`` / ``ingest_repos`` engines (admin lock and all) —
+    # remote writes are exactly local ingests, just asynchronous.
+    # ------------------------------------------------------------------
+    def spool_dir(self) -> str:
+        """Directory for in-flight remote uploads. Lives outside
+        ``containers/`` so the fsck orphan scan never sees spool files."""
+        p = os.path.join(self.root, ".spool")
+        os.makedirs(p, exist_ok=True)
+        return p
+
+    def enqueue_ingest(self, uploads: Sequence, *, cleanup: bool = False) -> str:
+        """Queue an ``ingest_many`` batch for the background worker;
+        returns the job id (poll :meth:`ingest_job`). ``cleanup=True``
+        deletes the source files once the job finishes (the HTTP layer's
+        spooled uploads have no other owner)."""
+        specs = []
+        for u in uploads:
+            path, repo_id, filename, declared = (tuple(u) + (None, None))[:4]
+            specs.append((path, repo_id,
+                          filename or os.path.basename(path), declared))
+        return self._enqueue_job(IngestJob(
+            job_id=f"j{next(self._job_seq)}", kind="files", specs=specs,
+            cleanup=cleanup))
+
+    def enqueue_ingest_repo(self, repo_dir: str, repo_id: Optional[str] = None,
+                            *, cleanup: bool = False) -> str:
+        """Queue a whole-repo ingest (metadata parsed exactly as in
+        :meth:`ingest_repos`) for the background worker."""
+        return self._enqueue_job(IngestJob(
+            job_id=f"j{next(self._job_seq)}", kind="repo",
+            specs=[(repo_dir, repo_id)], cleanup=cleanup))
+
+    def _enqueue_job(self, job: IngestJob) -> str:
+        with self._job_cv:
+            self._jobs[job.job_id] = job
+            # bounded history: evict the oldest *terminal* jobs past 256
+            while len(self._jobs) > 256:
+                for jid, j in self._jobs.items():
+                    if j.state in ("done", "failed"):
+                        del self._jobs[jid]
+                        break
+                else:
+                    break
+            if self._job_thread is None or not self._job_thread.is_alive():
+                self._job_thread = threading.Thread(
+                    target=self._job_worker_loop, daemon=True,
+                    name="zllm-ingest-jobs")
+                self._job_thread.start()
+        self._job_queue.put(job)
+        return job.job_id
+
+    def _job_worker_loop(self) -> None:
+        while True:
+            job = self._job_queue.get()
+            if job is None:
+                return
+            with self._job_cv:
+                job.state = "running"
+                job.started_at = time.time()
+            try:
+                if job.kind == "repo":
+                    results = self.ingest_repos(job.specs)
+                else:
+                    results = self.ingest_many(job.specs)
+                # adopt/cleanup spool sources BEFORE persisting: the index
+                # snapshot must record the post-adoption base paths, never
+                # a spool path about to be renamed away
+                self._cleanup_job_sources(job)
+                # remote writes are durable once acknowledged as done; the
+                # admin lock keeps the snapshot consistent against a
+                # concurrent delete/gc on another thread
+                with self._admin_lock:
+                    self.save_index()
+            except Exception as e:
+                # a poisoned batch may still have committed earlier uploads
+                # (possibly a base) — adopt-or-delete runs here too
+                self._cleanup_job_sources(job)
+                with self._job_cv:
+                    job.state = "failed"
+                    job.error = f"{type(e).__name__}: {e}"
+                    job.finished_at = time.time()
+                    self._job_cv.notify_all()
+            else:
+                rows = [{"repo_id": r.repo_id, "filename": r.filename,
+                         "raw_bytes": r.raw_bytes, "stored_bytes": r.stored_bytes,
+                         "reduction": round(r.reduction, 4),
+                         "base_id": r.base_id, "base_source": r.base_source,
+                         "n_tensors": r.n_tensors, "n_dedup": r.n_dedup,
+                         "n_bitx": r.n_bitx,
+                         "file_dedup_hit": r.file_dedup_hit,
+                         "near_dup_hit": r.near_dup_hit} for r in results]
+                with self._job_cv:
+                    job.results = rows
+                    job.state = "done"
+                    job.finished_at = time.time()
+                    self._job_cv.notify_all()
+
+    def _cleanup_job_sources(self, job: "IngestJob") -> None:
+        """Adopt-or-delete a finished job's spooled sources (idempotent)."""
+        if not (job.cleanup and job.kind == "files"):
+            return
+        for path, *_ in job.specs:
+            try:
+                if os.path.exists(path) and not self._adopt_spooled_source(path):
+                    os.remove(path)
+            except OSError:
+                pass
+
+    def _adopt_spooled_source(self, path: str) -> bool:
+        """A spooled upload that registered as a family BASE must outlive
+        its spool file: the bit-distance matcher and the base-map cache
+        read the ingest-time source path when later fine-tunes arrive.
+        Move such a file into ``basecache/`` and rebind every path
+        reference (base_paths, cached base maps, the family registry).
+        Returns True when the file was adopted — the caller must not
+        delete it. Plain uploads (fine-tunes, dups) return False."""
+        with self._admin_lock:
+            bound = [bid for bid, p in self.base_paths.items() if p == path]
+            fam_bound = any(p == path
+                            for cands in self.families.by_sig.values()
+                            for _, p in cands)
+            if not bound and not fam_bound:
+                return False
+            key = self.base_key_of.get(bound[0]) if bound else None
+            cache_dir = os.path.join(self.root, "basecache")
+            os.makedirs(cache_dir, exist_ok=True)
+            dst = os.path.join(cache_dir,
+                               (key or os.path.basename(path)).replace("/", "__"))
+            os.replace(path, dst)  # same-fs rename: open fds/maps stay valid
+            for bid in bound:
+                self.base_paths[bid] = dst
+                bm = self._base_maps.get(bid)
+                if bm is not None and bm.path == path:
+                    bm.path = dst
+            for cands in self.families.by_sig.values():
+                for i, (bid, p) in enumerate(cands):
+                    if p == path:
+                        cands[i] = (bid, dst)
+            return True
+
+    def ingest_job(self, job_id: str) -> Optional[Dict]:
+        """Status dict for one job (None if unknown/expired)."""
+        with self._job_cv:
+            job = self._jobs.get(job_id)
+            return job.to_json() if job is not None else None
+
+    def ingest_jobs(self, limit: int = 64) -> List[Dict]:
+        """Most recent jobs, newest first."""
+        with self._job_cv:
+            jobs = list(self._jobs.values())[-limit:]
+        return [j.to_json() for j in reversed(jobs)]
+
+    def wait_ingest_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until every enqueued job reached a terminal state (the
+        smoke/test harness's drain barrier). True on idle, False on
+        timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._job_cv:
+            while any(j.state in ("queued", "running")
+                      for j in self._jobs.values()):
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._job_cv.wait(timeout=remaining)
+        return True
 
     # ------------------------------------------------------------------
     # Publish epochs + pin-counted readers (the concurrency substrate the
@@ -1601,6 +1830,66 @@ class ZLLMStore:
     def _ref_path(self, rec: Dict) -> str:
         """Container path for a pinned (ref, ref_gen) index record."""
         return self.lifecycle.version_path(rec["ref"], rec["ref_gen"])
+
+    def tensor_sendfile_span(self, repo_id: str, filename: str,
+                             tensor_name: str) -> Optional[Tuple[str, int, int, Dict]]:
+        """Zero-copy source for a tensor stored VERBATIM on disk.
+
+        Returns ``(container_path, absolute_offset, nbytes, meta)`` when the
+        tensor's payload is a ``stored``-codec frame (raw-kind bytes the
+        entropy stage could not shrink) — a contiguous byte span of the
+        container file that the serving layer can push straight to a socket
+        with ``os.sendfile``, no decode, no copy. Dedup records are chased
+        one hop to their pinned payload. Returns ``None`` for every other
+        codec or any irregularity; callers fall back to the decode path
+        (which raises the proper errors). Containers are immutable and
+        writes are temp+rename, so a span resolved here stays valid for as
+        long as the caller holds an fd — even across a concurrent
+        gc/compact unlink."""
+        with self._gate.read():
+            key = f"{repo_id}/{filename}"
+            rec = self.file_index.get(key)
+            if rec is None or rec.get("quarantined"):
+                return None
+            try:
+                if rec["kind"] == "near_dup":
+                    idx, dtype_str, shape = self._near_dup_tensor_lookup(
+                        rec, tensor_name, key)
+                    cpath = self._ref_path(rec)
+                else:
+                    idx = dtype_str = shape = None
+                    cpath = (rec["path"] if rec["kind"] == "container"
+                             else self._ref_path(rec))
+                with self._reader_ctx(cpath) as reader:
+                    if idx is None:
+                        idx = reader.index_of(tensor_name)
+                    r = reader.records[idx]
+                    if r.codec == "dedup":
+                        loc = self.tensor_locations.get(r.self_hash)
+                        if loc is None:
+                            return None
+                        cpath = self.lifecycle.version_path(loc[0], loc[1])
+                        with self._reader_ctx(cpath) as pool_reader:
+                            pr = pool_reader.records[loc[2]]
+                            if pr.codec != "stored" or pr.self_hash != r.self_hash:
+                                return None
+                            off, length = pool_reader.frame_span(loc[2])
+                    elif r.codec == "stored":
+                        off, length = reader.frame_span(idx)
+                    else:
+                        return None
+            except (KeyError, OSError, RuntimeError, ValueError):
+                return None
+            if length != r.raw_size or length == 0:
+                return None  # a stored span must be exactly the raw bytes
+            meta = {"dtype": dtype_str or r.dtype_str,
+                    "shape": list(shape) if shape is not None else list(r.shape),
+                    "nbytes": length, "codec": "stored",
+                    # the record's content hash IS the sha256 of the span
+                    # bytes — verifying callers (the server's sendfile path
+                    # under verify=True) check it once per immutable span
+                    "sha256": r.self_hash}
+            return cpath, off, length, meta
 
     def _decode_container(self, cpath: str,
                           header_override: Optional[bytes] = None) -> bytes:

@@ -1,0 +1,264 @@
+"""Multi-store routing: one serving frontend over N ``ZLLMStore`` roots.
+
+A hub node outgrows a single store root long before it outgrows a single
+machine: separate NVMe volumes, per-tenant roots, or simply more index than
+one process cares to keep hot. ``StoreRouter`` spreads *repos* across N
+roots with **rendezvous (highest-random-weight) consistent hashing** —
+every repo deterministically owns one root, adding a root only moves
+~1/(N+1) of the keyspace, and no ring state needs persisting — while the
+HTTP layer stays oblivious: it asks the router which store serves a repo
+and proceeds exactly as in the single-root case.
+
+Placement vs. location: ``place()`` is the pure hash (where a new repo
+*goes*); ``locate()`` prefers a root that already *has* the key (so a
+router can be put in front of pre-existing stores whose contents predate
+the hash placement) and falls back to ``place()`` for keys nobody holds.
+Writes route through ``locate()`` too — a re-registration must land on the
+root that holds the repo's earlier generations, or the dedup/BitX chain
+would be severed.
+
+Stats keep the **flat single-root shape** when there is one root (the
+``server_smoke`` back-compat contract) and nest per-root sections plus
+cross-root aggregates under N roots. Admin operations (gc / compact /
+fsck) fan out to every root, or to one root via its name.
+
+The router owns no asyncio state — it is shared safely between the event
+loop and worker threads; per-root ``RetrievalEngine`` construction stays in
+the server (engines are loop-confined).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from repro.core.pipeline import ZLLMStore
+
+__all__ = ["StoreRouter"]
+
+# store.summary() keys that aggregate by plain summation across roots
+_SUM_KEYS = ("n_files", "raw_bytes", "stored_bytes", "file_dedup_hits",
+             "near_dup_hits")
+_SUM_LIFECYCLE_KEYS = ("versions", "live_bytes", "superseded_bytes",
+                       "reclaimed_bytes", "collected", "gc_runs",
+                       "deleted_files", "compact_runs",
+                       "compaction_reclaimed_bytes")
+
+
+class StoreRouter:
+    """Consistent-hash placement of repos over named ``ZLLMStore`` roots.
+
+    ``stores`` is a mapping ``name -> ZLLMStore`` (ordered; names appear in
+    stats and in ``?root=`` admin selectors), or a plain sequence of stores
+    (auto-named ``r0``, ``r1``, ...). A single-store router is the identity
+    — the server wraps every deployment in one so the two topologies share
+    a code path.
+    """
+
+    def __init__(self, stores: Union[Dict[str, ZLLMStore],
+                                     Sequence[ZLLMStore], ZLLMStore]):
+        if isinstance(stores, ZLLMStore):
+            stores = [stores]
+        if not isinstance(stores, dict):
+            stores = OrderedDict((f"r{i}", s) for i, s in enumerate(stores))
+        if not stores:
+            raise ValueError("StoreRouter needs at least one store")
+        self.roots: "OrderedDict[str, ZLLMStore]" = OrderedDict(stores)
+        # repo -> root decisions for writes whose ingest job has not
+        # registered in file_index yet: a second PUT for the same new repo
+        # arriving inside that window must land on the SAME root, or the
+        # repo splits across roots (severing its dedup/BitX chain).
+        # Bounded; stale entries are harmless — membership wins once the
+        # ingest lands, and a pending entry names that same root anyway.
+        self._pending_places: "OrderedDict[str, str]" = OrderedDict()
+
+    # -- topology ---------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.roots)
+
+    def names(self) -> List[str]:
+        return list(self.roots)
+
+    def items(self) -> Iterable[Tuple[str, ZLLMStore]]:
+        return self.roots.items()
+
+    def store(self, name: str) -> ZLLMStore:
+        return self.roots[name]
+
+    @property
+    def single(self) -> Optional[ZLLMStore]:
+        """The lone store of a single-root router, else None."""
+        return next(iter(self.roots.values())) if len(self.roots) == 1 else None
+
+    # -- placement ----------------------------------------------------------
+    def place(self, repo_id: str) -> str:
+        """Root name owning ``repo_id`` under rendezvous hashing: the root
+        whose ``sha256(name | repo_id)`` scores highest. Deterministic,
+        state-free, and minimally disruptive when roots are added."""
+        return max(self.roots,
+                   key=lambda n: hashlib.sha256(
+                       f"{n}|{repo_id}".encode()).digest())
+
+    def _membership_root(self, repo_id: str, filename: str) -> Optional[str]:
+        """Root already holding ``repo_id`` — by exact key, by another
+        file of the same repo (repo-cohesion: one repo, one root), or by
+        an in-flight write decision whose ingest job has not registered
+        yet. ``list()`` snapshots the keys under the GIL — the background
+        ingest worker inserts into ``file_index`` concurrently, and
+        iterating the live dict view would race it ("dictionary changed
+        size during iteration")."""
+        key = f"{repo_id}/{filename}"
+        for name, store in self.roots.items():
+            if key in store.file_index:  # atomic membership probe
+                return name
+        prefix = repo_id + "/"
+        for name, store in self.roots.items():
+            if any(k.startswith(prefix) for k in list(store.file_index)):
+                return name
+        return self._pending_places.get(repo_id)
+
+    def locate(self, repo_id: str, filename: str = "model.safetensors") -> str:
+        """Root name *serving* ``repo_id/filename``: a root that already
+        holds the repo (or has a write for it in flight) wins — pre-seeded
+        stores, pre-resize placements, not-yet-registered ingest jobs;
+        otherwise the hash placement. Reads and writes both route here, so
+        re-registrations land beside the generations they supersede."""
+        return self._membership_root(repo_id, filename) or self.place(repo_id)
+
+    def store_for(self, repo_id: str,
+                  filename: str = "model.safetensors") -> ZLLMStore:
+        return self.roots[self.locate(repo_id, filename)]
+
+    def locate_for_write(self, repo_id: str,
+                         filename: str = "model.safetensors",
+                         base: Optional[str] = None) -> str:
+        """Placement for an incoming write. Like :meth:`locate`, but a NEW
+        repo that declares a BitX base co-locates with the root serving
+        that base — dedup and delta domains are per-root, so scattering a
+        family across roots would store every fine-tune standalone. The
+        decision is memoized in ``_pending_places`` so a second write for
+        the same repo arriving before the first ingest job registers
+        still routes to the same root."""
+        root = self._membership_root(repo_id, filename)
+        if root is None and base:
+            bkey = f"{base}/model.safetensors"
+            for name, store in self.roots.items():
+                if bkey in store.file_index or base in store.base_paths:
+                    root = name
+                    break
+        if root is None:
+            root = self.place(repo_id)
+        self._pending_places[repo_id] = root
+        while len(self._pending_places) > 1024:
+            self._pending_places.popitem(last=False)
+        return root
+
+    # -- aggregate stats ------------------------------------------------------
+    def summary(self) -> Dict:
+        """Aggregated ``store.summary()``. Single root: the flat summary,
+        unchanged (back-compat for ``server_smoke`` and /stats consumers).
+        N roots: summable counters aggregated at the top plus the full
+        per-root summaries under ``roots``."""
+        single = self.single
+        if single is not None:
+            return single.summary()
+        per_root = {name: store.summary() for name, store in self.roots.items()}
+        agg: Dict = {k: sum(s[k] for s in per_root.values()) for k in _SUM_KEYS}
+        agg["reduction_ratio"] = round(
+            1.0 - agg["stored_bytes"] / agg["raw_bytes"], 4
+        ) if agg["raw_bytes"] else 0.0
+        agg["lifecycle"] = {k: sum(s["lifecycle"][k] for s in per_root.values())
+                            for k in _SUM_LIFECYCLE_KEYS}
+        agg["lifecycle"]["gc_max_pause_ms"] = max(
+            s["lifecycle"]["gc_max_pause_ms"] for s in per_root.values())
+        agg["read_gen"] = {name: s["read_gen"] for name, s in per_root.items()}
+        agg["n_roots"] = len(per_root)
+        agg["roots"] = per_root
+        return agg
+
+    def ingest_jobs(self, limit: int = 64) -> List[Dict]:
+        """Recent spooled-ingest jobs across every root (each row carries
+        its ``root``), newest first."""
+        rows: List[Dict] = []
+        for name, store in self.roots.items():
+            for j in store.ingest_jobs(limit):
+                j["root"] = name
+                rows.append(j)
+        rows.sort(key=lambda j: j["enqueued_at"], reverse=True)
+        return rows[:limit]
+
+    def ingest_job(self, job_id: str) -> Optional[Dict]:
+        """Look a job id up across roots (ids are store-local)."""
+        for name, store in self.roots.items():
+            j = store.ingest_job(job_id)
+            if j is not None:
+                j["root"] = name
+                return j
+        return None
+
+    # -- admin fan-out ------------------------------------------------------
+    def _selected(self, root: Optional[str]) -> List[Tuple[str, ZLLMStore]]:
+        if root is None:
+            return list(self.roots.items())
+        if root not in self.roots:
+            raise KeyError(f"unknown root {root!r} "
+                           f"(have: {', '.join(self.roots)})")
+        return [(root, self.roots[root])]
+
+    def fanout_gc(self, root: Optional[str] = None, *, incremental: bool = False,
+                  max_pause_ms: float = 50.0) -> Dict:
+        reports = {name: store.gc(incremental=incremental,
+                                  max_pause_ms=max_pause_ms)
+                   for name, store in self._selected(root)}
+        return self._flat_or_nested(reports, ("collected", "reclaimed_bytes"))
+
+    def fanout_compact(self, root: Optional[str] = None) -> Dict:
+        reports = {name: store.compact()
+                   for name, store in self._selected(root)}
+        return self._flat_or_nested(
+            reports, ("retired_versions", "moved_records",
+                      "net_reclaimed_bytes"))
+
+    def fanout_fsck(self, root: Optional[str] = None, *, repair: bool = False,
+                    spot_check: Optional[int] = 4) -> Dict:
+        reports = {}
+        for name, store in self._selected(root):
+            rep = store.fsck(repair=repair, spot_check=spot_check)
+            reports[name] = {"ok": rep.ok, "summary": rep.summary(),
+                             "orphans": len(rep.orphans),
+                             "quarantined": len(rep.quarantined)}
+        if len(reports) == 1 and len(self.roots) == 1:
+            return next(iter(reports.values()))
+        out = {"roots": reports, "ok": all(r["ok"] for r in reports.values())}
+        return out
+
+    def _flat_or_nested(self, reports: Dict[str, Dict],
+                        sum_keys: Tuple[str, ...]) -> Dict:
+        """One root selected on a single-root router → the flat report
+        (back-compat); otherwise per-root reports plus summed headline
+        numbers."""
+        if len(reports) == 1 and len(self.roots) == 1:
+            return next(iter(reports.values()))
+        out: Dict = {k: sum(r.get(k, 0) for r in reports.values())
+                     for k in sum_keys}
+        out["roots"] = reports
+        return out
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Close every store exactly once (dict values may repeat when the
+        same store is mounted under two names)."""
+        for store in {id(s): s for s in self.roots.values()}.values():
+            store.close()
+
+    @staticmethod
+    def open_roots(paths: Sequence[str], *, workers: int = 2) -> "StoreRouter":
+        """CLI helper: open one store per path (index loaded when present),
+        named ``r0..rN`` with the path recorded for display."""
+        stores: "OrderedDict[str, ZLLMStore]" = OrderedDict()
+        for i, path in enumerate(paths):
+            store = ZLLMStore(path, workers=workers)
+            store.load_index()
+            stores[f"r{i}"] = store
+        return StoreRouter(stores)

@@ -1,72 +1,182 @@
-"""Async retrieval engine + HTTP front for the zLLM store (stdlib-only).
+"""Async serving engine + HTTP/1.1 front for the zLLM store (stdlib-only).
 
 ZipLLM's target deployment is hub-scale: tens of PB of model weights served
 to millions of users. ``ZLLMStore`` provides the storage-side concurrency
 substrate (mmap readers with pin counts, a read gate with read generations,
-publish epochs — see ``repro.core.pipeline``); this module turns it into a
-serving system:
+publish epochs, a spooled-ingest job queue — see ``repro.core.pipeline``);
+this module turns it into a servable hub node:
 
-* :class:`RetrievalEngine` — asyncio facade. Decodes run on a bounded
-  thread pool (sha256/zstd/XOR release the GIL, so concurrent retrievals
-  genuinely overlap); concurrent requests for the same object are
-  *single-flighted* (one decode, N waiters — ``repro.serve.singleflight``);
-  finished responses land in a byte-budgeted LRU. Every flight and cache
-  entry is keyed by the store's ``read_gen``, so an ingest / delete / gc
-  rolls the caches over atomically: a request issued after a mutation can
-  never be served a pre-mutation decode (snapshot isolation, with the
-  store's read gate guaranteeing the decode itself never races physical
-  reclamation).
+* :class:`RetrievalEngine` — asyncio facade over ONE store. Decodes run on
+  a bounded thread pool (sha256/zstd/XOR release the GIL, so concurrent
+  retrievals genuinely overlap); concurrent requests for the same object
+  are *single-flighted* (one decode, N waiters —
+  ``repro.serve.singleflight``); finished responses land in a
+  byte-budgeted LRU. Every flight and cache entry is keyed by the store's
+  ``read_gen``, so an ingest / delete / gc rolls the caches over
+  atomically (snapshot isolation, with the store's read gate guaranteeing
+  the decode itself never races physical reclamation).
 
-* :class:`StoreServer` — a minimal HTTP/1.1 front over asyncio streams
-  (deliberately dependency-free; this is the paper-repro analogue of the
-  production gateway, not a gateway itself):
+* :class:`StoreServer` — an HTTP/1.1 front over asyncio streams
+  (deliberately dependency-free; the paper-repro analogue of the
+  production gateway). One server fronts one store *or* a
+  :class:`repro.serve.router.StoreRouter` over N roots (consistent-hash
+  repo placement, per-root stats, admin fan-out) — every deployment is
+  wrapped in a router internally so both topologies share one code path.
 
-  ========================================  =====================================
-  ``GET /healthz``                          liveness + read_gen
-  ``GET /stats``                            engine + store counters (JSON)
-  ``GET /repo/<repo_id>/file/<filename>``   the bit-exact safetensors file
-  ``GET /repo/<repo_id>/tensor/<name>``     one tensor's raw little-endian bytes
-  ``[?file=<filename>]``                    (default file: model.safetensors)
-  ``GET|POST /admin/compact``               dedup-aware compaction of superseded
-                                            generations (returns the report)
-  ``GET|POST /admin/gc``                    garbage collection;
-  ``[?incremental=1&max_pause_ms=50]``      incremental = bounded-pause steps
-  ========================================  =====================================
+  The protocol surface (the canonical registry is :data:`ROUTES`;
+  ``docs/HTTP_API.md`` documents every route and a test diffs the two):
 
-  ``repo_id`` may contain slashes (``org/model``); the ``file``/``tensor``
-  path markers disambiguate (file: second-to-last segment; tensor:
-  rightmost marker). Tensor names containing a literal ``tensor`` or
-  ``file`` segment need the query form
-  ``/repo/<repo_id>/tensor?name=<tensor>``. Tensor responses carry
-  ``x-tensor-dtype`` / ``x-tensor-shape`` headers; file responses carry
-  ``x-content-sha256``. Errors map to 404 (unknown repo/file/tensor), 410
-  (quarantined by fsck) and 500 (decode/backend failures).
+  - **keep-alive + pipelining**: connections stay open across requests
+    (HTTP/1.1 semantics, ``Connection: close`` honored); requests are
+    read and answered strictly in order, so classic HTTP pipelining works.
+  - **range reads**: ``Range: bytes=`` on file and tensor GETs — a
+    cold-start loader fetches a tensor *slice*, not the 10 GB shard. The
+    object is decoded once (single-flight + response cache) and sliced
+    from the cached buffer; multi-range requests fall back to a full 200;
+    unsatisfiable ranges get 416.
+  - **zero-copy sendfile**: tensors whose payload is a ``stored``-codec
+    frame (raw bytes the entropy stage could not shrink) are served —
+    full or ranged — straight from the container file with
+    ``os.sendfile``; no decode, no userspace copy.
+  - **remote writes**: ``PUT /repo/<id>/file/<name>`` streams the upload
+    to the owning root's spool and enqueues it on the store's pipelined
+    ingest engine; ``POST /ingest_repo`` enqueues a server-local repo
+    directory. ``/admin/jobs`` exposes job status; ``?sync=1`` blocks the
+    request until its job finishes.
 
 * :class:`ServerThread` — runs the server on a private event loop in a
   daemon thread, for synchronous harnesses (tests, benches, the soak).
 
-Run standalone::
+Run standalone (repeat ``--root`` for a sharded multi-store node)::
 
-    PYTHONPATH=src python -m repro.serve.store_server --root /path/to/store
+    PYTHONPATH=src python -m repro.serve.store_server --root /srv/zllm-a \
+        [--root /srv/zllm-b ...]
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
+import hashlib
 import json
+import os
+import re
+import tempfile
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, unquote, urlsplit
 
 from repro.core.pipeline import ZLLMStore, _LRUCache
+from repro.serve.router import StoreRouter
 from repro.serve.singleflight import SingleFlight
 
-__all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "main"]
+__all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "ROUTES", "main"]
 
-_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found", 405: "Method Not Allowed",
-            410: "Gone", 500: "Internal Server Error"}
+_REASONS = {200: "OK", 202: "Accepted", 206: "Partial Content",
+            400: "Bad Request", 404: "Not Found", 405: "Method Not Allowed",
+            410: "Gone", 411: "Length Required",
+            416: "Range Not Satisfiable", 500: "Internal Server Error"}
+
+# Canonical route registry: (methods, path template, one-line summary).
+# docs/HTTP_API.md must list EXACTLY these rows — tests/test_docs.py diffs
+# the documented table against this tuple, so neither can rot alone.
+ROUTES: Tuple[Tuple[str, str, str], ...] = (
+    ("GET", "/healthz",
+     "liveness + read generation(s)"),
+    ("GET", "/stats",
+     "engine + store counters; per-root sections under a multi-root router"),
+    ("GET", "/repo/{repo_id}/file/{filename}",
+     "bit-exact safetensors file; Range: bytes= supported"),
+    ("PUT", "/repo/{repo_id}/file/{filename}",
+     "remote write: spool the body, enqueue pipelined ingest"),
+    ("GET", "/repo/{repo_id}/tensor/{tensor_name}",
+     "one tensor's raw little-endian bytes; Range + ?name= query form"),
+    ("POST", "/ingest_repo",
+     "enqueue a server-local repo directory for ingest"),
+    ("GET", "/admin/jobs",
+     "spooled-ingest job status (?job=<id> for one)"),
+    ("GET|POST", "/admin/gc",
+     "garbage collection; ?incremental=1&max_pause_ms=; per root or all"),
+    ("GET|POST", "/admin/compact",
+     "dedup-aware compaction of superseded generations; per root or all"),
+    ("GET|POST", "/admin/fsck",
+     "integrity check; ?repair=1&spot_check=; per root or all"),
+)
+
+_RANGE_RE = re.compile(r"^(\d+)-(\d*)$")
+_MAX_JSON_BODY = 1 << 20        # POST bodies are control-plane JSON only
+_UPLOAD_CHUNK = 1 << 20         # PUT spool streaming granularity
+
+
+def _span_sha256_ok(path: str, offset: int, size: int, expect: str) -> bool:
+    """sha256 a container frame span against its record hash (the
+    sendfile path's one-time verification; runs on the executor)."""
+    h = hashlib.sha256()
+    try:
+        with open(path, "rb") as f:
+            f.seek(offset)
+            remaining = size
+            while remaining > 0:
+                chunk = f.read(min(_UPLOAD_CHUNK, remaining))
+                if not chunk:
+                    return False
+                h.update(chunk)
+                remaining -= len(chunk)
+    except OSError:
+        return False
+    return h.hexdigest() == expect
+
+
+def parse_byte_range(header: Optional[str], size: int):
+    """RFC-7233 single-range parser for ``Range: bytes=...``.
+
+    Returns ``None`` (serve the full body: no/malformed header, or a
+    multi-range request — rejected with a 200-full fallback by design),
+    ``"unsat"`` (416: first-pos past the end, or an empty suffix), or an
+    inclusive ``(start, end)`` with ``end`` clamped to ``size - 1``.
+    """
+    if not header or not header.startswith("bytes="):
+        return None
+    spec = header[len("bytes="):].strip()
+    if "," in spec:
+        return None  # multi-range: fall back to the full representation
+    if spec.startswith("-"):  # suffix form: last N bytes
+        try:
+            n = int(spec[1:])
+        except ValueError:
+            return None
+        if n <= 0 or size == 0:
+            return "unsat"
+        return max(0, size - n), size - 1
+    m = _RANGE_RE.match(spec)
+    if m is None:
+        return None
+    start = int(m.group(1))
+    end = int(m.group(2)) if m.group(2) else size - 1
+    if start >= size:
+        return "unsat"
+    if end < start:
+        return None
+    return start, min(end, size - 1)
+
+
+class _Request:
+    """One parsed request on a keep-alive connection."""
+
+    __slots__ = ("method", "target", "version", "headers", "reader", "keep")
+
+    def __init__(self, method: str, target: str, version: str,
+                 headers: Dict[str, str], reader: asyncio.StreamReader):
+        self.method = method
+        self.target = target
+        self.version = version
+        self.headers = headers
+        self.reader = reader
+        conn = headers.get("connection", "").lower()
+        self.keep = (conn != "close" if version == "HTTP/1.1"
+                     else conn == "keep-alive")
 
 
 class RetrievalEngine:
@@ -112,7 +222,10 @@ class RetrievalEngine:
 
     async def get_tensor(self, repo_id: str, tensor_name: str,
                          filename: str = "model.safetensors") -> Tuple[bytes, Dict]:
-        """One tensor's raw bytes + metadata for ``repo_id/filename``."""
+        """One tensor's raw bytes + metadata for ``repo_id/filename``.
+        Ranged HTTP reads slice the bytes returned here — the decode runs
+        (and is cached, and single-flighted) ONCE per object per read
+        generation no matter how many slices are requested."""
         return await self._fetch(
             ("tensor", repo_id, filename, tensor_name),
             lambda: self.store.retrieve_tensor(repo_id, filename, tensor_name,
@@ -151,6 +264,10 @@ class RetrievalEngine:
         return result
 
     # -- admin ----------------------------------------------------------
+    # These are the single-store *embedding* API (callers holding an
+    # engine directly — see the serve README). The HTTP /admin/* routes
+    # fan out through StoreRouter.fanout_* instead, so they cover every
+    # root of a sharded node with one call.
     async def run_gc(self, incremental: bool = False,
                      max_pause_ms: float = 50.0) -> Dict[str, int]:
         """Run ``store.gc()`` off-loop. Safe during serving AND during an
@@ -191,17 +308,46 @@ class RetrievalEngine:
 
 
 class StoreServer:
-    """Minimal asyncio HTTP/1.1 front over a :class:`RetrievalEngine`."""
+    """HTTP/1.1 front (keep-alive, ranges, remote writes, sendfile) over
+    one :class:`RetrievalEngine` per routed store root."""
 
-    def __init__(self, store: ZLLMStore, host: str = "127.0.0.1", port: int = 0,
+    def __init__(self, store, host: str = "127.0.0.1", port: int = 0,
                  *, max_concurrency: int = 8, cache_bytes: int = 128 << 20,
-                 verify: bool = True):
-        self.engine = RetrievalEngine(store, max_concurrency=max_concurrency,
-                                      cache_bytes=cache_bytes, verify=verify)
+                 verify: bool = True, idle_timeout: float = 30.0):
+        self.router = (store if isinstance(store, StoreRouter)
+                       else StoreRouter(store))
+        self.engines: Dict[str, RetrievalEngine] = {
+            name: RetrievalEngine(s, max_concurrency=max_concurrency,
+                                  cache_bytes=cache_bytes, verify=verify)
+            for name, s in self.router.items()}
+        # back-compat: the single-root engine (first root's under a router)
+        self.engine = next(iter(self.engines.values()))
+        self.idle_timeout = idle_timeout
         self._host_arg, self._port_arg = host, port
         self.host: Optional[str] = None
         self.port: Optional[int] = None
         self._server: Optional[asyncio.AbstractServer] = None
+        # HTTP-layer counters (the engine counts decodes; these count the
+        # protocol surface: connections reused, ranges, zero-copy sends)
+        self.http = {"connections": 0, "requests": 0, "range_requests": 0,
+                     "sendfile_responses": 0, "put_uploads": 0,
+                     "put_bytes": 0}
+        # live keep-alive connections: handler tasks park on readline
+        # between requests, so shutdown must actively close their
+        # transports or the loop teardown reports destroyed pending tasks
+        self._conns: set = set()
+        # sendfile spans sha256-checked once (verify=True): containers are
+        # immutable, so (path, offset) never needs re-verification. LRU,
+        # not a set — retired generations must not accumulate forever
+        self._verified_spans = _LRUCache(max_items=4096)
+        # span-or-None verdict per (read_gen, root, object): the probe
+        # takes the store read gate and opens a container reader, so hot
+        # non-stored tensors must not pay it on every keep-alive request
+        self._span_cache = _LRUCache(max_items=4096)
+
+    def engine_for(self, repo_id: str,
+                   filename: str = "model.safetensors") -> RetrievalEngine:
+        return self.engines[self.router.locate(repo_id, filename)]
 
     async def start(self) -> Tuple[str, int]:
         self._server = await asyncio.start_server(self._handle, self._host_arg,
@@ -219,87 +365,167 @@ class StoreServer:
             self._server.close()
             await self._server.wait_closed()
             self._server = None
-        await self.engine.aclose()
+        for task in list(self._conns):  # wake idle keep-alive handlers
+            task.cancel()
+        if self._conns:
+            await asyncio.gather(*self._conns, return_exceptions=True)
+        for engine in self.engines.values():
+            await engine.aclose()
 
-    # -- request handling ------------------------------------------------
+    # -- connection handling ----------------------------------------------
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        """One connection, N requests: the keep-alive loop. Requests are
+        parsed and answered strictly in order (pipelined clients get their
+        responses in request order); the loop ends on ``Connection:
+        close``, client EOF, idle timeout, or an error that leaves the
+        request framing in an unknown state."""
+        self.http["connections"] += 1
+        self._conns.add(asyncio.current_task())
         try:
-            request = await asyncio.wait_for(reader.readline(), timeout=30)
-            parts = request.decode("latin-1").split()
-            if len(parts) < 2:
-                return
-            method, target = parts[0], parts[1]
-            while True:  # drain headers; bodies are not supported (GET only)
-                line = await asyncio.wait_for(reader.readline(), timeout=30)
-                if line in (b"\r\n", b"\n", b""):
+            while True:
+                req = await self._read_request(reader)
+                if req is None:
                     break
-            # admin routes (mutating) accept POST as well as GET — GET kept
-            # for curl/urllib harness convenience; everything else is GET-only
-            is_admin = target.split("?", 1)[0].startswith("/admin/")
-            if method != "GET" and not (method == "POST" and is_admin):
-                await self._respond(writer, 405, {"error": "GET only "
-                                                  "(POST allowed on /admin/*)"})
-                return
-            await self._route(writer, target)
+                self.http["requests"] += 1
+                try:
+                    await self._route(writer, req)
+                except (ConnectionError, asyncio.TimeoutError):
+                    raise
+                except Exception as e:  # handler bug: answer 500, drop conn
+                    req.keep = False
+                    await self._respond(writer, 500,
+                                        {"error": f"{type(e).__name__}: {e}"},
+                                        keep=False)
+                if not req.keep:
+                    break
         except (asyncio.TimeoutError, ConnectionError):
             pass
+        except asyncio.CancelledError:
+            pass  # server shutdown: drop the connection quietly
         except ValueError:
             # oversized request/header line (StreamReader limit overrun) —
             # answer 400 instead of leaking an unhandled task exception
             try:
                 await self._respond(writer, 400,
-                                    {"error": "request line or headers too large"})
+                                    {"error": "request line or headers too large"},
+                                    keep=False)
             except Exception:
                 pass
         finally:
+            self._conns.discard(asyncio.current_task())
             try:
                 writer.close()
                 await writer.wait_closed()
-            except (ConnectionError, OSError):
+            except (ConnectionError, OSError, asyncio.CancelledError):
                 pass
 
-    async def _route(self, writer, target: str) -> None:
-        url = urlsplit(target)
+    async def _read_request(self, reader: asyncio.StreamReader) -> Optional[_Request]:
+        request = await asyncio.wait_for(reader.readline(),
+                                         timeout=self.idle_timeout)
+        if not request:
+            return None  # clean EOF between requests
+        parts = request.decode("latin-1").split()
+        if len(parts) < 2:
+            return None
+        method, target = parts[0].upper(), parts[1]
+        version = parts[2] if len(parts) > 2 else "HTTP/1.0"
+        headers: Dict[str, str] = {}
+        while True:
+            line = await asyncio.wait_for(reader.readline(), timeout=30)
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode("latin-1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        return _Request(method, target, version, headers, reader)
+
+    async def _drain_body(self, req: _Request) -> None:
+        """Consume an unread request body so the next request on the
+        connection parses cleanly; closes instead when the body is
+        unbounded (chunked) or oversized."""
+        te = req.headers.get("transfer-encoding", "").lower()
+        if "chunked" in te:
+            req.keep = False
+            return
+        try:
+            length = int(req.headers.get("content-length", "0"))
+        except ValueError:
+            req.keep = False
+            return
+        if length > 64 << 20:  # refuse to slurp huge bodies just for framing
+            req.keep = False
+            return
+        while length > 0:
+            chunk = await asyncio.wait_for(
+                req.reader.read(min(_UPLOAD_CHUNK, length)), timeout=60)
+            if not chunk:
+                req.keep = False
+                return
+            length -= len(chunk)
+
+    # -- routing ------------------------------------------------------------
+    async def _route(self, writer, req: _Request) -> None:
+        url = urlsplit(req.target)
         segs = [unquote(s) for s in url.path.split("/") if s]
         qs = parse_qs(url.query)
+        is_file_route = len(segs) >= 4 and segs[0] == "repo" and segs[-2] == "file"
         try:
+            if req.method == "PUT":
+                if is_file_route:
+                    await self._put_file(writer, req, segs, qs)
+                else:
+                    await self._drain_body(req)
+                    await self._respond(writer, 405,
+                                        {"error": "PUT only on "
+                                         "/repo/<repo_id>/file/<filename>"},
+                                        keep=req.keep)
+                return
+            if req.method == "POST":
+                if url.path == "/ingest_repo":
+                    await self._ingest_repo(writer, req)
+                elif url.path.startswith("/admin/"):
+                    await self._drain_body(req)
+                    await self._admin(writer, req, url.path, qs)
+                else:
+                    await self._drain_body(req)
+                    await self._respond(writer, 405,
+                                        {"error": "POST only on /ingest_repo "
+                                         "and /admin/*"}, keep=req.keep)
+                return
+            if req.method != "GET":
+                await self._drain_body(req)
+                await self._respond(writer, 405,
+                                    {"error": f"method {req.method} not "
+                                     f"supported"}, keep=req.keep)
+                return
+            await self._drain_body(req)  # tolerate (and skip) GET bodies
             if url.path == "/healthz":
-                await self._respond(writer, 200, {"ok": True,
-                                                  "read_gen": self.engine.store.read_gen})
-            elif url.path == "/admin/compact":
-                # dedup-aware compaction: rewrite still-referenced records
-                # out of superseded generations, retire the old gens. Runs
-                # on the executor; serving continues except for the commit's
-                # bounded exclusive hold (returned as exclusive_hold_ms).
-                await self._respond(writer, 200, await self.engine.run_compact())
-            elif url.path == "/admin/gc":
-                inc = qs.get("incremental", ["0"])[0].lower() not in ("0", "false", "")
-                pause = float(qs.get("max_pause_ms", ["50"])[0])
+                single = self.router.single
+                gen = (single.read_gen if single is not None else
+                       {n: s.read_gen for n, s in self.router.items()})
                 await self._respond(writer, 200,
-                                    await self.engine.run_gc(incremental=inc,
-                                                             max_pause_ms=pause))
+                                    {"ok": True, "read_gen": gen,
+                                     "roots": self.router.names()},
+                                    keep=req.keep)
             elif url.path == "/stats":
-                # store.summary() walks index/lifecycle dicts — run it on
-                # the executor so a slow store never stalls the event loop
-                store_stats = await asyncio.get_running_loop().run_in_executor(
-                    self.engine._pool, self.engine.store.summary)
-                await self._respond(writer, 200, {"server": self.engine.stats(),
-                                                  "store": store_stats})
-            elif len(segs) >= 4 and segs[0] == "repo" and segs[-2] == "file":
+                await self._stats(writer, req)
+            elif url.path.startswith("/admin/"):
+                await self._admin(writer, req, url.path, qs)
+            elif is_file_route:
                 repo_id = "/".join(segs[1:-2])
-                data, sha = await self.engine.get_file_digest(repo_id, segs[-1])
-                await self._respond_bytes(writer, data,
-                                          [("x-content-sha256", sha)])
+                engine = self.engine_for(repo_id, segs[-1])
+                data, sha = await engine.get_file_digest(repo_id, segs[-1])
+                await self._respond_ranged(
+                    writer, req, data,
+                    [("x-content-sha256", sha),
+                     ("x-read-gen", str(engine.store.read_gen))])
             elif (len(segs) >= 3 and segs[0] == "repo" and segs[-1] == "tensor"
                   and "name" in qs):
                 # unambiguous form: /repo/<repo_id>/tensor?name=<tensor> —
                 # for names where the path grammar below would mis-split
                 repo_id = "/".join(segs[1:-1])
-                data, meta = await self.engine.get_tensor(
-                    repo_id, qs["name"][0],
-                    qs.get("file", ["model.safetensors"])[0])
-                await self._respond_tensor(writer, data, meta)
+                await self._tensor_get(writer, req, repo_id, qs["name"][0],
+                                       qs.get("file", ["model.safetensors"])[0])
             elif len(segs) >= 4 and segs[0] == "repo" and "tensor" in segs[2:-1]:
                 # path form: rightmost "tensor" marker splits repo id from
                 # tensor name (both may contain slashes; a tensor name with
@@ -308,43 +534,387 @@ class StoreServer:
                 repo_id = "/".join(segs[1:i])
                 tensor_name = "/".join(segs[i + 1:])
                 filename = qs.get("file", ["model.safetensors"])[0]
-                data, meta = await self.engine.get_tensor(repo_id, tensor_name,
-                                                          filename)
-                await self._respond_tensor(writer, data, meta)
+                await self._tensor_get(writer, req, repo_id, tensor_name,
+                                       filename)
             else:
-                await self._respond(writer, 404, {"error": f"no route for {url.path}"})
+                await self._respond(writer, 404,
+                                    {"error": f"no route for {url.path}"},
+                                    keep=req.keep)
         except KeyError as e:
-            await self._respond(writer, 404, {"error": str(e)})
+            self._fail_framing(req)
+            await self._respond(writer, 404, {"error": str(e)}, keep=req.keep)
         except RuntimeError as e:
+            self._fail_framing(req)
             status = 410 if "quarantined" in str(e) else 500
-            await self._respond(writer, status, {"error": str(e)})
+            await self._respond(writer, status, {"error": str(e)}, keep=req.keep)
+        except (ConnectionError, asyncio.TimeoutError):
+            raise
         except Exception as e:  # backend mismatch, decode failure, ...
+            self._fail_framing(req)
             await self._respond(writer, 500,
-                                {"error": f"{type(e).__name__}: {e}"})
-
-    async def _respond_tensor(self, writer, data: bytes, meta: Dict) -> None:
-        await self._respond_bytes(writer, data, [
-            ("x-tensor-dtype", meta["dtype"]),
-            ("x-tensor-shape", json.dumps(meta["shape"])),
-            ("x-tensor-codec", meta["codec"]),
-        ])
-
-    async def _respond(self, writer, status: int, obj: Dict) -> None:
-        body = (json.dumps(obj) + "\n").encode()
-        await self._write(writer, status, body, "application/json", [])
-
-    async def _respond_bytes(self, writer, data: bytes, extra) -> None:
-        await self._write(writer, 200, data, "application/octet-stream",
-                          [("x-read-gen", str(self.engine.store.read_gen))] + extra)
+                                {"error": f"{type(e).__name__}: {e}"},
+                                keep=req.keep)
 
     @staticmethod
-    async def _write(writer, status: int, body: bytes, ctype: str, extra) -> None:
+    def _fail_framing(req: _Request) -> None:
+        """An upload handler failed somewhere its body may not have been
+        fully read (e.g. before the PUT spool loop): the connection's
+        request framing is unknown, so it must close after the error
+        response. GET bodies were drained up front and stay keep-alive."""
+        if req.method != "GET":
+            req.keep = False
+
+    # -- read path ----------------------------------------------------------
+    async def _tensor_get(self, writer, req: _Request, repo_id: str,
+                          tensor_name: str, filename: str) -> None:
+        engine = self.engine_for(repo_id, filename)
+        # zero-copy short-circuit: a `stored`-codec payload is a verbatim
+        # on-disk span — full and ranged responses go through os.sendfile,
+        # no decode, no userspace copy. Any irregularity (codec, race with
+        # a concurrent compact/gc unlink) falls back to the decode path.
+        # The span-or-None verdict is memoized per read generation: the
+        # probe holds the read gate and opens a reader, which hot
+        # non-stored tensors must not pay per keep-alive request.
+        sk = (engine.store.read_gen, id(engine), repo_id, filename,
+              tensor_name)
+        span = self._span_cache.get(sk)
+        if span is None:
+            span = await asyncio.get_running_loop().run_in_executor(
+                engine._pool, engine.store.tensor_sendfile_span,
+                repo_id, filename, tensor_name)
+            self._span_cache.put(sk, span if span is not None else "none")
+        elif span == "none":
+            span = None
+        if span is not None:
+            if await self._respond_sendfile(writer, req, engine, span):
+                return
+        data, meta = await engine.get_tensor(repo_id, tensor_name, filename)
+        await self._respond_ranged(writer, req, data,
+                                   self._tensor_headers(engine, meta))
+
+    @staticmethod
+    def _tensor_headers(engine: RetrievalEngine, meta: Dict) -> List[Tuple[str, str]]:
+        return [("x-tensor-dtype", meta["dtype"]),
+                ("x-tensor-shape", json.dumps(meta["shape"])),
+                ("x-tensor-codec", meta["codec"]),
+                ("x-read-gen", str(engine.store.read_gen))]
+
+    async def _respond_sendfile(self, writer, req: _Request,
+                                engine: RetrievalEngine, span) -> bool:
+        """Serve a stored-codec frame span with ``os.sendfile``; returns
+        False (caller falls back to the decode path) when the container
+        vanished between span resolution and open — the one benign race.
+        Once the fd is open the transfer is safe regardless of concurrent
+        gc/compact: container files are immutable and the fd keeps the
+        bytes alive across an unlink."""
+        cpath, offset, size, meta = span
+        if engine.verify and self._verified_spans.get((cpath, offset)) is None:
+            # first touch of this span under verify=True: one sha256 pass
+            # against the record's ingest-time hash (on the executor).
+            # Immutable containers make the memo sound; a mismatch (bit
+            # rot) falls back to the decode path, which raises the proper
+            # verification error -> 500, same as every other codec.
+            ok = await asyncio.get_running_loop().run_in_executor(
+                engine._pool, _span_sha256_ok, cpath, offset, size,
+                meta["sha256"])
+            if not ok:
+                return False
+            self._verified_spans.put((cpath, offset), True)
+        rng = parse_byte_range(req.headers.get("range"), size)
+        if rng == "unsat":
+            await self._respond(writer, 416,
+                                {"error": f"range out of bounds for "
+                                 f"{size}-byte tensor"},
+                                keep=req.keep,
+                                extra=[("content-range", f"bytes */{size}")])
+            return True
+        try:
+            f = open(cpath, "rb")
+        except OSError:
+            return False
+        try:
+            start, end = rng if rng is not None else (0, size - 1)
+            count = end - start + 1
+            status = 206 if rng is not None else 200
+            if rng is not None:
+                self.http["range_requests"] += 1
+            extra = self._tensor_headers(engine, meta)
+            extra.append(("x-zllm-sendfile", "1"))
+            if status == 206:
+                extra.append(("content-range", f"bytes {start}-{end}/{size}"))
+            head = self._head(status, count, "application/octet-stream",
+                              extra, req.keep)
+            writer.write(head)
+            await writer.drain()
+            loop = asyncio.get_running_loop()
+            try:
+                await loop.sendfile(writer.transport, f, offset + start,
+                                    count, fallback=True)
+            except (ConnectionError, asyncio.TimeoutError):
+                raise
+            except Exception as e:
+                # head (and possibly part of the body) is on the wire: no
+                # JSON may follow under this content-length — drop the
+                # connection instead of desyncing the client
+                raise ConnectionError(f"sendfile failed mid-body: {e}") from e
+            self.http["sendfile_responses"] += 1
+            return True
+        finally:
+            f.close()
+
+    async def _respond_ranged(self, writer, req: _Request, data: bytes,
+                              extra: List[Tuple[str, str]]) -> None:
+        """Full (200) or single-range (206) byte response; 416 with
+        ``content-range: bytes */N`` when unsatisfiable. The full object
+        was decoded once into the engine's response cache — every slice is
+        a view of that buffer."""
+        size = len(data)
+        rng = parse_byte_range(req.headers.get("range"), size)
+        if rng == "unsat":
+            await self._respond(writer, 416,
+                                {"error": f"range out of bounds for "
+                                 f"{size}-byte body"},
+                                keep=req.keep,
+                                extra=[("content-range", f"bytes */{size}")])
+            return
+        if rng is None:
+            await self._write(writer, 200, data, "application/octet-stream",
+                              extra, req.keep)
+            return
+        start, end = rng
+        self.http["range_requests"] += 1
+        body = memoryview(data)[start:end + 1]
+        await self._write(writer, 206, body, "application/octet-stream",
+                          extra + [("content-range",
+                                    f"bytes {start}-{end}/{size}")],
+                          req.keep)
+
+    # -- write path ----------------------------------------------------------
+    async def _put_file(self, writer, req: _Request, segs: List[str],
+                        qs: Dict[str, List[str]]) -> None:
+        """Remote write: stream the body to the owning root's spool, then
+        enqueue it on the store's pipelined ingest engine. 202 + job id by
+        default; ``?sync=1`` waits for the job and returns its result.
+        ``?base=<base_id>`` forwards a declared BitX base."""
+        repo_id, filename = "/".join(segs[1:-2]), segs[-1]
+        if "chunked" in req.headers.get("transfer-encoding", "").lower() \
+                or "content-length" not in req.headers:
+            req.keep = False
+            await self._respond(writer, 411,
+                                {"error": "content-length required "
+                                 "(chunked uploads not supported)"},
+                                keep=False)
+            return
+        try:
+            length = int(req.headers["content-length"])
+        except ValueError:
+            req.keep = False
+            await self._respond(writer, 400, {"error": "bad content-length"},
+                                keep=False)
+            return
+        if length <= 0:
+            await self._respond(writer, 400,
+                                {"error": "empty upload"}, keep=req.keep)
+            return
+        base = qs.get("base", [None])[0]
+        # family-aware placement: a new repo declaring a BitX base lands on
+        # the root serving that base (per-root delta domains — a scattered
+        # family would store every fine-tune standalone)
+        root = self.router.locate_for_write(repo_id, filename, base=base)
+        store = self.router.store(root)
+        fd, spath = tempfile.mkstemp(
+            prefix="put-", suffix="-" + filename.replace("/", "_"),
+            dir=store.spool_dir())
+        received = 0
+        loop = asyncio.get_running_loop()
+        try:
+            with os.fdopen(fd, "wb") as f:
+                while received < length:
+                    chunk = await asyncio.wait_for(
+                        req.reader.read(min(_UPLOAD_CHUNK, length - received)),
+                        timeout=120)
+                    if not chunk:
+                        raise ConnectionError("client closed mid-upload")
+                    # disk writes go through the default executor: a
+                    # multi-GB upload must not stall every other
+                    # connection on each 1 MB write burst
+                    await loop.run_in_executor(None, f.write, chunk)
+                    received += len(chunk)
+        except BaseException:
+            try:
+                os.remove(spath)
+            except OSError:
+                pass
+            raise
+        self.http["put_uploads"] += 1
+        self.http["put_bytes"] += received
+        job_id = store.enqueue_ingest([(spath, repo_id, filename, base)],
+                                      cleanup=True)
+        if qs.get("sync", ["0"])[0] in ("0", "", "false"):
+            await self._respond(writer, 202,
+                                {"job_id": job_id, "root": root,
+                                 "repo_id": repo_id, "filename": filename,
+                                 "bytes": received,
+                                 "status": f"/admin/jobs?job={job_id}"},
+                                keep=req.keep)
+            return
+        job = await self._await_job(store, job_id)
+        status = 200 if job and job["state"] == "done" else 500
+        await self._respond(writer, status, {"root": root, "job": job},
+                            keep=req.keep)
+
+    async def _ingest_repo(self, writer, req: _Request) -> None:
+        """Enqueue a *server-local* repo directory (bulk feeding / sidecar
+        drops): body is ``{"dir": ..., "repo_id": ..., "sync": bool}``.
+        Metadata (config.json / README base_model) is parsed exactly as in
+        local ``ingest_repos``."""
+        te = req.headers.get("transfer-encoding", "").lower()
+        try:
+            length = int(req.headers.get("content-length", "0"))
+        except ValueError:
+            length = -1
+        if "chunked" in te or length <= 0 or length > _MAX_JSON_BODY:
+            req.keep = False
+            await self._respond(writer, 411,
+                                {"error": "JSON body with content-length "
+                                 f"<= {_MAX_JSON_BODY} required"}, keep=False)
+            return
+        body = await asyncio.wait_for(req.reader.readexactly(length),
+                                      timeout=60)
+        try:
+            spec = json.loads(body)
+            repo_dir = spec["dir"]
+        except (ValueError, KeyError, TypeError):
+            await self._respond(writer, 400,
+                                {"error": 'body must be {"dir": ..., '
+                                 '"repo_id": ..., "sync": bool}'},
+                                keep=req.keep)
+            return
+        if not os.path.isdir(repo_dir):
+            await self._respond(writer, 404,
+                                {"error": f"no such directory: {repo_dir}"},
+                                keep=req.keep)
+            return
+        repo_id = spec.get("repo_id") or os.path.basename(
+            os.path.normpath(repo_dir))
+        root = self.router.locate(repo_id)
+        store = self.router.store(root)
+        job_id = store.enqueue_ingest_repo(repo_dir, repo_id)
+        if not spec.get("sync"):
+            await self._respond(writer, 202,
+                                {"job_id": job_id, "root": root,
+                                 "repo_id": repo_id,
+                                 "status": f"/admin/jobs?job={job_id}"},
+                                keep=req.keep)
+            return
+        job = await self._await_job(store, job_id)
+        status = 200 if job and job["state"] == "done" else 500
+        await self._respond(writer, status, {"root": root, "job": job},
+                            keep=req.keep)
+
+    @staticmethod
+    async def _await_job(store: ZLLMStore, job_id: str,
+                         timeout: float = 600.0) -> Optional[Dict]:
+        """Poll one job to a terminal state without blocking the loop."""
+        deadline = time.monotonic() + timeout
+        while True:
+            job = store.ingest_job(job_id)
+            if job is None or job["state"] in ("done", "failed"):
+                return job
+            if time.monotonic() >= deadline:
+                job["state"] = "timeout"
+                return job
+            await asyncio.sleep(0.02)
+
+    # -- stats + admin --------------------------------------------------------
+    async def _stats(self, writer, req: _Request) -> None:
+        # store summaries walk index/lifecycle dicts — run them on the
+        # executor so a slow store never stalls the event loop
+        store_stats = await asyncio.get_running_loop().run_in_executor(
+            self.engine._pool, self.router.summary)
+        if self.router.single is not None:
+            server = dict(self.engine.stats())
+        else:
+            server = {
+                "requests": sum(e.requests for e in self.engines.values()),
+                "errors": sum(e.errors for e in self.engines.values()),
+                "roots": {name: e.stats() for name, e in self.engines.items()},
+            }
+        server["http"] = dict(self.http)
+        await self._respond(writer, 200, {"server": server,
+                                          "store": store_stats},
+                            keep=req.keep)
+
+    async def _admin(self, writer, req: _Request, path: str,
+                     qs: Dict[str, List[str]]) -> None:
+        loop = asyncio.get_running_loop()
+        root = qs.get("root", [None])[0]
+        if path == "/admin/jobs":
+            job_id = qs.get("job", [None])[0]
+            if job_id is not None:
+                job = self.router.ingest_job(job_id)
+                if job is None:
+                    await self._respond(writer, 404,
+                                        {"error": f"unknown job {job_id}"},
+                                        keep=req.keep)
+                else:
+                    await self._respond(writer, 200, job, keep=req.keep)
+            else:
+                jobs = self.router.ingest_jobs()
+                await self._respond(writer, 200, {"jobs": jobs}, keep=req.keep)
+        elif path == "/admin/compact":
+            # dedup-aware compaction: rewrite still-referenced records out
+            # of superseded generations, retire the old gens. Runs on the
+            # executor; serving continues except for the commit's bounded
+            # exclusive hold (returned as exclusive_hold_ms).
+            out = await loop.run_in_executor(
+                self.engine._pool, lambda: self.router.fanout_compact(root))
+            await self._respond(writer, 200, out, keep=req.keep)
+        elif path == "/admin/gc":
+            inc = qs.get("incremental", ["0"])[0].lower() not in ("0", "false", "")
+            pause = float(qs.get("max_pause_ms", ["50"])[0])
+            out = await loop.run_in_executor(
+                self.engine._pool,
+                lambda: self.router.fanout_gc(root, incremental=inc,
+                                              max_pause_ms=pause))
+            await self._respond(writer, 200, out, keep=req.keep)
+        elif path == "/admin/fsck":
+            repair = qs.get("repair", ["0"])[0].lower() not in ("0", "false", "")
+            spot_raw = qs.get("spot_check", ["4"])[0]
+            spot = None if spot_raw in ("all", "none", "") else int(spot_raw)
+            out = await loop.run_in_executor(
+                self.engine._pool,
+                lambda: self.router.fanout_fsck(root, repair=repair,
+                                                spot_check=spot))
+            await self._respond(writer, 200, out, keep=req.keep)
+        else:
+            await self._respond(writer, 404,
+                                {"error": f"no admin route for {path}"},
+                                keep=req.keep)
+
+    # -- response plumbing ----------------------------------------------------
+    async def _respond(self, writer, status: int, obj: Dict, *,
+                       keep: bool = False,
+                       extra: Optional[List[Tuple[str, str]]] = None) -> None:
+        body = (json.dumps(obj) + "\n").encode()
+        await self._write(writer, status, body, "application/json",
+                          extra or [], keep)
+
+    @classmethod
+    def _head(cls, status: int, length: int, ctype: str, extra,
+              keep: bool) -> bytes:
         head = [f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}",
                 f"content-type: {ctype}",
-                f"content-length: {len(body)}",
-                "connection: close"]
+                f"content-length: {length}",
+                "accept-ranges: bytes",
+                f"connection: {'keep-alive' if keep else 'close'}"]
         head += [f"{k}: {v}" for k, v in extra]
-        writer.write(("\r\n".join(head) + "\r\n\r\n").encode())
+        return ("\r\n".join(head) + "\r\n\r\n").encode()
+
+    @classmethod
+    async def _write(cls, writer, status: int, body, ctype: str, extra,
+                     keep: bool) -> None:
+        writer.write(cls._head(status, len(body), ctype, extra, keep))
         writer.write(body)
         await writer.drain()
 
@@ -352,9 +922,11 @@ class StoreServer:
 class ServerThread:
     """Run a :class:`StoreServer` on a private event loop in a daemon
     thread — the harness for synchronous callers (tests, benches, soak).
-    Usable as a context manager; ``host``/``port`` are set after start."""
+    ``store`` may be a single :class:`ZLLMStore` or a
+    :class:`StoreRouter`. Usable as a context manager; ``host``/``port``
+    are set after start."""
 
-    def __init__(self, store: ZLLMStore, **server_kw):
+    def __init__(self, store, **server_kw):
         self._store = store
         self._kw = server_kw
         self._loop: Optional[asyncio.AbstractEventLoop] = None
@@ -423,31 +995,36 @@ class ServerThread:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Serve a zLLM store over HTTP (asyncio, stdlib-only)")
-    ap.add_argument("--root", required=True, help="store root directory")
+        description="Serve zLLM store root(s) over HTTP (asyncio, stdlib-only)")
+    ap.add_argument("--root", required=True, action="append",
+                    help="store root directory (repeat for a sharded "
+                         "multi-root node; repos are consistent-hashed "
+                         "across roots)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8421)
     ap.add_argument("--store-workers", type=int, default=2,
-                    help="ZLLMStore decode pool size")
+                    help="ZLLMStore decode pool size (per root)")
     ap.add_argument("--serve-workers", type=int, default=8,
-                    help="concurrent retrieval executor size")
+                    help="concurrent retrieval executor size (per root)")
     ap.add_argument("--cache-mb", type=int, default=128)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip sha256 verification of responses")
     args = ap.parse_args(argv)
 
-    store = ZLLMStore(args.root, workers=args.store_workers)
-    if not store.load_index():
-        print(f"store_server: no index.json under {args.root} "
-              f"(serving an empty store)", flush=True)
+    router = StoreRouter.open_roots(args.root, workers=args.store_workers)
+    for name, store in router.items():
+        if not store.file_index:
+            print(f"store_server: no index under {store.root} "
+                  f"(root {name} starts empty)", flush=True)
 
     async def amain():
-        server = StoreServer(store, args.host, args.port,
+        server = StoreServer(router, args.host, args.port,
                              max_concurrency=args.serve_workers,
                              cache_bytes=args.cache_mb << 20,
                              verify=not args.no_verify)
         host, port = await server.start()
-        print(f"store_server: serving {args.root} on http://{host}:{port}",
+        roots = ", ".join(f"{n}={s.root}" for n, s in router.items())
+        print(f"store_server: serving {roots} on http://{host}:{port}",
               flush=True)
         await server.serve_forever()
 
@@ -456,7 +1033,7 @@ def main(argv=None) -> int:
     except KeyboardInterrupt:
         pass
     finally:
-        store.close()
+        router.close()
     return 0
 
 

@@ -1,0 +1,522 @@
+"""HTTP/1.1 serving surface: keep-alive, range GETs, the remote write
+path, zero-copy sendfile and the multi-store router.
+
+Covers the PR's serving acceptance criteria: suffix/out-of-bounds/multi
+range semantics (206 / 416 / 200-full fallback), range over a BitX-delta
+tensor byte-identical to slicing the full GET, connection reuse across
+requests, PUT → spooled ingest job → ranged read-back against a routed
+2-root server, and /stats keeping the flat single-root shape while
+aggregating per-root under a router.
+"""
+
+import json
+import http.client
+import os
+import time
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.core.bitx import BitXReader
+from repro.core.pipeline import ZLLMStore
+from repro.formats import safetensors as st
+from repro.serve.router import StoreRouter
+from repro.serve.store_server import ServerThread, parse_byte_range
+
+
+def _write_model(path, rng, n_tensors=3, n=2048, scale=0.02, blob=False):
+    tensors = {f"model.t{i}.weight": (rng.randn(n) * scale).astype(np.float32)
+               for i in range(n_tensors)}
+    if blob:  # incompressible non-float payload -> `stored` codec on disk
+        tensors["tok.table"] = np.frombuffer(rng.bytes(32768), np.uint8).copy()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(tensors, path)
+    return tensors
+
+
+def _write_finetune(path, base_tensors, rng, sigma=1e-3):
+    ft = {k: ((v + rng.randn(*v.shape).astype(np.float32) * sigma)
+              .astype(np.float32) if v.dtype.kind == "f" else v.copy())
+          for k, v in base_tensors.items()}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    st.save_file(ft, path)
+    return ft
+
+
+class Client:
+    """Thin keep-alive HTTP client: one connection, many requests."""
+
+    def __init__(self, srv):
+        self.conn = http.client.HTTPConnection(srv.host, srv.port, timeout=60)
+
+    def get(self, path, headers=None):
+        self.conn.request("GET", path, headers=headers or {})
+        r = self.conn.getresponse()
+        return r.status, dict(r.getheaders()), r.read()
+
+    def put(self, path, body):
+        self.conn.request("PUT", path, body=body)
+        r = self.conn.getresponse()
+        return r.status, dict(r.getheaders()), r.read()
+
+    def post(self, path, body=b""):
+        self.conn.request("POST", path, body=body)
+        r = self.conn.getresponse()
+        return r.status, dict(r.getheaders()), r.read()
+
+    def close(self):
+        self.conn.close()
+
+
+@pytest.fixture
+def family_store(tmp_path):
+    """Base + BitX fine-tune + an incompressible (`stored`) tensor."""
+    rng = np.random.RandomState(42)
+    base_path = str(tmp_path / "hub" / "org" / "base" / "model.safetensors")
+    base = _write_model(base_path, rng, blob=True)
+    ft_path = str(tmp_path / "hub" / "u0" / "ft" / "model.safetensors")
+    _write_finetune(ft_path, base, rng)
+    store = ZLLMStore(str(tmp_path / "store"), workers=2)
+    store.ingest_file(base_path, "org/base")
+    store.ingest_file(ft_path, "u0/ft", declared_base="org/base")
+    yield store, {"org/base": open(base_path, "rb").read(),
+                  "u0/ft": open(ft_path, "rb").read()}
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# Range parser unit coverage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("header,size,expect", [
+    (None, 100, None),
+    ("bytes=0-9", 100, (0, 9)),
+    ("bytes=10-", 100, (10, 99)),
+    ("bytes=-10", 100, (90, 99)),
+    ("bytes=-200", 100, (0, 99)),        # oversized suffix clamps to all
+    ("bytes=0-500", 100, (0, 99)),       # end clamps to size-1
+    ("bytes=100-", 100, "unsat"),        # first-pos at EOF
+    ("bytes=-0", 100, "unsat"),          # empty suffix
+    ("bytes=-5", 0, "unsat"),            # empty body
+    ("bytes=0-1,4-5", 100, None),        # multi-range -> full fallback
+    ("bytes=5-2", 100, None),            # inverted -> full fallback
+    ("bytes=abc", 100, None),
+    ("chars=0-5", 100, None),
+])
+def test_parse_byte_range(header, size, expect):
+    assert parse_byte_range(header, size) == expect
+
+
+# ---------------------------------------------------------------------------
+# Range GETs over HTTP
+# ---------------------------------------------------------------------------
+
+def test_file_range_semantics(family_store):
+    store, originals = family_store
+    data = originals["org/base"]
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            path = "/repo/org/base/file/model.safetensors"
+            status, headers, body = c.get(path)
+            assert status == 200 and body == data
+            assert headers["accept-ranges"] == "bytes"
+
+            status, headers, body = c.get(path, {"Range": "bytes=100-299"})
+            assert status == 206 and body == data[100:300]
+            assert headers["content-range"] == f"bytes 100-299/{len(data)}"
+
+            status, _, body = c.get(path, {"Range": "bytes=-64"})
+            assert status == 206 and body == data[-64:]
+
+            status, headers, body = c.get(
+                path, {"Range": f"bytes={len(data)}-{len(data) + 10}"})
+            assert status == 416
+            assert headers["content-range"] == f"bytes */{len(data)}"
+
+            # multi-range: deliberate 200-full fallback
+            status, _, body = c.get(path, {"Range": "bytes=0-1,10-11"})
+            assert status == 200 and body == data
+        finally:
+            c.close()
+
+
+def test_bitx_tensor_range_matches_full_get_slice(family_store):
+    """Satellite acceptance: a range over a BitX-delta tensor must be
+    byte-identical to slicing the full GET (and the direct store read)."""
+    store, _ = family_store
+    # pick a tensor the fine-tune actually stored as a BitX delta
+    rec = store.file_index["u0/ft/model.safetensors"]
+    reader = BitXReader.open(rec["path"])
+    bitx_names = [r.name for r in reader.records if r.codec == "bitx"]
+    reader.close()
+    assert bitx_names, "fixture must produce at least one BitX record"
+    name = bitx_names[0]
+    direct, meta = store.retrieve_tensor("u0/ft", "model.safetensors", name)
+
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            path = f"/repo/u0/ft/tensor/{name}"
+            status, headers, full = c.get(path)
+            assert status == 200 and full == direct
+            assert headers["x-tensor-codec"] == "bitx"
+            n = len(full)
+            for rng_hdr, lo, hi in [("bytes=0-99", 0, 100),
+                                    (f"bytes={n // 2}-", n // 2, n),
+                                    ("bytes=-128", n - 128, n),
+                                    (f"bytes=7-{n + 999}", 7, n)]:
+                status, _, part = c.get(path, {"Range": rng_hdr})
+                assert status == 206
+                assert part == full[lo:hi] == direct[lo:hi]
+            # the decode ran once per read generation: every slice above
+            # was cut from the cached buffer, not re-decoded
+            sf = srv.server.engine.stats()["singleflight"]
+            assert sf["leaders"] <= 2  # one file decode path + one tensor
+        finally:
+            c.close()
+
+
+def test_stored_tensor_served_via_sendfile(family_store):
+    store, _ = family_store
+    direct, meta = store.retrieve_tensor("org/base", "model.safetensors",
+                                         "tok.table")
+    assert meta["codec"] == "stored"
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            path = "/repo/org/base/tensor/tok.table"
+            status, headers, full = c.get(path)
+            assert status == 200 and full == direct
+            assert headers["x-zllm-sendfile"] == "1"
+            assert headers["x-tensor-codec"] == "stored"
+            status, headers, part = c.get(path, {"Range": "bytes=1000-1999"})
+            assert status == 206 and part == direct[1000:2000]
+            assert headers["x-zllm-sendfile"] == "1"
+            status, headers, _ = c.get(path,
+                                       {"Range": f"bytes={len(direct)}-"})
+            assert status == 416
+            assert srv.server.http["sendfile_responses"] >= 2
+        finally:
+            c.close()
+
+
+def test_keepalive_connection_reuse(family_store):
+    store, originals = family_store
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            for _ in range(16):
+                status, headers, _ = c.get("/healthz")
+                assert status == 200
+                assert headers["connection"] == "keep-alive"
+            status, _, body = c.get("/repo/org/base/file/model.safetensors")
+            assert status == 200 and body == originals["org/base"]
+        finally:
+            c.close()
+        # 17+ requests, exactly one connection
+        assert srv.server.http["requests"] >= 17
+        assert srv.server.http["connections"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Remote write path
+# ---------------------------------------------------------------------------
+
+def test_put_sync_then_read_back(family_store, tmp_path):
+    store, _ = family_store
+    rng = np.random.RandomState(7)
+    p = str(tmp_path / "new" / "model.safetensors")
+    _write_model(p, rng, scale=1.0)
+    data = open(p, "rb").read()
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            status, _, body = c.put(
+                "/repo/org/new/file/model.safetensors?sync=1", data)
+            out = json.loads(body)
+            assert status == 200 and out["job"]["state"] == "done", out
+            res = out["job"]["results"][0]
+            assert res["repo_id"] == "org/new" and res["raw_bytes"] == len(data)
+            status, _, got = c.get("/repo/org/new/file/model.safetensors")
+            assert status == 200 and got == data
+            # the spool was cleaned up after the job finished
+            assert os.listdir(store.spool_dir()) == []
+        finally:
+            c.close()
+
+
+def test_put_async_job_lifecycle_and_declared_base(family_store, tmp_path):
+    """Async PUT: 202 + job id, /admin/jobs reaches `done`, the declared
+    base (?base=) produces BitX records, and the result is bit-exact."""
+    store, originals = family_store
+    rng = np.random.RandomState(11)
+    base_tensors = st.load_file(
+        str(tmp_path / "hub" / "org" / "base" / "model.safetensors"))
+    p = str(tmp_path / "ft2" / "model.safetensors")
+    _write_finetune(p, base_tensors, rng)
+    data = open(p, "rb").read()
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            status, _, body = c.put(
+                "/repo/u1/ft2/file/model.safetensors?base=org/base", data)
+            out = json.loads(body)
+            assert status == 202 and "job_id" in out, out
+            deadline = time.time() + 60
+            while True:
+                status, _, body = c.get(f"/admin/jobs?job={out['job_id']}")
+                job = json.loads(body)
+                if job["state"] in ("done", "failed"):
+                    break
+                assert time.time() < deadline, job
+                time.sleep(0.02)
+            assert job["state"] == "done", job
+            assert job["results"][0]["base_id"] == "org/base"
+            assert job["results"][0]["n_bitx"] >= 1
+            status, _, got = c.get("/repo/u1/ft2/file/model.safetensors")
+            assert status == 200 and got == data
+            # job listing includes the finished job
+            status, _, body = c.get("/admin/jobs")
+            assert any(j["job_id"] == out["job_id"]
+                       for j in json.loads(body)["jobs"])
+        finally:
+            c.close()
+    assert store.fsck(spot_check=2).ok
+
+
+def test_put_base_survives_restart_and_serves_finetunes(tmp_path):
+    """Regression: the job worker must adopt a spooled BASE into
+    basecache/ BEFORE persisting the index — a restarted store must not
+    resurrect a dead spool path in base_paths/families (which would make
+    every later same-family ingest fail at the bit-distance matcher)."""
+    rng = np.random.RandomState(21)
+    base_path = str(tmp_path / "hub" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    root = str(tmp_path / "store")
+    store = ZLLMStore(root, workers=2)
+    with ServerThread(store, max_concurrency=2) as srv:
+        c = Client(srv)
+        try:
+            status, _, body = c.put(
+                "/repo/org/base/file/model.safetensors?sync=1",
+                open(base_path, "rb").read())
+            assert status == 200, body
+        finally:
+            c.close()
+    store.close()
+
+    # fresh process: every persisted base path must exist on disk, and a
+    # declared-base fine-tune must still delta against the adopted base
+    store2 = ZLLMStore(root, workers=2)
+    assert store2.load_index()
+    for bid, p in store2.base_paths.items():
+        assert os.path.exists(p), f"base path for {bid} rotted: {p}"
+    ft_path = str(tmp_path / "ft" / "model.safetensors")
+    _write_finetune(ft_path, base, rng)
+    res = store2.ingest_file(ft_path, "u9/ft", declared_base="org/base")
+    assert res.base_id == "org/base" and res.n_bitx >= 1
+    assert store2.retrieve_file("u9/ft", "model.safetensors") == \
+        open(ft_path, "rb").read()
+    store2.close()
+
+
+def test_corrupt_stored_span_is_never_served(family_store):
+    """verify=True must cover the sendfile path too: flip a byte inside a
+    stored-codec span on disk — the span check fails, the decode path
+    takes over, and ITS verification turns the rot into a 500 (never a
+    silent 200 of corrupt bytes)."""
+    store, _ = family_store
+    cpath, off, ln, meta = store.tensor_sendfile_span(
+        "org/base", "model.safetensors", "tok.table")
+    with open(cpath, "r+b") as f:
+        f.seek(off + 7)
+        orig = f.read(1)
+        f.seek(off + 7)
+        f.write(bytes([orig[0] ^ 0xFF]))
+    with ServerThread(store, max_concurrency=2) as srv:
+        c = Client(srv)
+        try:
+            status, headers, body = c.get("/repo/org/base/tensor/tok.table")
+            assert status == 500, (status, headers)
+            assert "x-zllm-sendfile" not in headers
+            assert srv.server.http["sendfile_responses"] == 0
+        finally:
+            c.close()
+
+
+def test_put_without_content_length_is_rejected(family_store):
+    store, _ = family_store
+    with ServerThread(store, max_concurrency=2) as srv:
+        import socket
+        s = socket.create_connection((srv.host, srv.port), timeout=30)
+        try:
+            s.sendall(b"PUT /repo/a/b/file/f HTTP/1.1\r\n"
+                      b"transfer-encoding: chunked\r\n\r\n")
+            resp = s.recv(4096)
+            assert b"411" in resp.split(b"\r\n", 1)[0]
+        finally:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# Multi-store router
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def two_root_router(tmp_path):
+    s0 = ZLLMStore(str(tmp_path / "r0"), workers=2)
+    s1 = ZLLMStore(str(tmp_path / "r1"), workers=2)
+    router = StoreRouter(OrderedDict([("r0", s0), ("r1", s1)]))
+    yield router
+    router.close()
+
+
+def test_router_placement_is_deterministic_and_spreads(two_root_router):
+    router = two_root_router
+    placed = {router.place(f"org/model-{i}") for i in range(64)}
+    assert placed == {"r0", "r1"}          # both roots get keys
+    for i in range(16):
+        rid = f"org/model-{i}"
+        assert router.place(rid) == router.place(rid)
+
+
+def test_router_put_get_and_aggregated_stats(two_root_router, tmp_path):
+    router = two_root_router
+    rng = np.random.RandomState(3)
+    payloads = {}
+    for i in range(4):
+        p = str(tmp_path / f"m{i}" / "model.safetensors")
+        _write_model(p, rng, scale=1.0)
+        payloads[f"org/m{i}"] = open(p, "rb").read()
+
+    with ServerThread(router, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            for rid, data in payloads.items():
+                status, _, body = c.put(f"/repo/{rid}/file/model.safetensors"
+                                        f"?sync=1", data)
+                assert status == 200, body
+            # reads route to whichever root holds the repo
+            for rid, data in payloads.items():
+                status, _, got = c.get(f"/repo/{rid}/file/model.safetensors")
+                assert status == 200 and got == data
+                # ranged read through the router too
+                status, _, part = c.get(f"/repo/{rid}/file/model.safetensors",
+                                        {"Range": "bytes=32-95"})
+                assert status == 206 and part == data[32:96]
+            status, _, body = c.get("/stats")
+            stats = json.loads(body)
+            # aggregated multi-root shape
+            assert stats["store"]["n_roots"] == 2
+            assert stats["store"]["n_files"] == 4
+            assert set(stats["store"]["roots"]) == {"r0", "r1"}
+            assert set(stats["server"]["roots"]) == {"r0", "r1"}
+            # both roots actually hold data (consistent hashing spread 4
+            # repos; collisions onto one root are possible but the chosen
+            # ids split across roots — placement is deterministic)
+            per_root_files = [s["n_files"]
+                              for s in stats["store"]["roots"].values()]
+            assert sum(per_root_files) == 4
+            # admin fan-out hits every root
+            status, _, body = c.post("/admin/gc")
+            gc = json.loads(body)
+            assert set(gc["roots"]) == {"r0", "r1"}
+            status, _, body = c.get("/admin/fsck")
+            assert json.loads(body)["ok"] is True
+            # single-root selection
+            status, _, body = c.post("/admin/compact?root=r1")
+            assert "roots" in json.loads(body)
+            status, _, body = c.post("/admin/gc?root=nope")
+            assert status == 404
+        finally:
+            c.close()
+
+
+def test_single_root_stats_keep_flat_shape(family_store):
+    """Satellite fix: one root -> /stats keeps the flat single-store shape
+    (server_smoke back-compat); no per-root nesting leaks in."""
+    store, _ = family_store
+    with ServerThread(store, max_concurrency=2) as srv:
+        c = Client(srv)
+        try:
+            status, _, body = c.get("/stats")
+            stats = json.loads(body)
+            assert "lifecycle" in stats["store"]          # flat summary
+            assert "n_roots" not in stats["store"]
+            assert "requests" in stats["server"]
+            assert "roots" not in stats["server"]
+            assert "http" in stats["server"]
+            # flat admin reports too
+            status, _, body = c.post("/admin/gc")
+            assert "collected" in json.loads(body)
+            assert "roots" not in json.loads(body)
+        finally:
+            c.close()
+
+
+def test_put_with_declared_base_colocates_with_base_root(two_root_router,
+                                                         tmp_path):
+    """Family co-location: a new fine-tune declaring ?base= must land on
+    the root serving that base (per-root delta domains), even when hash
+    placement would pick the other root — and actually BitX-delta."""
+    router = two_root_router
+    rng = np.random.RandomState(31)
+    base_path = str(tmp_path / "fam" / "model.safetensors")
+    base = _write_model(base_path, rng)
+    with ServerThread(router, max_concurrency=2) as srv:
+        c = Client(srv)
+        try:
+            status, _, body = c.put(
+                "/repo/fam/base/file/model.safetensors?sync=1",
+                open(base_path, "rb").read())
+            assert status == 200, body
+            base_root = json.loads(body)["root"]
+            # a fine-tune id that hash-places on the OTHER root
+            other = next(f"fam/ft-{i}" for i in range(64)
+                         if router.place(f"fam/ft-{i}") != base_root)
+            ft_path = str(tmp_path / "famft" / "model.safetensors")
+            _write_finetune(ft_path, base, rng)
+            status, _, body = c.put(
+                f"/repo/{other}/file/model.safetensors?base=fam/base&sync=1",
+                open(ft_path, "rb").read())
+            out = json.loads(body)
+            assert status == 200, out
+            assert out["root"] == base_root          # co-located
+            assert out["job"]["results"][0]["base_id"] == "fam/base"
+            assert out["job"]["results"][0]["n_bitx"] >= 1
+        finally:
+            c.close()
+
+
+def test_reregistration_routes_to_owning_root(two_root_router, tmp_path):
+    """A re-PUT of an existing repo must land on the root already holding
+    it (not the hash placement), preserving the generation chain."""
+    router = two_root_router
+    rng = np.random.RandomState(5)
+    p = str(tmp_path / "v1" / "model.safetensors")
+    _write_model(p, rng, scale=1.0)
+    # seed the repo on the NON-placement root directly
+    rid = "org/displaced"
+    anti = "r0" if router.place(rid) == "r1" else "r1"
+    router.store(anti).ingest_file(p, rid)
+    assert router.locate(rid) == anti
+
+    p2 = str(tmp_path / "v2" / "model.safetensors")
+    _write_model(p2, rng, scale=1.0)
+    v2 = open(p2, "rb").read()
+    with ServerThread(router, max_concurrency=2) as srv:
+        c = Client(srv)
+        try:
+            status, _, body = c.put(f"/repo/{rid}/file/model.safetensors"
+                                    f"?sync=1", v2)
+            assert status == 200, body
+            status, _, got = c.get(f"/repo/{rid}/file/model.safetensors")
+            assert status == 200 and got == v2
+        finally:
+            c.close()
+    # the re-registration stayed on the owning root: two generations there,
+    # nothing on the placement root
+    assert len(router.store(anti).lifecycle.versions) == 2
+    assert not router.store("r0" if anti == "r1" else "r1").file_index

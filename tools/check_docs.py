@@ -1,0 +1,141 @@
+"""Documentation link/anchor checker (the CI docs gate).
+
+Walks every tracked markdown file (``docs/*.md`` plus the repo's
+``README.md`` files), and fails on:
+
+* relative links whose target file does not exist;
+* intra- and cross-file ``#anchor`` fragments that match no heading in
+  the target markdown file (GitHub slug rules, approximated);
+* ``src/...:<line>`` source anchors whose file is missing or shorter
+  than the referenced line (the ARCHITECTURE doc pins prose to code —
+  a shrunken file means the anchor rotted).
+
+External ``http(s)://`` / ``mailto:`` links are skipped (no network in
+CI). Exit status 0 = clean, 1 = dangling references (listed on stderr).
+
+    python tools/check_docs.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Dict, List, Set
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+IMAGE_LINK_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+# `src/repro/core/pipeline.py:123`-style anchors in prose/code spans
+SRC_ANCHOR_RE = re.compile(r"`((?:src|tests|benchmarks|examples|tools)"
+                           r"/[\w./\-]+?):(\d+)`")
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
+             ".claude"}
+
+
+def _slug(heading: str) -> str:
+    """Approximate GitHub's heading -> anchor slug."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _headings(path: str) -> Set[str]:
+    slugs: Dict[str, int] = {}
+    out: Set[str] = set()
+    in_code = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if in_code:
+                continue
+            m = HEADING_RE.match(line)
+            if m:
+                s = _slug(m.group(1))
+                n = slugs.get(s, 0)
+                slugs[s] = n + 1
+                out.add(s if n == 0 else f"{s}-{n}")
+    return out
+
+
+def markdown_files(root: str) -> List[str]:
+    out = []
+    for dirpath, dirnames, files in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in files:
+            if not fn.endswith(".md"):
+                continue
+            rel = os.path.relpath(os.path.join(dirpath, fn), root)
+            if rel.startswith("docs" + os.sep) or fn == "README.md":
+                out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def check_file(path: str, root: str, heading_cache: Dict[str, Set[str]]) -> List[str]:
+    errors: List[str] = []
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+
+    def headings_of(p: str) -> Set[str]:
+        p = os.path.abspath(p)
+        if p not in heading_cache:
+            heading_cache[p] = _headings(p)
+        return heading_cache[p]
+
+    for m in list(LINK_RE.finditer(text)) + list(IMAGE_LINK_RE.finditer(text)):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, frag = target.partition("#")
+        if target:
+            tpath = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(tpath):
+                errors.append(f"{os.path.relpath(path, root)}: dangling link "
+                              f"target {target!r}")
+                continue
+        else:
+            tpath = path  # same-file anchor
+        if frag and tpath.endswith(".md"):
+            if frag not in headings_of(tpath):
+                errors.append(f"{os.path.relpath(path, root)}: dangling "
+                              f"anchor #{frag} in {os.path.relpath(tpath, root)}")
+
+    for m in SRC_ANCHOR_RE.finditer(text):
+        spath, line = m.group(1), int(m.group(2))
+        fpath = os.path.join(root, spath)
+        if not os.path.exists(fpath):
+            errors.append(f"{os.path.relpath(path, root)}: source anchor "
+                          f"{spath}:{line} — file missing")
+            continue
+        n_lines = sum(1 for _ in open(fpath, encoding="utf-8",
+                                      errors="replace"))
+        if line > n_lines:
+            errors.append(f"{os.path.relpath(path, root)}: source anchor "
+                          f"{spath}:{line} past EOF ({n_lines} lines)")
+    return errors
+
+
+def run(root: str) -> List[str]:
+    heading_cache: Dict[str, Set[str]] = {}
+    errors: List[str] = []
+    files = markdown_files(root)
+    for path in files:
+        errors.extend(check_file(path, root, heading_cache))
+    print(f"check_docs: scanned {len(files)} markdown file(s), "
+          f"{len(errors)} dangling reference(s)")
+    return errors
+
+
+def main(argv=None) -> int:
+    root = (argv or sys.argv[1:] or ["."])[0]
+    root = os.path.abspath(root)
+    errors = run(root)
+    for e in errors:
+        print(f"check_docs: FAIL {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
