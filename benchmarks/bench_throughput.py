@@ -324,6 +324,20 @@ def compaction_bench(ctx: Ctx, workers: int = 2) -> dict:
         }
 
 
+def replication_bench(ctx: Ctx) -> dict:
+    """Replicated-tier figures (3 roots, replicas=3, W=2) via the
+    ``server_smoke`` replica leg — sync quorum-PUT p99 latency, read
+    throughput through failover with one root down, and the wall time of
+    the anti-entropy sweep that converges the restarted root. The leg's
+    correctness assertions (zero failed reads, byte-identity, empty index
+    diff) must hold or the bench aborts."""
+    from benchmarks.server_smoke import replica_leg
+
+    failures, metrics = replica_leg(ctx)
+    assert not failures, f"replica leg failed: {failures[:3]}"
+    return metrics
+
+
 def _assert_identical_containers(root_a: str, root_b: str) -> None:
     ca, cb = os.path.join(root_a, "containers"), os.path.join(root_b, "containers")
     for dirpath, _, files in os.walk(ca):
@@ -389,6 +403,13 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
     # metrics (compaction_reclaimed_bytes higher-is-better,
     # incremental_gc_max_pause_ms lower-is-better) ------------------------
     out["lifecycle_compaction"] = compaction_bench(ctx)
+
+    # --- replicated tier (PR 6): the quorum-write / read-failover /
+    # anti-entropy figures, produced by the server_smoke acceptance leg so
+    # the gated numbers come from the same code path CI proves correct.
+    # failover_read_MBps gates higher-is-better; quorum_put_p99_ms and
+    # anti_entropy_repair_s gate lower-is-better (rise-gated) -------------
+    out["replication"] = replication_bench(ctx)
 
     serial = out["zllm"][f"workers_{workers[0]}"]
     out["relative_ordering_ok"] = bool(

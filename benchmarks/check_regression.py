@@ -36,9 +36,12 @@ from typing import Dict, List, Tuple
 # keepalive_reqs_per_s / range_read_MBps gate the HTTP/1.1 protocol layer:
 # a drop means connection reuse broke (reconnect per request) or ranged
 # reads fell off the cached-decode / sendfile fast paths.
+# failover_read_MBps gates the replicated read path with one root down: a
+# drop means failover stopped skipping the dead root up front (per-request
+# timeout churn) or reads fell off the replica fast path.
 GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
                   "compaction_reclaimed_bytes", "keepalive_reqs_per_s",
-                  "range_read_MBps")
+                  "range_read_MBps", "failover_read_MBps")
 
 # Lower-is-better keys: fail when the FRESH value RISES past
 # baseline * (1 + max_rise). Pause times are noisy (scheduler, shared
@@ -51,8 +54,19 @@ GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
 # committed baseline's lifecycle_compaction section is recorded at the
 # --tiny scale CI compares against — reclaimed BYTES scale with the
 # corpus, unlike the MB/s keys.
-GATED_INVERSE_SUFFIXES = ("incremental_gc_max_pause_ms",)
+# quorum_put_p99_ms / anti_entropy_repair_s are the replicated-tier
+# lower-is-better keys: a p99 blow-up means quorum writes started waiting
+# on stragglers (or the retry/backoff path engaged on healthy roots); a
+# repair-time blow-up means anti-entropy stopped diffing per-key state and
+# went back to shipping everything.
+GATED_INVERSE_SUFFIXES = ("incremental_gc_max_pause_ms", "quorum_put_p99_ms",
+                          "anti_entropy_repair_s")
 INVERSE_FAIL_FLOOR = 250.0  # ms: rises that stay under this never fail
+# Per-suffix absolute fail floors, in each key's OWN unit (the gc pause and
+# quorum p99 are milliseconds; the anti-entropy repair is wall seconds —
+# a sweep that finishes inside 5 s is fine at any multiplier on a tiny
+# baseline). Suffixes not listed here use INVERSE_FAIL_FLOOR.
+INVERSE_FAIL_FLOORS = {"anti_entropy_repair_s": 5.0}
 
 
 def _flatten(d: Dict, prefix: str = "") -> Dict:
@@ -101,8 +115,10 @@ def compare(baseline: Dict, fresh: Dict, max_drop: float,
                                 f"the baseline is regenerated")
             continue
         if inverse:
+            floor = next((f for s, f in INVERSE_FAIL_FLOORS.items()
+                          if key.endswith(s)), INVERSE_FAIL_FLOOR)
             rise = fv / bv - 1.0 if bv else 0.0
-            failed = rise > max_rise and fv > INVERSE_FAIL_FLOOR
+            failed = rise > max_rise and fv > floor
             rows.append((key, bv, fv, -rise, "FAIL" if failed else "ok"))
         else:
             drop = 1.0 - fv / bv if bv else 0.0

@@ -18,6 +18,16 @@ against direct ``retrieve_tensor`` slices while gc + compact fan out
 across both roots mid-flight. This is the PR's remote-write acceptance
 assertion.
 
+Leg 3 (replicated 3-root node, replicas=3 / W=2): quorum-writes the
+corpus (p99 sync PUT latency), downs the root that just served a read,
+re-sweeps the whole corpus through read failover (zero failed reads,
+every byte compared), quorum-writes degraded with the root still down,
+then restarts it and runs ``POST /admin/anti_entropy`` — the restarted
+root must converge (empty per-root index diff, all three roots
+byte-identical, clean fscks). Emits the three CI-gated replication
+metrics (``quorum_put_p99_ms``, ``failover_read_MBps``,
+``anti_entropy_repair_s``) for ``bench_throughput``.
+
 Exits non-zero on mismatch, HTTP error, or a dirty final fsck.
 
     PYTHONPATH=src python -m benchmarks.server_smoke [--tiny] [--scale S]
@@ -117,6 +127,9 @@ def run(ctx: Ctx, concurrency: int = 8) -> int:
             failures.append(f"final fsck dirty: {report.summary()}")
 
     failures += remote_write_leg(ctx, concurrency=min(4, concurrency))
+    rep_failures, rep_metrics = replica_leg(ctx, concurrency=min(4, concurrency))
+    failures += rep_failures
+    print(f"server_smoke: replication metrics {rep_metrics}")
 
     for f in failures:
         print(f"server_smoke: FAIL {f}", file=sys.stderr)
@@ -241,6 +254,169 @@ def remote_write_leg(ctx: Ctx, concurrency: int = 4) -> list:
     finally:
         router.close()
     return failures
+
+
+def _req(base: str, path: str, method: str, data: bytes = None):
+    req = urllib.request.Request(base + path, data=data, method=method)
+    with urllib.request.urlopen(req, timeout=120) as r:
+        return r.status, json.loads(r.read())
+
+
+def replica_leg(ctx: Ctx, concurrency: int = 4) -> tuple:
+    """The replicated-tier acceptance demo over HTTP (3 roots, replicas=3,
+    W=2): quorum PUTs → kill the serving root → failover sweep with zero
+    failed reads → degraded quorum PUT → restart + anti-entropy → all three
+    roots byte-identical with an empty index diff. Returns
+    ``(failures, metrics)`` where metrics carries the CI-gated
+    ``quorum_put_p99_ms`` / ``failover_read_MBps`` /
+    ``anti_entropy_repair_s`` figures."""
+    from benchmarks.fsck_smoke import _perturbed_copy
+    from repro.formats.modelcard import parse_repo_metadata
+
+    failures: list = []
+    metrics: dict = {"replicas": 3, "write_quorum": 2}
+    roots = [f"/tmp/repro-server-smoke-rep{i}" for i in range(3)]
+    for r in roots:
+        shutil.rmtree(r, ignore_errors=True)
+    router = StoreRouter(
+        OrderedDict((f"rep{i}", ZLLMStore(r, workers=1))
+                    for i, r in enumerate(roots)),
+        replicas=3, write_quorum=2)
+    try:
+        with ServerThread(router, max_concurrency=concurrency) as srv:
+            base = f"http://{srv.host}:{srv.port}"
+
+            # 1. quorum-write the corpus synchronously, timing each PUT
+            lat = []
+            for rid, _ in ctx.manifest:
+                meta = parse_repo_metadata(ctx.repo_path(rid))
+                q = "&base=" + urllib.request.quote(meta["base_model"], safe="") \
+                    if meta.get("base_model") else ""
+                data = open(ctx.model_file(rid), "rb").read()
+                t0 = time.perf_counter()
+                status, out = _put(
+                    base, f"/repo/{rid}/file/model.safetensors?sync=1{q}", data)
+                lat.append((time.perf_counter() - t0) * 1e3)
+                if status != 200 or not out.get("replicas", {}).get("quorum_met"):
+                    failures.append(f"replica PUT {rid} missed quorum: {out}")
+            lat.sort()
+            metrics["quorum_put_p99_ms"] = round(
+                lat[min(len(lat) - 1, int(round(0.99 * (len(lat) - 1))))], 1)
+            for name, store in router.items():
+                store.wait_ingest_idle(timeout=600)
+
+            # every root must hold every repo byte-identically (replicas=3)
+            expected = {}
+            for rid, _ in ctx.manifest:
+                blobs = {n: s.retrieve_file(rid, "model.safetensors")
+                         for n, s in router.items()}
+                if len(set(blobs.values())) != 1:
+                    failures.append(f"replica divergence after PUT: {rid}")
+                expected[rid] = next(iter(blobs.values()))
+
+            # 2. kill the root that just served a read, then failover-sweep
+            probe = ctx.manifest[0][0]
+            _, headers, body = _get(base, f"/repo/{probe}/file/model.safetensors")
+            victim = headers["x-served-by"]
+            router.set_root_down(victim, True)
+            _, h2, b2 = _get(base, f"/repo/{probe}/file/model.safetensors")
+            if h2["x-served-by"] == victim or b2 != expected[probe]:
+                failures.append("failover GET did not move off the down root "
+                                "byte-identically")
+
+            bad_reads = []
+
+            def sweep(cid: int):
+                n = 0
+                rids = [rid for rid, _ in ctx.manifest]
+                order = rids[cid % len(rids):] + rids[:cid % len(rids)]
+                for rid in order * 2:
+                    try:
+                        _, h, body = _get(
+                            base, f"/repo/{rid}/file/model.safetensors")
+                    except Exception as e:
+                        bad_reads.append(f"client {cid}: {rid}: {e!r}")
+                        return n
+                    if h.get("x-served-by") == victim:
+                        bad_reads.append(f"client {cid}: {rid} served by the "
+                                         f"down root")
+                    if body != expected[rid]:
+                        bad_reads.append(f"client {cid}: {rid} diverged")
+                    n += len(body)
+                return n
+
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(concurrency) as ex:
+                served = sum(f.result() for f in
+                             [ex.submit(sweep, c) for c in range(concurrency)])
+            wall = time.perf_counter() - t0
+            metrics["failover_read_MBps"] = round(served / 2**20 / wall, 1) \
+                if wall > 0 else float("inf")
+            metrics["failover_read_MB"] = round(served / 2**20, 1)
+            if bad_reads:
+                failures.append(f"failover sweep had {len(bad_reads)} failed "
+                                f"read(s): {bad_reads[:3]}")
+
+            # 3. degraded quorum write (W=2 of 3 with the victim down)
+            ft = next(rid for rid, kind in reversed(ctx.manifest)
+                      if kind == "finetune")
+            reput = "/tmp/repro-server-smoke-rep-reput.safetensors"
+            _perturbed_copy(ctx.model_file(ft), reput)
+            redata = open(reput, "rb").read()
+            status, out = _put(
+                base, f"/repo/{ft}/file/model.safetensors?sync=1", redata)
+            if status != 200 or not out.get("replicas", {}).get("quorum_met"):
+                failures.append(f"degraded PUT missed W=2 quorum: {out}")
+            if victim not in out.get("replicas", {}).get("failed", [victim]):
+                failures.append("degraded PUT claims the down root took the write")
+            # drain the background repair job while the victim is still
+            # down (it can only converge the up roots, a no-op here) so the
+            # timed anti-entropy sweep below provably does the shipping
+            for name, store in router.items():
+                if name != victim:
+                    store.wait_ingest_idle(timeout=600)
+
+            # 4. restart the victim; anti-entropy must converge it
+            router.set_root_down(victim, False)
+            t0 = time.perf_counter()
+            status, rep = _req(base, "/admin/anti_entropy", "POST")
+            metrics["anti_entropy_repair_s"] = round(time.perf_counter() - t0, 3)
+            if status != 200 or rep.get("errors"):
+                failures.append(f"anti_entropy failed: {rep}")
+            if rep.get("shipped_versions", 0) < 1:
+                failures.append("anti_entropy shipped nothing — the restarted "
+                                "root should have missed the degraded PUT")
+            if rep.get("diff_after"):
+                failures.append(f"index diff after repair: {rep['diff_after']}")
+            blobs = {n: s.retrieve_file(ft, "model.safetensors")
+                     for n, s in router.items()}
+            if set(blobs.values()) != {redata}:
+                failures.append("restarted root not byte-identical after repair")
+
+            # 5. tombstoned DELETE propagates to every replica; idempotent
+            dead = ctx.manifest[1][0]
+            status, out = _req(base, f"/repo/{dead}", "DELETE")
+            if status != 200 or out.get("deleted", 0) < 1:
+                failures.append(f"replica DELETE failed: {out}")
+            status, out = _req(base, f"/repo/{dead}", "DELETE")
+            if status != 200:
+                failures.append("replica DELETE is not idempotent")
+            try:
+                _get(base, f"/repo/{dead}/file/model.safetensors")
+                failures.append("deleted repo still serves")
+            except urllib.request.HTTPError as e:
+                if e.code != 404:
+                    failures.append(f"deleted repo GET: {e.code} != 404")
+
+            _, _, body = _get(base, "/admin/fsck")
+            if not json.loads(body).get("ok"):
+                failures.append(f"replica fsck dirty: {body[:200]}")
+            diff = router.replica_index_diff()
+            if diff:
+                failures.append(f"final replica index diff not empty: {diff}")
+    finally:
+        router.close()
+    return failures, metrics
 
 
 def put_corpus(ctx: Ctx, base: str) -> int:

@@ -11,6 +11,17 @@ with a full fsck (every record decoded + sha256-checked) plus the orphan
 scan; any dangling reference, corruption, orphan, client error or byte
 mismatch fails the run.
 
+The store runs with an :class:`AutoCompactPolicy` so the soak exercises
+the gc→compact chaining path under live traffic — the run fails if the
+watermark never fires despite enough completed sweeps.
+
+A second leg then soaks the replicated tier (3 roots, replicas=3, W=2):
+the same churn pattern runs over HTTP while a root is KILLED mid-soak —
+clients must see zero failed reads and full byte identity through
+failover, quorum writes must keep landing at W=2, and after the root is
+restarted an anti-entropy sweep must converge it (empty per-root index
+diff, clean fscks everywhere).
+
 The log (``--log``, default /tmp/repro-soak.log) is uploaded as a CI
 artifact by the nightly workflow.
 
@@ -28,9 +39,12 @@ import threading
 import time
 import urllib.request
 
+from collections import OrderedDict
+
 from benchmarks.common import Ctx, build_ctx
 from benchmarks.fsck_smoke import _perturbed_copy
-from repro.core.pipeline import ZLLMStore
+from repro.core.pipeline import AutoCompactPolicy, ZLLMStore
+from repro.serve.router import StoreRouter
 from repro.serve.store_server import ServerThread
 
 
@@ -61,7 +75,12 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
     client_stats = {"fetches": 0, "bytes": 0}
     stats_lock = threading.Lock()
 
-    with ZLLMStore(root, workers=2) as store:
+    # low watermark + a sweep-count backstop so the automatic gc→compact
+    # chain provably fires inside a short soak window (the nightly default
+    # keeps compaction churning under live reads either way)
+    policy = AutoCompactPolicy(min_superseded_bytes=1 << 20,
+                               superseded_ratio=0.05, every_n_gc=2)
+    with ZLLMStore(root, workers=2, auto_compact=policy) as store:
         store.ingest_repos([(ctx.repo_path(rid), rid) for rid, _ in ctx.manifest])
         stable = [rid for rid, _ in ctx.manifest]  # never churned: always servable
         originals = {rid: store.retrieve_file(rid, "model.safetensors")
@@ -202,15 +221,198 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
         for rid in stable:  # end-to-end: stable population still bit-exact
             if store.retrieve_file(rid, "model.safetensors") != originals[rid]:
                 failures.append(f"post-soak byte mismatch: {rid}")
+        auto_runs = store.summary()["lifecycle"]["auto_compact_runs"]
+        log.line(f"soak: auto-compact fired {auto_runs}x "
+                 f"(policy every_n_gc={policy.every_n_gc})")
+        if rnd >= 6 and auto_runs == 0:
+            failures.append("auto-compact watermark never fired despite "
+                            f"{rnd} churn rounds of gc")
         with stats_lock:
             log.line(f"soak: {rnd} churn rounds, {client_stats['fetches']} "
                      f"fetches, {client_stats['bytes'] / 2**20:.1f} MB served")
+
+    if not failures:
+        failures += replicated_leg(ctx, max(0.5, minutes / 2), log)
 
     for f in failures:
         log.line(f"FAIL {f}")
     log.line("soak: " + ("FAILED" if failures else "OK"))
     log.close()
     return 1 if failures else 0
+
+
+def replicated_leg(ctx: Ctx, minutes: float, log: Log) -> list:
+    """Kill-a-root-mid-soak: the replicated tier (3 roots, replicas=3,
+    W=2) serves a stable population to concurrent clients while churn
+    repos PUT/DELETE over HTTP; a third of the way in, the root that just
+    served a read is killed — reads must fail over with ZERO client
+    errors and full byte identity, and quorum writes must keep landing at
+    W=2. Two thirds in, the root restarts and an anti-entropy sweep must
+    converge it: empty per-root index diff, clean fscks, stable repos
+    byte-exact everywhere."""
+    from repro.formats.modelcard import parse_repo_metadata
+
+    roots = [f"/tmp/repro-soak-rep{i}" for i in range(3)]
+    scratch = "/tmp/repro-soak-rep-scratch"
+    for r in roots + [scratch]:
+        shutil.rmtree(r, ignore_errors=True)
+    failures: list = []
+    stop = threading.Event()
+    client_stats = {"fetches": 0, "bytes": 0}
+    stats_lock = threading.Lock()
+    router = StoreRouter(
+        OrderedDict((f"rep{i}", ZLLMStore(r, workers=1))
+                    for i, r in enumerate(roots)),
+        replicas=3, write_quorum=2)
+    try:
+        with ServerThread(router, max_concurrency=8) as srv:
+            base = f"http://{srv.host}:{srv.port}"
+
+            def fetch(url: str) -> bytes:
+                with urllib.request.urlopen(url, timeout=60) as r:
+                    return r.read()
+
+            def req(path: str, method: str, data: bytes = None) -> dict:
+                rq = urllib.request.Request(base + path, data=data,
+                                            method=method)
+                with urllib.request.urlopen(rq, timeout=120) as r:
+                    return json.loads(r.read())
+
+            stable = [rid for rid, _ in ctx.manifest]
+            originals = {}
+            for rid in stable:
+                meta = parse_repo_metadata(ctx.repo_path(rid))
+                q = "&base=" + urllib.request.quote(
+                    meta["base_model"], safe="") \
+                    if meta.get("base_model") else ""
+                data = open(ctx.model_file(rid), "rb").read()
+                out = req(f"/repo/{rid}/file/model.safetensors?sync=1{q}",
+                          "PUT", data)
+                if not out.get("replicas", {}).get("quorum_met", True):
+                    failures.append(f"seed PUT {rid} missed quorum")
+                originals[rid] = data
+            log.line(f"replica soak: quorum-wrote {len(stable)} repos "
+                     f"(replicas=3, W=2), {minutes:.1f} min of churn ahead")
+
+            def client(cid: int):
+                order = stable[cid % len(stable):] + stable[:cid % len(stable)]
+                while not stop.is_set():
+                    for rid in order:
+                        if stop.is_set():
+                            break
+                        try:
+                            body = fetch(
+                                f"{base}/repo/{rid}/file/model.safetensors")
+                        except Exception as e:
+                            failures.append(f"replica client {cid}: {rid}: "
+                                            f"{e!r} (failed read)")
+                            stop.set()
+                            return
+                        if body != originals[rid]:
+                            failures.append(f"replica client {cid}: {rid} "
+                                            f"byte mismatch")
+                            stop.set()
+                            return
+                        with stats_lock:
+                            client_stats["fetches"] += 1
+                            client_stats["bytes"] += len(body)
+
+            clients = [threading.Thread(target=client, args=(i,), daemon=True)
+                       for i in range(3)]
+            for t in clients:
+                t.start()
+
+            t0 = time.time()
+            deadline = t0 + minutes * 60
+            kill_at, restart_at = t0 + minutes * 20, t0 + minutes * 40
+            victim = None
+            restarted = False
+            rnd = 0
+            churned: list = []
+            try:
+                while time.time() < deadline and not stop.is_set():
+                    rnd += 1
+                    if victim is None and time.time() >= kill_at:
+                        # kill the root that JUST served a read so the
+                        # failover path is provably on the hot path
+                        rq = urllib.request.Request(
+                            f"{base}/repo/{stable[0]}/file/model.safetensors")
+                        with urllib.request.urlopen(rq, timeout=60) as r:
+                            victim = r.headers["x-served-by"]
+                        router.set_root_down(victim, True)
+                        log.line(f"replica soak round {rnd}: KILLED {victim} "
+                                 f"under live traffic")
+                    if victim and not restarted and time.time() >= restart_at:
+                        router.set_root_down(victim, False)
+                        tr = time.time()
+                        rep = req("/admin/anti_entropy", "POST", b"")
+                        log.line(f"replica soak round {rnd}: restarted "
+                                 f"{victim}, anti-entropy shipped "
+                                 f"{rep.get('shipped_versions', 0)} version(s) "
+                                 f"in {time.time() - tr:.2f}s")
+                        if rep.get("errors"):
+                            failures.append(f"anti-entropy errors: "
+                                            f"{rep['errors']}")
+                        if rep.get("diff_after"):
+                            failures.append(f"restarted root did not "
+                                            f"converge: {rep['diff_after']}")
+                        restarted = True
+                    donor = stable[rnd % len(stable)]
+                    new_rid = f"soak-rep/r{rnd}"
+                    p = os.path.join(scratch, f"r{rnd}", "model.safetensors")
+                    _perturbed_copy(ctx.model_file(donor), p)
+                    out = req(f"/repo/{new_rid}/file/model.safetensors?sync=1",
+                              "PUT", open(p, "rb").read())
+                    reps = out.get("replicas", {})
+                    if not reps.get("quorum_met", out["job"]["state"] == "done"):
+                        failures.append(f"replica soak round {rnd}: PUT "
+                                        f"missed quorum: {out}")
+                        break
+                    churned.append(new_rid)
+                    if len(churned) > 3:
+                        gone = churned.pop(0)
+                        out = req(f"/repo/{gone}", "DELETE")
+                        if out.get("deleted", 0) < 1:
+                            failures.append(f"replica soak round {rnd}: "
+                                            f"DELETE {gone} deleted nothing")
+            finally:
+                stop.set()
+                for t in clients:
+                    t.join(timeout=60)
+
+            if victim is None:
+                failures.append("replica soak too short to reach the "
+                                "kill point — nothing was proven")
+            elif not restarted:
+                router.set_root_down(victim, False)
+                rep = req("/admin/anti_entropy", "POST", b"")
+                if rep.get("diff_after"):
+                    failures.append(f"restarted root did not converge: "
+                                    f"{rep['diff_after']}")
+
+            # final convergence sweep: deletes issued while the victim was
+            # down must have propagated as tombstones, every group equal
+            rep = req("/admin/anti_entropy", "POST", b"")
+            if rep.get("diff_after"):
+                failures.append(f"final index diff not empty: "
+                                f"{rep['diff_after']}")
+            fsck = req("/admin/fsck", "GET")
+            if not fsck.get("ok"):
+                failures.append(f"replica fsck dirty: {fsck}")
+            for rid in stable:
+                blobs = {n: s.retrieve_file(rid, "model.safetensors")
+                         for n, s in router.items()}
+                if set(blobs.values()) != {originals[rid]}:
+                    failures.append(f"post-soak replica divergence: {rid}")
+            with stats_lock:
+                log.line(f"replica soak: {rnd} churn rounds, "
+                         f"{client_stats['fetches']} fetches, "
+                         f"{client_stats['bytes'] / 2**20:.1f} MB served, "
+                         f"0 failed reads required "
+                         f"({len(failures)} failure(s))")
+    finally:
+        router.close()
+    return failures
 
 
 def main() -> int:

@@ -21,7 +21,14 @@ not a cleanup nicety. This module makes containers immutable *versions*:
   references, which may free its targets in the same pass).
 * ``quarantine`` parks a corrupted version out of the retrieval path while
   keeping its graph node (and therefore its dependencies) alive, so a
-  repair can re-pin or restore without collateral GC.
+  repair can re-pin or restore without collateral GC; ``unquarantine`` is
+  the inverse, applied after a healthy replica's bytes are swapped back in.
+* ``tombstones`` are deletion markers (``key -> (gen, ts)``): a delete
+  records the highest generation it covered, so replica anti-entropy can
+  distinguish "this key was deleted" from "this replica never saw this
+  key" — and, because generations are monotonic per key, a later re-upload
+  (``gen > tombstone gen``) legitimately clears the marker instead of
+  being mistaken for a resurrection.
 
 The store (``repro.core.pipeline.ZLLMStore``) owns the policy: which
 versions are anchored, how ``tensor_locations`` entries are scrubbed after
@@ -105,6 +112,7 @@ class ContainerLifecycle:
         self.versions: Dict[str, VersionInfo] = {}      # vid -> live version
         self.max_gen: Dict[str, int] = {}               # key -> highest gen ever
         self.edges: Dict[str, Set[str]] = {}            # dependant vid -> target vids
+        self.tombstones: Dict[str, Tuple[int, float]] = {}  # key -> (gen, ts)
         self.reclaimed_bytes = 0
         self.n_collected = 0
         self.n_gc_runs = 0
@@ -255,6 +263,52 @@ class ContainerLifecycle:
         v.quarantined = True
         v.path = new_path
 
+    def unquarantine(self, key: str, gen: int, new_path: str) -> None:
+        """Return a quarantined version to the live set after its bytes were
+        restored (verbatim, sha256-verified) from a healthy replica. The
+        inverse of :meth:`quarantine`: the version becomes retrievable again
+        at ``new_path`` and counts toward live bytes."""
+        v = self.versions[make_vid(key, gen)]
+        if v.quarantined:
+            self._live_bytes += v.nbytes
+        v.quarantined = False
+        v.path = new_path
+
+    # -- tombstones --------------------------------------------------------
+    def record_tombstone(self, key: str, gen: int, ts: float) -> None:
+        """Record that ``key`` was deleted at a moment when its highest
+        known generation was ``gen``. Merging keeps the max generation (and
+        the freshest timestamp), so tombstones are idempotent and
+        commutative across replicas."""
+        old = self.tombstones.get(key)
+        if old is None:
+            self.tombstones[key] = (gen, ts)
+        else:
+            self.tombstones[key] = (max(gen, old[0]), max(ts, old[1]))
+
+    def tombstone_for(self, key: str) -> Optional[Tuple[int, float]]:
+        return self.tombstones.get(key)
+
+    def tombstone_covers(self, key: str, gen: int) -> bool:
+        """True when a recorded delete supersedes generation ``gen`` of
+        ``key`` — a replica holding such a generation must drop it rather
+        than re-ship it (anti-resurrection rule)."""
+        t = self.tombstones.get(key)
+        return t is not None and gen <= t[0]
+
+    def clear_tombstone(self, key: str) -> None:
+        """A re-upload produced a generation above the tombstone's: the
+        delete marker has been superseded and must stop deleting."""
+        self.tombstones.pop(key, None)
+
+    def prune_tombstones(self, now: float, ttl_s: float) -> int:
+        """Drop tombstones older than ``ttl_s`` (anti-entropy has long since
+        converged every replica). Returns how many were pruned."""
+        stale = [k for k, (_, ts) in self.tombstones.items() if now - ts > ttl_s]
+        for k in stale:
+            del self.tombstones[k]
+        return len(stale)
+
     # -- persistence -------------------------------------------------------
     def to_json(self) -> Dict:
         return {
@@ -262,6 +316,9 @@ class ContainerLifecycle:
                          for v in self.versions.values()],
             "max_gen": self.max_gen,
             "edges": {src: sorted(dsts) for src, dsts in self.edges.items() if dsts},
+            # v4: deletion markers ride the lifecycle blob (absent pre-v4 —
+            # from_json defaults them empty, so older indexes load unchanged)
+            "tombstones": {k: [g, ts] for k, (g, ts) in self.tombstones.items()},
             "reclaimed_bytes": self.reclaimed_bytes,
             "n_collected": self.n_collected,
             "n_gc_runs": self.n_gc_runs,
@@ -278,6 +335,8 @@ class ContainerLifecycle:
         for key, gen in d.get("max_gen", {}).items():
             lc.max_gen[key] = max(int(gen), lc.max_gen.get(key, -1))
         lc.edges = {src: set(dsts) for src, dsts in d.get("edges", {}).items()}
+        lc.tombstones = {k: (int(g), float(ts))
+                         for k, (g, ts) in d.get("tombstones", {}).items()}
         lc.reclaimed_bytes = int(d.get("reclaimed_bytes", 0))
         lc.n_collected = int(d.get("n_collected", 0))
         lc.n_gc_runs = int(d.get("n_gc_runs", 0))

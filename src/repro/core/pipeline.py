@@ -172,8 +172,11 @@ def _entropy_compress(level: int, threads: int, blobs: List[bytes]) -> List[byte
 # v1 = PR-1 (no generations); v2 adds lifecycle + pinned gens; v3 adds the
 # incremental-GC cursor + compaction state (compact-pool versions travel in
 # the v2 lifecycle section unchanged — v3 is structurally v2 plus optional
-# keys, and v2/v1 indexes load with the new fields defaulted)
-INDEX_FORMAT = 3
+# keys, and v2/v1 indexes load with the new fields defaulted); v4 adds
+# delete tombstones inside the lifecycle blob (replica anti-entropy needs
+# "deleted" to be distinguishable from "never seen" — again optional keys,
+# so v1-v3 indexes load with tombstones defaulted empty)
+INDEX_FORMAT = 4
 
 # Synthetic container key owned by compact(): rewritten survivor records
 # land in ``containers/.compact/pool@gN.bitx`` versions. The leading dot
@@ -191,6 +194,41 @@ COMPACT_FAULT_POINTS = ("compact.begin", "writer.before_write",
                         "compact.after_unlink")
 GC_FAULT_POINTS = ("gc.step.begin", "gc.step.after_commit",
                    "gc.step.after_index", "gc.step.after_unlink")
+
+# Tombstones older than this are pruned by gc(): by then anti-entropy has
+# converged every replica many times over, and an eternal marker would make
+# the index grow monotonically with delete churn.
+TOMBSTONE_TTL_S = 30 * 24 * 3600.0
+
+
+@dataclass
+class AutoCompactPolicy:
+    """When should gc() chain into compact() on its own?
+
+    Two independent triggers, evaluated after every completed gc sweep (the
+    watermark math itself is :meth:`should_compact`, a pure function so the
+    thresholds are unit-testable without building a store):
+
+    * a superseded-bytes watermark: compact once pinned-but-superseded
+      generations hold at least ``min_superseded_bytes`` AND at least
+      ``superseded_ratio`` of the store's live bytes — small stores don't
+      churn containers for kilobytes, big stores don't wait forever;
+    * a sweep counter: ``every_n_gc`` completed gc runs since the last
+      compaction (None disables), a coarse backstop for workloads whose
+      superseded bytes grow too slowly to cross the watermark.
+    """
+
+    min_superseded_bytes: int = 64 << 20
+    superseded_ratio: float = 0.25
+    every_n_gc: Optional[int] = None
+
+    def should_compact(self, superseded_bytes: int, live_bytes: int,
+                       gc_since_compact: int) -> bool:
+        if self.every_n_gc is not None and gc_since_compact >= self.every_n_gc:
+            return True
+        if superseded_bytes < self.min_superseded_bytes:
+            return False
+        return superseded_bytes >= self.superseded_ratio * max(live_bytes, 1)
 
 _FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
 
@@ -231,7 +269,7 @@ class IngestJob:
     their per-file results (or the error) for ``/admin/jobs``."""
 
     job_id: str
-    kind: str                    # "files" (ingest_many specs) | "repo" (dirs)
+    kind: str    # "files" (ingest_many specs) | "repo" (dirs) | "repair" (thunk)
     specs: List[Tuple]
     cleanup: bool = False        # delete spooled source files when finished
     state: str = "queued"
@@ -269,6 +307,9 @@ class StoreStats:
     compaction_reclaimed_bytes: int = 0
     compact_runs: int = 0
     gc_max_pause_ms: float = 0.0
+    # compactions fired by an AutoCompactPolicy watermark (subset of
+    # compact_runs): the soak asserts the trigger actually fires
+    auto_compact_runs: int = 0
 
     @property
     def reduction_ratio(self) -> float:
@@ -521,7 +562,8 @@ class ZLLMStore:
                  use_tensor_dedup: bool = True, workers: int = 0,
                  zstd_threads: int = 0, tensor_cache_bytes: int = 256 << 20,
                  reader_cache_size: int = 16, pipeline_depth: int = 2,
-                 entropy_procs: int = 0):
+                 entropy_procs: int = 0,
+                 auto_compact: Optional[AutoCompactPolicy] = None):
         self.root = root
         os.makedirs(os.path.join(root, "containers"), exist_ok=True)
         self.zstd_level = zstd_level
@@ -587,6 +629,15 @@ class ZLLMStore:
         # incremental GC: resumable sweep cursor (last retired vid; persisted
         # in the v3 index so a restarted store continues where it left off)
         self._gc_cursor = ""
+        # automatic compaction: None keeps compact() admin-only (the
+        # pre-existing behavior); a policy makes every completed gc sweep
+        # evaluate the superseded-bytes watermark and chain into compact()
+        self.auto_compact = auto_compact
+        self._gc_since_compact = 0
+        # residual superseded bytes a converged compact() could not
+        # reclaim (bitx bases, cost-gated moves): the watermark measures
+        # GROWTH above this floor, or it would re-fire every sweep
+        self._compact_floor = 0
         # spooled-ingest job queue (the server's remote write path): one
         # background worker drains jobs serially — ingest is single-caller
         # by contract, and every job takes the admin lock anyway, so a
@@ -1083,10 +1134,18 @@ class ZLLMStore:
             old_hash = old.get("file_hash")
             if old_hash and old_hash != rec.get("file_hash"):
                 self._release_file_hash(key, old_hash)
+        # write stamp: delete-vs-rewrite conflicts on ref-kind records (no
+        # monotonic generation to compare) resolve last-writer-wins against
+        # the tombstone's timestamp during anti-entropy
+        rec.setdefault("mtime", time.time())
         self.file_index[key] = rec
         new_hash = rec.get("file_hash")
         if new_hash:
             self._keys_by_file_hash.setdefault(new_hash, set()).add(key)
+        # a re-upload supersedes any delete marker: container records carry
+        # a generation above the tombstone's (generations are monotonic);
+        # ref-kind records are new live state for the key either way
+        self.lifecycle.clear_tombstone(key)
         self._gate.bump()  # new view: serving caches keyed by read_gen roll over
 
     def _release_file_hash(self, key: str, fhash: str) -> None:
@@ -1503,6 +1562,17 @@ class ZLLMStore:
             job_id=f"j{next(self._job_seq)}", kind="repo",
             specs=[(repo_dir, repo_id)], cleanup=cleanup))
 
+    def enqueue_repair(self, thunk: Callable[[], Dict], note: str = "") -> str:
+        """Queue an asynchronous repair action (straggler re-replication,
+        anti-entropy catch-up) on the existing ingest job worker: repairs
+        serialize with remote writes on the same thread, inherit the
+        ``/admin/jobs`` bookkeeping, and persist the index on completion
+        exactly like a spooled upload. ``thunk`` runs on the worker and its
+        returned dict becomes the job's single result row."""
+        return self._enqueue_job(IngestJob(
+            job_id=f"j{next(self._job_seq)}", kind="repair",
+            specs=[(thunk, note)]))
+
     def _enqueue_job(self, job: IngestJob) -> str:
         with self._job_cv:
             self._jobs[job.job_id] = job
@@ -1531,6 +1601,18 @@ class ZLLMStore:
                 job.state = "running"
                 job.started_at = time.time()
             try:
+                if job.kind == "repair":
+                    thunk, note = job.specs[0]
+                    out = thunk() or {}
+                    out.setdefault("note", note)
+                    with self._admin_lock:
+                        self.save_index()
+                    with self._job_cv:
+                        job.results = [out]
+                        job.state = "done"
+                        job.finished_at = time.time()
+                        self._job_cv.notify_all()
+                    continue
                 if job.kind == "repo":
                     results = self.ingest_repos(job.specs)
                 else:
@@ -1969,6 +2051,12 @@ class ZLLMStore:
         if fhash:
             self._release_file_hash(key, fhash)
         self._unbind_base(key, repo_id)
+        # tombstone: the delete covered every generation up to the highest
+        # this store has ever minted for the key (monotonic, never reused),
+        # so a replica holding gen <= that must drop it during anti-entropy
+        # while a genuine re-upload (gen above it) clears the marker
+        self.lifecycle.record_tombstone(
+            key, self.lifecycle.max_gen.get(key, rec.get("gen", 0)), time.time())
         self.stats.n_deleted += 1
         self._gate.bump()
         return True
@@ -1988,6 +2076,180 @@ class ZLLMStore:
         self.metadata_base.pop(repo_id, None)
         self.families.unregister(repo_id)
         return n
+
+    # ------------------------------------------------------------------
+    # Replication substrate (mechanism only — the replica-group policy
+    # lives in repro.serve.router.StoreRouter): verbatim container
+    # adoption, remote tombstone application, quarantine-restore.
+    # ------------------------------------------------------------------
+    def container_digest(self, key: str, gen: int,
+                         allow_quarantined: bool = False) -> str:
+        """sha256 of a container version's on-disk bytes — the identity
+        anti-entropy verifies before and after shipping (replicas must stay
+        bit-identical, not just semantically equal)."""
+        v = self.lifecycle.get(key, gen)
+        if v is None:
+            raise KeyError(f"container version {make_vid(key, gen)} is unknown")
+        if v.quarantined and not allow_quarantined:
+            raise RuntimeError(f"container version {v.vid} is quarantined")
+        digest, _ = sha256_file(v.path)
+        return digest
+
+    def adopt_container(self, key: str, gen: int, src_path: str,
+                        expected_sha256: Optional[str] = None) -> bool:
+        """Copy a replica's container version into this store *verbatim*
+        (temp-suffix + atomic rename, sha256-verified against the donor's
+        digest) and register it: version graph node, payload pins for
+        hashes this store doesn't already resolve, and dependency edges
+        rebuilt from the container header — the same scan the v1-index
+        upgrade performs. Does NOT touch ``file_index``; pair with
+        :meth:`adopt_index_record` for the anchor key. Returns False when
+        the version already exists locally (adoption is idempotent)."""
+        with self._admin_lock:
+            if self.lifecycle.get(key, gen) is not None:
+                return False
+            dst = self._container_path(key, gen)
+            os.makedirs(os.path.dirname(dst), exist_ok=True)
+            tmp = dst + TMP_SUFFIX
+            with open(src_path, "rb") as fin, open(tmp, "wb") as fout:
+                while True:
+                    chunk = fin.read(1 << 20)
+                    if not chunk:
+                        break
+                    fout.write(chunk)
+                fout.flush()
+                os.fsync(fout.fileno())
+            digest, nbytes = sha256_file(tmp)
+            if expected_sha256 and digest != expected_sha256:
+                os.remove(tmp)
+                raise ValueError(
+                    f"adopted container {make_vid(key, gen)} failed sha256 "
+                    f"verification ({digest[:12]} != {expected_sha256[:12]})")
+            os.replace(tmp, dst)
+            with self._gate.write():
+                self.lifecycle.register_version(key, gen, dst, nbytes)
+                vid = make_vid(key, gen)
+                with self._reader_ctx(dst) as reader:
+                    for i, r in enumerate(reader.records):
+                        if r.codec != "dedup" and r.self_hash:
+                            self.tensor_locations.setdefault(
+                                r.self_hash, (key, gen, i))
+                    for r in reader.records:
+                        h = (r.self_hash if r.codec == "dedup"
+                             else r.base_hash if r.codec == "bitx" else "")
+                        loc = self.tensor_locations.get(h) if h else None
+                        if loc is not None:
+                            self.lifecycle.add_edge(vid, make_vid(loc[0], loc[1]))
+                self.stats.live_bytes = self.lifecycle.live_bytes()
+            return True
+
+    def adopt_index_record(self, key: str, rec: Dict) -> None:
+        """Publish a replica's ``file_index`` record for ``key`` locally.
+        Container records are re-pathed to this store's copy of the pinned
+        generation (which must have been adopted first); ref records
+        require their pinned target generation to be live. Registers the
+        whole-file hash so future identical uploads dedup here exactly as
+        they would on the donor — replicas must keep making the same
+        decisions or their containers drift apart."""
+        with self._admin_lock:
+            rec = dict(rec)
+            if rec.get("kind") == "container":
+                rec["path"] = self.lifecycle.version_path(key, int(rec["gen"]))
+                rec.pop("quarantined", None)
+            elif "ref" in rec and not self.lifecycle.exists(
+                    rec["ref"], int(rec.get("ref_gen", 0))):
+                raise KeyError(
+                    f"ref target {make_vid(rec['ref'], rec.get('ref_gen', 0))} "
+                    f"not live — ship its closure before the record")
+            self._set_index_entry(key, rec)
+            fh = rec.get("file_hash")
+            if fh:
+                self.file_hash_to_key.setdefault(fh, key)
+                self.file_dedup.index.setdefault(fh, key)
+
+    def apply_tombstone(self, key: str, gen: int, ts: float) -> bool:
+        """Apply a replica's delete marker: drop the local record unless it
+        carries a generation ABOVE the tombstone's (a re-upload that
+        legitimately supersedes the delete — generations are monotonic per
+        key, so the comparison is unambiguous). Returns True when a local
+        record was deleted."""
+        with self._admin_lock:
+            rec = self.file_index.get(key)
+            if rec is not None:
+                if rec.get("kind") == "container":
+                    if rec.get("gen", 0) > gen:
+                        return False  # local record supersedes the marker
+                elif rec.get("mtime", 0.0) > ts:
+                    return False  # ref re-written after the delete was issued
+            self.lifecycle.record_tombstone(key, gen, ts)
+            if rec is None:
+                return False
+            repo_id, _, filename = key.rpartition("/")
+            deleted = self._delete_file_locked(repo_id, filename)
+            # _delete_file_locked stamped a local-max-gen marker; re-merge
+            # the incoming one so replicas agree on the covered generation
+            self.lifecycle.record_tombstone(key, gen, ts)
+            if not any(k.startswith(repo_id + "/") for k in self.file_index):
+                self.metadata_base.pop(repo_id, None)
+                self.families.unregister(repo_id)
+            return deleted
+
+    def restore_version(self, key: str, gen: int, staged_path: str,
+                        expected_sha256: Optional[str] = None) -> bool:
+        """Quarantine-restore: swap a healthy replica's verbatim container
+        bytes (already staged on this filesystem) back in for a quarantined
+        version, verify, and return the version to the live set — pins
+        re-established, index entry un-flagged, the parked corrupt copy
+        deleted. The inverse of fsck's quarantine. Returns False when the
+        version isn't quarantined (nothing to heal)."""
+        with self._admin_lock:
+            v = self.lifecycle.get(key, gen)
+            if v is None:
+                raise KeyError(f"container version {make_vid(key, gen)} is "
+                               f"unknown — adopt it instead of restoring")
+            if not v.quarantined:
+                return False
+            digest, nbytes = sha256_file(staged_path)
+            if expected_sha256 and digest != expected_sha256:
+                raise ValueError(
+                    f"restore of {make_vid(key, gen)} failed sha256 "
+                    f"verification ({digest[:12]} != {expected_sha256[:12]})")
+            qpath = v.path
+            dst = self._container_path(key, gen)
+            os.makedirs(os.path.dirname(dst), exist_ok=True)
+            os.replace(staged_path, dst)  # atomic swap-in
+            with self._gate.write():
+                with self._cache_lock:
+                    self._reader_cache.pop(qpath)
+                self.lifecycle.unquarantine(key, gen, dst)
+                self.lifecycle.set_nbytes(key, gen, nbytes)
+                rec = self.file_index.get(key)
+                if (rec is not None and rec.get("kind") == "container"
+                        and rec.get("gen", 0) == gen):
+                    rec.pop("quarantined", None)
+                    rec["path"] = dst
+                vid = make_vid(key, gen)
+                with self._reader_ctx(dst) as reader:
+                    # re-establish the pins quarantine scrubbed (only where
+                    # no surviving copy was re-pinned in their place)
+                    for i, r in enumerate(reader.records):
+                        if r.codec != "dedup" and r.self_hash:
+                            self.tensor_locations.setdefault(
+                                r.self_hash, (key, gen, i))
+                    for r in reader.records:
+                        h = (r.self_hash if r.codec == "dedup"
+                             else r.base_hash if r.codec == "bitx" else "")
+                        loc = self.tensor_locations.get(h) if h else None
+                        if loc is not None:
+                            self.lifecycle.add_edge(vid, make_vid(loc[0], loc[1]))
+                self.stats.live_bytes = self.lifecycle.live_bytes()
+            if qpath != dst:
+                try:
+                    os.remove(qpath)  # the parked corrupt copy is debris now
+                except OSError:
+                    pass
+            self.save_index()
+            return True
 
     def _fault(self, point: str) -> None:
         """Crash-injection boundary: the recovery harness installs
@@ -2034,6 +2296,7 @@ class ZLLMStore:
             with self._admin_lock:
                 with self._gate.write():
                     out, reclaimed = self._gc_locked()
+                self.lifecycle.prune_tombstones(time.time(), TOMBSTONE_TTL_S)
                 if persist is None or persist:
                     self.save_index()
                 # unlink AFTER the persist (crash window closed) and outside
@@ -2045,6 +2308,7 @@ class ZLLMStore:
                         os.remove(v.path)
                     except OSError:
                         pass
+            self._maybe_auto_compact()
             return out
         agg = {"collected": 0, "reclaimed_bytes": 0, "dropped_tensor_refs": 0,
                "steps": 0, "max_pause_ms": 0.0}
@@ -2059,7 +2323,28 @@ class ZLLMStore:
             if step["done"]:
                 break
         agg["live_bytes"] = self.stats.live_bytes
+        self._maybe_auto_compact()
         return agg
+
+    def _maybe_auto_compact(self) -> Optional[Dict]:
+        """Evaluate the auto-compaction watermark after a completed gc
+        sweep; chain into :meth:`compact` when it trips. A no-op unless the
+        store was built with an :class:`AutoCompactPolicy` — compact()
+        stays admin-only by default, so crash-injection tests that kill gc
+        mid-sweep see exactly the pre-existing fault surface."""
+        self._gc_since_compact += 1
+        pol = self.auto_compact
+        if pol is None:
+            return None
+        with self._admin_lock:
+            superseded = max(
+                0, self._compactable_superseded_bytes() - self._compact_floor)
+            live = self.lifecycle.live_bytes()
+            if not pol.should_compact(superseded, live, self._gc_since_compact):
+                return None
+            rep = self.compact()
+        self.stats.auto_compact_runs += 1
+        return rep
 
     def gc_step(self, max_pause_ms: float = 50.0,
                 persist: bool = True) -> Dict:
@@ -2210,7 +2495,10 @@ class ZLLMStore:
         throughout except for step 5's bounded hold.
         """
         with self._admin_lock:
-            return self._compact_locked(persist)
+            rep = self._compact_locked(persist)
+            self._gc_since_compact = 0  # the every-N-sweeps backstop restarts
+            self._compact_floor = self._compactable_superseded_bytes()
+            return rep
 
     def _compact_locked(self, persist: bool) -> Dict:
         self._fault("compact.begin")
@@ -2500,7 +2788,19 @@ class ZLLMStore:
         Takes the admin lock (mutual exclusion with ingest/delete/gc).
         """
         with self._admin_lock:
-            return self._fsck_locked(repair, spot_check)
+            report = self._fsck_locked(repair, spot_check)
+            # repaired/quarantined only — NOT bare orphan sightings: fsck on
+            # a store whose index was never loaded refuses the orphan wipe,
+            # and persisting that empty in-memory index would BE the wipe
+            if repair and (report.repaired or report.quarantined):
+                # Persist what repair changed. Quarantine in particular
+                # moves the container file and scrubs its tensor pins IN
+                # MEMORY — without this, a restarted (or routed) store
+                # reloads the pre-repair index whose pins still reference
+                # the quarantined generation at its vanished path, and the
+                # stale state only heals at the next gc's persist.
+                self.save_index()
+            return report
 
     def _fsck_locked(self, repair: bool, spot_check: Optional[int]) -> FsckReport:
         report = FsckReport()
@@ -2734,6 +3034,17 @@ class ZLLMStore:
         return sum(v.nbytes for v in list(self.lifecycle.versions.values())
                    if not v.quarantined and v.vid not in anchored)
 
+    def _compactable_superseded_bytes(self) -> int:
+        """:meth:`_superseded_bytes` minus compact-pool containers: the
+        pool is reachable only through pins (never index-anchored), so it
+        always *counts* as superseded — but compact cannot shrink it
+        further. The auto-compact watermark must measure what a compaction
+        could actually reclaim, or it would re-fire on every sweep."""
+        anchored = set(self._anchor_vids())
+        return sum(v.nbytes for v in list(self.lifecycle.versions.values())
+                   if not v.quarantined and v.vid not in anchored
+                   and v.key != COMPACT_KEY)
+
     # ------------------------------------------------------------------
     # Index persistence: the store survives process restarts (ingest state,
     # tensor pool, family registry, base maps) — a new process can keep
@@ -2881,8 +3192,12 @@ class ZLLMStore:
                 "gc_runs": self.lifecycle.n_gc_runs,
                 "deleted_files": self.stats.n_deleted,
                 "compact_runs": self.stats.compact_runs,
+                "auto_compact_runs": self.stats.auto_compact_runs,
                 "compaction_reclaimed_bytes": self.stats.compaction_reclaimed_bytes,
                 "gc_max_pause_ms": round(self.stats.gc_max_pause_ms, 3),
+                "tombstones": len(self.lifecycle.tombstones),
+                "quarantined": sum(1 for v in self.lifecycle.versions.values()
+                                   if v.quarantined),
             },
             "tensor_dedup": {
                 "unique_hashes": self.tensor_dedup.stats.n_unique,

@@ -22,6 +22,22 @@ Stats keep the **flat single-root shape** when there is one root (the
 cross-root aggregates under N roots. Admin operations (gc / compact /
 fsck) fan out to every root, or to one root via its name.
 
+**Replication** (``replicas=N``): the rendezvous hash's *ordered* candidate
+list is the replica group — the top-N scoring roots hold copies of every
+repo. Writes fan out to the whole group and acknowledge at a configurable
+write quorum (W of N, retry + exponential backoff per root, asynchronous
+repair of stragglers on the store's job worker); reads fail over down the
+candidate list behind a health tracker (a failing root turns *suspect* and
+is probed again after an exponentially growing backoff); an
+**anti-entropy sweep** diffs the per-root ``(key, gen)`` indexes within
+each group, applies delete tombstones, restores quarantined containers
+from healthy same-generation copies (sha256-verified, swapped back in) and
+re-ships missing generations with container bytes copied **verbatim** —
+replica containers stay bit-identical. One caveat is inherent: per-root
+``.compact/pool`` containers are local artifacts (roots compact
+independently), so a quarantined pool version has no same-bytes donor;
+anchored containers — everything a client can address — always do.
+
 The router owns no asyncio state — it is shared safely between the event
 loop and worker threads; per-root ``RetrievalEngine`` construction stays in
 the server (engines are loop-confined).
@@ -30,12 +46,43 @@ the server (engines are loop-confined).
 from __future__ import annotations
 
 import hashlib
+import os
+import threading
+import time
 from collections import OrderedDict
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
+from repro.core.lifecycle import make_vid
 from repro.core.pipeline import ZLLMStore
 
-__all__ = ["StoreRouter"]
+__all__ = ["StoreRouter", "RootDownError", "QuorumError",
+           "REPLICATION_FAULT_POINTS"]
+
+# Fault points the replication crash harness (tests/test_replication.py)
+# may kill the router at, via ``router.fault_hook`` — same contract as the
+# store's COMPACT/GC fault points: no cleanup runs when the hook raises.
+REPLICATION_FAULT_POINTS = ("put.mid_fanout", "put.post_quorum",
+                            "anti_entropy.mid_copy", "restore.mid_copy")
+
+
+class RootDownError(ConnectionError):
+    """A replica root is down (health tracker) — writes/reads must not be
+    attempted against it."""
+
+
+class QuorumError(ConnectionError):
+    """Fewer than ``write_quorum`` replicas accepted a write."""
+
+
+class _RootHealth:
+    """Per-root health record (guarded by the router's health lock)."""
+
+    __slots__ = ("down", "fails", "suspect_until")
+
+    def __init__(self):
+        self.down = False           # manual/chaos switch: hard-unreachable
+        self.fails = 0              # consecutive organic failures
+        self.suspect_until = 0.0    # monotonic deadline of the probe backoff
 
 # store.summary() keys that aggregate by plain summation across roots
 _SUM_KEYS = ("n_files", "raw_bytes", "stored_bytes", "file_dedup_hits",
@@ -54,10 +101,24 @@ class StoreRouter:
     (auto-named ``r0``, ``r1``, ...). A single-store router is the identity
     — the server wraps every deployment in one so the two topologies share
     a code path.
+
+    ``replicas`` is the copy count per repo (clamped to the root count);
+    ``write_quorum`` the acks required before a fan-out write succeeds
+    (default: a majority of the replicas).
     """
 
+    # write-path retry policy: a transient root failure gets RETRY_ATTEMPTS
+    # tries with exponential backoff; once the health tracker marks the root
+    # suspect, later writes fail fast (one try) until the probe deadline
+    RETRY_ATTEMPTS = 3
+    RETRY_BASE_S = 0.05
+    # suspect backoff: BACKOFF_BASE_S * 2^(fails-1), capped
+    BACKOFF_BASE_S = 0.5
+    BACKOFF_MAX_S = 30.0
+
     def __init__(self, stores: Union[Dict[str, ZLLMStore],
-                                     Sequence[ZLLMStore], ZLLMStore]):
+                                     Sequence[ZLLMStore], ZLLMStore],
+                 *, replicas: int = 1, write_quorum: Optional[int] = None):
         if isinstance(stores, ZLLMStore):
             stores = [stores]
         if not isinstance(stores, dict):
@@ -65,13 +126,86 @@ class StoreRouter:
         if not stores:
             raise ValueError("StoreRouter needs at least one store")
         self.roots: "OrderedDict[str, ZLLMStore]" = OrderedDict(stores)
+        self.replicas = max(1, min(int(replicas), len(self.roots)))
+        if write_quorum is None:
+            write_quorum = self.replicas // 2 + 1  # majority
+        if not 1 <= write_quorum <= self.replicas:
+            raise ValueError(f"write_quorum={write_quorum} out of range "
+                             f"1..{self.replicas}")
+        self.write_quorum = int(write_quorum)
         # repo -> root decisions for writes whose ingest job has not
         # registered in file_index yet: a second PUT for the same new repo
-        # arriving inside that window must land on the SAME root, or the
+        # arriving inside that window must land on the SAME root(s), or the
         # repo splits across roots (severing its dedup/BitX chain).
         # Bounded; stale entries are harmless — membership wins once the
-        # ingest lands, and a pending entry names that same root anyway.
-        self._pending_places: "OrderedDict[str, str]" = OrderedDict()
+        # ingest lands, and a pending entry names those same roots anyway.
+        self._pending_places: "OrderedDict[str, Tuple[str, ...]]" = OrderedDict()
+        # health tracker + repos owed a repair pass (straggler writes,
+        # failed deletes); anti_entropy() drains the pending set
+        self._health: Dict[str, _RootHealth] = {n: _RootHealth()
+                                                for n in self.roots}
+        self._health_lock = threading.Lock()
+        self._ae_lock = threading.Lock()  # one anti-entropy sweep at a time
+        self._repair_pending: Set[str] = set()
+        # crash-injection hook (REPLICATION_FAULT_POINTS), mirroring
+        # store.fault_hook; never set in production
+        self.fault_hook = None
+
+    def _fault(self, point: str) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(point)
+
+    # -- health tracking --------------------------------------------------
+    def set_root_down(self, name: str, down: bool = True) -> None:
+        """Chaos/admin switch: a down root is hard-unreachable — reads skip
+        it, writes fail against it (after the retry dance) and anti-entropy
+        neither ships to nor from it until it is brought back up."""
+        with self._health_lock:
+            h = self._health[name]
+            h.down = down
+            if not down:
+                h.fails = 0
+                h.suspect_until = 0.0
+
+    def is_up(self, name: str) -> bool:
+        with self._health_lock:
+            return not self._health[name].down
+
+    def note_failure(self, name: str) -> None:
+        """Organic failure (exception serving from the root): mark it
+        suspect with an exponentially growing probe backoff."""
+        with self._health_lock:
+            h = self._health[name]
+            h.fails += 1
+            backoff = min(self.BACKOFF_BASE_S * (2 ** (h.fails - 1)),
+                          self.BACKOFF_MAX_S)
+            h.suspect_until = time.monotonic() + backoff
+
+    def note_success(self, name: str) -> None:
+        with self._health_lock:
+            h = self._health[name]
+            h.fails = 0
+            h.suspect_until = 0.0
+
+    def _probe_ok(self, name: str) -> bool:
+        """True when the root may be tried: up, and either healthy or past
+        its suspect backoff (the next request doubles as the probe — on
+        success ``note_success`` clears the suspicion, on failure
+        ``note_failure`` re-suspends it with a longer backoff)."""
+        with self._health_lock:
+            h = self._health[name]
+            return not h.down and time.monotonic() >= h.suspect_until
+
+    def health(self) -> Dict[str, Dict]:
+        """Per-root health snapshot (the ``/healthz`` + ``/stats`` field)."""
+        out = {}
+        with self._health_lock:
+            now = time.monotonic()
+            for name, h in self._health.items():
+                state = ("down" if h.down
+                         else "suspect" if now < h.suspect_until else "up")
+                out[name] = {"state": state, "consecutive_failures": h.fails}
+        return out
 
     # -- topology ---------------------------------------------------------
     def __len__(self) -> int:
@@ -116,7 +250,8 @@ class StoreRouter:
         for name, store in self.roots.items():
             if any(k.startswith(prefix) for k in list(store.file_index)):
                 return name
-        return self._pending_places.get(repo_id)
+        pend = self._pending_places.get(repo_id)
+        return pend[0] if pend else None
 
     def locate(self, repo_id: str, filename: str = "model.safetensors") -> str:
         """Root name *serving* ``repo_id/filename``: a root that already
@@ -149,10 +284,455 @@ class StoreRouter:
                     break
         if root is None:
             root = self.place(repo_id)
-        self._pending_places[repo_id] = root
+        self._remember_places(repo_id, (root,))
+        return root
+
+    def _remember_places(self, repo_id: str, roots: Tuple[str, ...]) -> None:
+        self._pending_places[repo_id] = roots
         while len(self._pending_places) > 1024:
             self._pending_places.popitem(last=False)
-        return root
+
+    # -- replica placement ------------------------------------------------
+    def candidates(self, repo_id: str) -> List[str]:
+        """Every root ordered by rendezvous score, best first — the natural
+        replica candidate list (``place()`` is its head)."""
+        return sorted(self.roots,
+                      key=lambda n: hashlib.sha256(
+                          f"{n}|{repo_id}".encode()).digest(),
+                      reverse=True)
+
+    def _holds_repo(self, name: str, repo_id: str) -> bool:
+        prefix = repo_id + "/"
+        return any(k.startswith(prefix)
+                   for k in list(self.roots[name].file_index))
+
+    def replica_roots(self, repo_id: str) -> List[str]:
+        """The repo's replica group, membership-aware: roots already
+        holding the repo come first (in candidate order — pre-seeded stores
+        and pre-resize placements keep serving), padded with the best hash
+        candidates up to ``replicas``. Never truncates an actual holder."""
+        cands = self.candidates(repo_id)
+        members = [n for n in cands if self._holds_repo(n, repo_id)]
+        group = members + [n for n in cands if n not in members]
+        return group[:max(self.replicas, len(members))]
+
+    def read_candidates(self, repo_id: str,
+                        filename: str = "model.safetensors") -> List[str]:
+        """Replica roots in failover order for a read: probe-eligible roots
+        first (healthy, or suspect past their backoff), then still-backed-off
+        suspects as a last resort; manually-down roots are excluded — an
+        empty list means every replica is down (the server answers 503)."""
+        group = self.replica_roots(repo_id)
+        up = [n for n in group if self.is_up(n)]
+        ready = [n for n in up if self._probe_ok(n)]
+        return ready + [n for n in up if n not in ready]
+
+    def write_roots(self, repo_id: str,
+                    filename: str = "model.safetensors",
+                    base: Optional[str] = None) -> List[str]:
+        """Fan-out targets for an incoming write: the replica group, with a
+        NEW repo that declares a BitX base co-locating with the base's
+        group (dedup/delta domains are per-root — a fine-tune replica on a
+        root without the base's containers would store standalone and the
+        replicas would diverge). Memoized like :meth:`locate_for_write`."""
+        pend = self._pending_places.get(repo_id)
+        if pend:
+            return list(pend)
+        cands = self.candidates(repo_id)
+        members = [n for n in cands if self._holds_repo(n, repo_id)]
+        if not members and base:
+            bgroup = [n for n in self.replica_roots(base)
+                      if self._holds_repo(n, base)
+                      or base in self.roots[n].base_paths]
+            if bgroup:
+                cands = bgroup + [n for n in cands if n not in bgroup]
+        order = members + [n for n in cands if n not in members]
+        targets = tuple(order[:max(self.replicas, len(members))])
+        self._remember_places(repo_id, targets)
+        return list(targets)
+
+    # -- replicated writes ------------------------------------------------
+    def replicated_enqueue(self, spool_path: str, repo_id: str,
+                           filename: str,
+                           base: Optional[str] = None) -> Dict:
+        """Fan a spooled upload out to the repo's replica group: the bytes
+        are staged into every target root's spool *first* (each root's
+        ingest job owns — and eventually deletes or adopts — its own copy),
+        then enqueued per root with retry + exponential backoff. Succeeds
+        once ``write_quorum`` roots accepted the job; stragglers that never
+        accepted get an asynchronous repair (a scoped anti-entropy pass on
+        the first healthy root's job worker) so they converge once back up.
+        Raises :class:`QuorumError` below quorum."""
+        targets = self.write_roots(repo_id, filename, base)
+        staged: Dict[str, str] = {}
+        for name in targets:
+            sdir = self.roots[name].spool_dir()
+            if os.path.dirname(os.path.abspath(spool_path)) == \
+                    os.path.abspath(sdir):
+                staged[name] = spool_path
+                continue
+            dst = os.path.join(sdir, f"fanout-{os.getpid()}-"
+                                     f"{os.path.basename(spool_path)}")
+            with open(spool_path, "rb") as fin, open(dst, "wb") as fout:
+                while True:
+                    chunk = fin.read(1 << 20)
+                    if not chunk:
+                        break
+                    fout.write(chunk)
+            staged[name] = dst
+        jobs: "OrderedDict[str, str]" = OrderedDict()
+        failed: List[str] = []
+        quorum_fired = False
+        for i, name in enumerate(targets):
+            if i == 1:
+                self._fault("put.mid_fanout")
+            if len(jobs) >= self.write_quorum and not quorum_fired:
+                quorum_fired = True
+                self._fault("put.post_quorum")
+            jid = self._enqueue_with_retry(name, staged[name], repo_id,
+                                           filename, base)
+            if jid is None:
+                failed.append(name)
+                try:  # the staged copy has no owner now
+                    os.remove(staged[name])
+                except OSError:
+                    pass
+            else:
+                jobs[name] = jid
+        if failed and jobs:
+            with self._health_lock:
+                self._repair_pending.add(repo_id)
+            healthy = next(iter(jobs))
+            self.roots[healthy].enqueue_repair(
+                lambda rid=repo_id: self.anti_entropy(repos=[rid]),
+                note=f"straggler repair: {repo_id} missed "
+                     f"{','.join(failed)}")
+        if len(jobs) < self.write_quorum:
+            raise QuorumError(
+                f"write quorum not met for {repo_id}/{filename}: "
+                f"{len(jobs)}/{self.write_quorum} of {len(targets)} replicas "
+                f"accepted (failed: {', '.join(failed) or 'none'})")
+        return {"jobs": dict(jobs), "targets": targets, "failed": failed,
+                "quorum": self.write_quorum}
+
+    def _enqueue_with_retry(self, name: str, path: str, repo_id: str,
+                            filename: str,
+                            base: Optional[str]) -> Optional[str]:
+        """Enqueue one replica's ingest job. A root the health tracker
+        already distrusts gets a single fast-fail attempt; otherwise the
+        full retry + exponential backoff dance (a transiently down root
+        that recovers mid-retry still takes the write)."""
+        attempts = self.RETRY_ATTEMPTS if self._probe_ok(name) else 1
+        store = self.roots[name]
+        for i in range(attempts):
+            try:
+                if not self.is_up(name):
+                    raise RootDownError(f"root {name} is down")
+                jid = store.enqueue_ingest(
+                    [(path, repo_id, filename, base)], cleanup=True)
+            except Exception:
+                if i + 1 < attempts:
+                    time.sleep(self.RETRY_BASE_S * (2 ** i))
+                continue
+            self.note_success(name)
+            return jid
+        self.note_failure(name)
+        return None
+
+    def await_quorum(self, jobs: Dict[str, str],
+                     timeout: float = 600.0) -> Tuple[bool, Dict[str, Dict]]:
+        """Block until ``write_quorum`` of the given per-root jobs reached
+        ``done`` (True) or enough failed/timed out that the quorum is
+        unreachable (False). Returns the final per-root job status dicts."""
+        need = min(self.write_quorum, len(jobs))
+        deadline = time.monotonic() + timeout
+        while True:
+            states = {n: self.roots[n].ingest_job(j) for n, j in jobs.items()}
+            done = sum(1 for s in states.values()
+                       if s is not None and s["state"] == "done")
+            dead = sum(1 for s in states.values()
+                       if s is None or s["state"] == "failed")
+            if done >= need:
+                return True, states
+            if len(jobs) - dead < need or time.monotonic() > deadline:
+                return False, states
+            time.sleep(0.02)
+
+    # -- replicated delete ------------------------------------------------
+    def delete(self, repo_id: str, filename: Optional[str] = None) -> Dict:
+        """Delete a file (or a whole repo) on every replica in the group,
+        persisting each root's index so the tombstones survive a restart.
+        Idempotent — deleting what isn't there reports 0. Down roots are
+        skipped and the repo is queued for anti-entropy (the tombstones on
+        the surviving replicas propagate once the root returns)."""
+        group = self.replica_roots(repo_id)
+        counts: Dict[str, int] = {}
+        failed: List[str] = []
+        for name in group:
+            if not self.is_up(name):
+                failed.append(name)
+                continue
+            store = self.roots[name]
+            try:
+                if filename is not None:
+                    n = int(store.delete_file(repo_id, filename))
+                else:
+                    n = store.delete_repo(repo_id)
+                store.save_index()  # tombstone durability
+                counts[name] = n
+                self.note_success(name)
+            except Exception:
+                self.note_failure(name)
+                failed.append(name)
+        if failed:
+            with self._health_lock:
+                self._repair_pending.add(repo_id)
+        return {"deleted": max(counts.values(), default=0),
+                "roots": counts, "failed": failed}
+
+    # -- anti-entropy -----------------------------------------------------
+    def _all_repos(self) -> Set[str]:
+        repos: Set[str] = set()
+        for store in self.roots.values():
+            for k in list(store.file_index):
+                repos.add(k.rsplit("/", 1)[0])
+            for k in list(store.lifecycle.tombstones):
+                repos.add(k.rsplit("/", 1)[0])
+        return repos
+
+    def anti_entropy(self, repos: Optional[Sequence[str]] = None,
+                     ) -> Dict:
+        """One repair sweep over every replica group (or just ``repos``):
+
+        1. **Tombstones** — delete markers are unioned across the group and
+           applied everywhere, so no replica resurrects a deleted repo (a
+           record whose generation exceeds the marker's survives: that is a
+           legitimate re-upload, generations being monotonic per key).
+        2. **Quarantine-restore** — a quarantined container with a healthy
+           same-``(key, gen)`` copy on another replica is re-fetched,
+           sha256-verified and swapped back in.
+        3. **Re-ship** — per key, the best record (highest container
+           generation) wins; replicas missing it receive the pinned
+           generation's full dependency closure as verbatim container
+           bytes, then the index record itself.
+
+        Touched roots persist their index and take a light structural
+        ``fsck`` at the end. Sweeps serialize on a router-level lock."""
+        with self._ae_lock:
+            report = {"repos": 0, "tombstones_applied": 0, "restored": 0,
+                      "shipped_versions": 0, "shipped_bytes": 0,
+                      "records_updated": 0, "skipped_roots": [],
+                      "errors": []}
+            with self._health_lock:
+                pending = set(self._repair_pending)
+            todo = sorted(set(repos) if repos is not None
+                          else self._all_repos() | pending)
+            for repo in todo:
+                try:
+                    self._anti_entropy_repo(repo, report)
+                except Exception as e:  # keep sweeping other groups
+                    report["errors"].append(f"{repo}: {type(e).__name__}: {e}")
+                report["repos"] += 1
+            with self._health_lock:
+                self._repair_pending -= set(todo)
+            touched = report.pop("_touched", set())
+            for name in touched:
+                store = self.roots[name]
+                store.save_index()
+                rep = store.fsck(repair=True, spot_check=0)
+                if not rep.ok:
+                    report["errors"].append(
+                        f"post-repair fsck on {name}: "
+                        f"{rep.summary()}")
+            report["touched_roots"] = sorted(touched)
+            return report
+
+    def _anti_entropy_repo(self, repo_id: str, report: Dict) -> None:
+        group = self.replica_roots(repo_id)
+        up = [n for n in group if self.is_up(n)]
+        skipped = [n for n in group if n not in up]
+        for n in skipped:
+            if n not in report["skipped_roots"]:
+                report["skipped_roots"].append(n)
+        if not up:
+            return
+        touched: Set[str] = report.setdefault("_touched", set())
+        prefix = repo_id + "/"
+
+        # 1. union + apply tombstones
+        tombs: Dict[str, Tuple[int, float]] = {}
+        for n in up:
+            for k, (g, ts) in list(
+                    self.roots[n].lifecycle.tombstones.items()):
+                if not k.startswith(prefix):
+                    continue
+                old = tombs.get(k)
+                if old is None or g > old[0]:
+                    tombs[k] = (g, ts)
+        for k, (g, ts) in tombs.items():
+            for n in up:
+                if self.roots[n].apply_tombstone(k, g, ts):
+                    report["tombstones_applied"] += 1
+                    touched.add(n)
+
+        # 2. quarantine-restore from healthy same-generation copies
+        for n in up:
+            store = self.roots[n]
+            for v in [v for v in list(store.lifecycle.versions.values())
+                      if v.quarantined and v.key.startswith(prefix)]:
+                for donor in up:
+                    if donor == n:
+                        continue
+                    dstore = self.roots[donor]
+                    if not dstore.lifecycle.exists(v.key, v.gen):
+                        continue
+                    digest = dstore.container_digest(v.key, v.gen)
+                    src_path = dstore.lifecycle.version_path(v.key, v.gen)
+                    staged = os.path.join(
+                        store.spool_dir(),
+                        f"restore-{v.vid.replace('/', '__')}")
+                    with open(src_path, "rb") as fin, \
+                            open(staged, "wb") as fout:
+                        while True:
+                            chunk = fin.read(1 << 20)
+                            if not chunk:
+                                break
+                            fout.write(chunk)
+                    self._fault("restore.mid_copy")
+                    if store.restore_version(v.key, v.gen, staged,
+                                             expected_sha256=digest):
+                        report["restored"] += 1
+                        touched.add(n)
+                    break
+
+        # 3. diff per-key states, ship the winner's closure verbatim
+        keys: Set[str] = set()
+        for n in up:
+            keys.update(k for k in list(self.roots[n].file_index)
+                        if k.startswith(prefix))
+        for key in sorted(keys):
+            states = {n: self._key_state(n, key) for n in up}
+            live = {n: s for n, s in states.items() if s[0] != "gone"}
+            if not live or len(set(live.values())) == 1 and len(live) == len(up):
+                continue
+            src = max(live, key=lambda n: (live[n][0] == "container",
+                                           live[n][1:]))
+            src_rec = self.roots[src].file_index.get(key)
+            if src_rec is None:
+                continue
+            for tgt in up:
+                if tgt == src or states.get(tgt) == states[src]:
+                    continue
+                if states[tgt][0] == "gone" and self._tombstone_wins(
+                        self.roots[tgt], key, src_rec):
+                    continue  # deletion wins over the source's record
+                try:
+                    self._ship_key(src, tgt, key, src_rec, report)
+                    touched.add(tgt)
+                except Exception as e:
+                    report["errors"].append(
+                        f"ship {key} {src}->{tgt}: {type(e).__name__}: {e}")
+
+    @staticmethod
+    def _tombstone_wins(store: ZLLMStore, key: str, src_rec: Dict) -> bool:
+        """Does ``store``'s delete marker for ``key`` cover the source
+        replica's record? Containers compare monotonic generations; ref
+        records (no generation of their own) resolve last-writer-wins on
+        the record's write stamp — mirrors ``apply_tombstone``."""
+        tomb = store.lifecycle.tombstone_for(key)
+        if tomb is None:
+            return False
+        gen, ts = tomb
+        if src_rec.get("kind") == "container":
+            return int(src_rec.get("gen", 0)) <= gen
+        return float(src_rec.get("mtime", 0.0)) <= ts
+
+    def _key_state(self, name: str, key: str) -> Tuple:
+        """Comparable per-root state of one index key: what generation (or
+        pinned ref) the root serves, or ``gone`` (deleted / never seen —
+        indistinguishable on purpose: neither serves bytes)."""
+        rec = self.roots[name].file_index.get(key)
+        if rec is None:
+            return ("gone",)
+        if rec.get("kind") == "container":
+            return ("container", int(rec.get("gen", 0)))
+        return (rec["kind"], rec.get("ref", ""), int(rec.get("ref_gen", 0)),
+                rec.get("file_hash", ""))
+
+    def _ship_key(self, src: str, tgt: str, key: str, rec: Dict,
+                  report: Dict) -> None:
+        """Re-ship one key from ``src`` to ``tgt``: the pinned generation's
+        dependency closure as verbatim container bytes (dependencies first,
+        adoption is idempotent), then the index record."""
+        s_store, t_store = self.roots[src], self.roots[tgt]
+        if rec.get("kind") == "container":
+            anchor = make_vid(key, int(rec.get("gen", 0)))
+        else:
+            anchor = make_vid(rec["ref"], int(rec.get("ref_gen", 0)))
+        for vid in self._closure_postorder(s_store, anchor):
+            v = s_store.lifecycle.versions.get(vid)
+            if v is None or v.quarantined:
+                continue  # another replica may donate it later
+            vkey, _, vgen = vid.rpartition("@g")
+            vgen = int(vgen)
+            if t_store.lifecycle.get(vkey, vgen) is not None:
+                continue
+            digest = s_store.container_digest(vkey, vgen)
+            self._fault("anti_entropy.mid_copy")
+            if t_store.adopt_container(vkey, vgen, v.path,
+                                       expected_sha256=digest):
+                report["shipped_versions"] += 1
+                report["shipped_bytes"] += v.nbytes
+        t_store.adopt_index_record(key, rec)
+        report["records_updated"] += 1
+
+    @staticmethod
+    def _closure_postorder(store: ZLLMStore, anchor: str) -> List[str]:
+        """Dependency-first (postorder) walk of the version graph from
+        ``anchor``: a shipped container's edges must resolve on the target,
+        so its targets land before it does."""
+        out: List[str] = []
+        seen: Set[str] = set()
+        stack: List[Tuple[str, bool]] = [(anchor, False)]
+        while stack:
+            vid, expanded = stack.pop()
+            if expanded:
+                out.append(vid)
+                continue
+            if vid in seen or vid not in store.lifecycle.versions:
+                continue
+            seen.add(vid)
+            stack.append((vid, True))
+            for dst in store.lifecycle.edges.get(vid, ()):
+                if dst not in seen:
+                    stack.append((dst, False))
+        return out
+
+    def replica_index_diff(self, repos: Optional[Sequence[str]] = None,
+                           ) -> Dict[str, Dict[str, Dict[str, List]]]:
+        """Per-replica-group index disagreements among up roots: empty dict
+        == every group converged (the smoke/soak convergence assertion).
+        Keys map to per-root states (``["container", gen]`` / ref tuples /
+        ``["gone"]``); only keys with >1 distinct state appear."""
+        out: Dict[str, Dict[str, Dict[str, List]]] = {}
+        todo = sorted(set(repos) if repos is not None else self._all_repos())
+        for repo in todo:
+            up = [n for n in self.replica_roots(repo) if self.is_up(n)]
+            prefix = repo + "/"
+            keys: Set[str] = set()
+            for n in up:
+                keys.update(k for k in list(self.roots[n].file_index)
+                            if k.startswith(prefix))
+                keys.update(k for k in list(
+                    self.roots[n].lifecycle.tombstones) if k.startswith(prefix))
+            rdiff: Dict[str, Dict[str, List]] = {}
+            for key in sorted(keys):
+                states = {n: self._key_state(n, key) for n in up}
+                if len(set(states.values())) > 1:
+                    rdiff[key] = {n: list(s) for n, s in states.items()}
+            if rdiff:
+                out[repo] = rdiff
+        return out
 
     # -- aggregate stats ------------------------------------------------------
     def summary(self) -> Dict:
@@ -175,6 +755,12 @@ class StoreRouter:
         agg["read_gen"] = {name: s["read_gen"] for name, s in per_root.items()}
         agg["n_roots"] = len(per_root)
         agg["roots"] = per_root
+        with self._health_lock:
+            pending = len(self._repair_pending)
+        agg["replication"] = {"replicas": self.replicas,
+                              "write_quorum": self.write_quorum,
+                              "health": self.health(),
+                              "repair_pending": pending}
         return agg
 
     def ingest_jobs(self, limit: int = 64) -> List[Dict]:
@@ -253,7 +839,9 @@ class StoreRouter:
             store.close()
 
     @staticmethod
-    def open_roots(paths: Sequence[str], *, workers: int = 2) -> "StoreRouter":
+    def open_roots(paths: Sequence[str], *, workers: int = 2,
+                   replicas: int = 1,
+                   write_quorum: Optional[int] = None) -> "StoreRouter":
         """CLI helper: open one store per path (index loaded when present),
         named ``r0..rN`` with the path recorded for display."""
         stores: "OrderedDict[str, ZLLMStore]" = OrderedDict()
@@ -261,4 +849,5 @@ class StoreRouter:
             store = ZLLMStore(path, workers=workers)
             store.load_index()
             stores[f"r{i}"] = store
-        return StoreRouter(stores)
+        return StoreRouter(stores, replicas=replicas,
+                           write_quorum=write_quorum)

@@ -69,7 +69,7 @@ from typing import Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, unquote, urlsplit
 
 from repro.core.pipeline import ZLLMStore, _LRUCache
-from repro.serve.router import StoreRouter
+from repro.serve.router import QuorumError, StoreRouter
 from repro.serve.singleflight import SingleFlight
 
 __all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "ROUTES", "main"]
@@ -77,7 +77,8 @@ __all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "ROUTES", "main"]
 _REASONS = {200: "OK", 202: "Accepted", 206: "Partial Content",
             400: "Bad Request", 404: "Not Found", 405: "Method Not Allowed",
             410: "Gone", 411: "Length Required",
-            416: "Range Not Satisfiable", 500: "Internal Server Error"}
+            416: "Range Not Satisfiable", 500: "Internal Server Error",
+            503: "Service Unavailable"}
 
 # Canonical route registry: (methods, path template, one-line summary).
 # docs/HTTP_API.md must list EXACTLY these rows — tests/test_docs.py diffs
@@ -103,6 +104,12 @@ ROUTES: Tuple[Tuple[str, str, str], ...] = (
      "dedup-aware compaction of superseded generations; per root or all"),
     ("GET|POST", "/admin/fsck",
      "integrity check; ?repair=1&spot_check=; per root or all"),
+    ("GET|POST", "/admin/anti_entropy",
+     "replica repair sweep: tombstones, quarantine-restore, re-ship diffs"),
+    ("DELETE", "/repo/{repo_id}/file/{filename}",
+     "tombstoned delete of one file on every replica (idempotent)"),
+    ("DELETE", "/repo/{repo_id}",
+     "tombstoned delete of a whole repo on every replica (idempotent)"),
 )
 
 _RANGE_RE = re.compile(r"^(\d+)-(\d*)$")
@@ -480,6 +487,20 @@ class StoreServer:
                                          "/repo/<repo_id>/file/<filename>"},
                                         keep=req.keep)
                 return
+            if req.method == "DELETE":
+                await self._drain_body(req)
+                if is_file_route:
+                    out = self.router.delete("/".join(segs[1:-2]), segs[-1])
+                elif len(segs) >= 2 and segs[0] == "repo":
+                    out = self.router.delete("/".join(segs[1:]))
+                else:
+                    await self._respond(writer, 405,
+                                        {"error": "DELETE only on /repo/"
+                                         "<repo_id>[/file/<filename>]"},
+                                        keep=req.keep)
+                    return
+                await self._respond(writer, 200, out, keep=req.keep)
+                return
             if req.method == "POST":
                 if url.path == "/ingest_repo":
                     await self._ingest_repo(writer, req)
@@ -503,9 +524,15 @@ class StoreServer:
                 single = self.router.single
                 gen = (single.read_gen if single is not None else
                        {n: s.read_gen for n, s in self.router.items()})
+                health = self.router.health()
                 await self._respond(writer, 200,
-                                    {"ok": True, "read_gen": gen,
-                                     "roots": self.router.names()},
+                                    {"ok": all(h["state"] != "down"
+                                               for h in health.values()),
+                                     "read_gen": gen,
+                                     "roots": self.router.names(),
+                                     "health": health,
+                                     "replicas": self.router.replicas,
+                                     "write_quorum": self.router.write_quorum},
                                     keep=req.keep)
             elif url.path == "/stats":
                 await self._stats(writer, req)
@@ -513,12 +540,15 @@ class StoreServer:
                 await self._admin(writer, req, url.path, qs)
             elif is_file_route:
                 repo_id = "/".join(segs[1:-2])
-                engine = self.engine_for(repo_id, segs[-1])
-                data, sha = await engine.get_file_digest(repo_id, segs[-1])
+                (data, sha), served_by = await self._with_failover(
+                    repo_id, segs[-1],
+                    lambda e: e.get_file_digest(repo_id, segs[-1]))
+                engine = self.engines[served_by]
                 await self._respond_ranged(
                     writer, req, data,
                     [("x-content-sha256", sha),
-                     ("x-read-gen", str(engine.store.read_gen))])
+                     ("x-read-gen", str(engine.store.read_gen)),
+                     ("x-served-by", served_by)])
             elif (len(segs) >= 3 and segs[0] == "repo" and segs[-1] == "tensor"
                   and "name" in qs):
                 # unambiguous form: /repo/<repo_id>/tensor?name=<tensor> —
@@ -543,6 +573,11 @@ class StoreServer:
         except KeyError as e:
             self._fail_framing(req)
             await self._respond(writer, 404, {"error": str(e)}, keep=req.keep)
+        except QuorumError as e:
+            # before ConnectionError: QuorumError subclasses it, but it is
+            # an HTTP-visible replication failure, not a dead client socket
+            self._fail_framing(req)
+            await self._respond(writer, 503, {"error": str(e)}, keep=req.keep)
         except RuntimeError as e:
             self._fail_framing(req)
             status = 410 if "quarantined" in str(e) else 500
@@ -565,9 +600,61 @@ class StoreServer:
             req.keep = False
 
     # -- read path ----------------------------------------------------------
+    async def _with_failover(self, repo_id: str, filename: str, attempt):
+        """Run ``attempt(engine)`` against each read candidate in replica
+        order until one serves; returns ``(result, root_name)``. A down or
+        erroring root is skipped (and its failure noted, feeding the
+        router's suspect backoff); a quarantined container is skipped
+        WITHOUT a health mark — the root is fine, that one object is not.
+        Exhaustion re-raises the most specific failure: 410 when a healthy
+        copy exists nowhere but a quarantined one does, 404 when no replica
+        knows the key, otherwise the last hard error."""
+        names = self.router.read_candidates(repo_id, filename)
+        if not names:
+            raise QuorumError(f"no replica of {repo_id} is up")
+        key_errors = 0
+        quarantined: Optional[Exception] = None
+        hard: Optional[Exception] = None
+        for name in names:
+            engine = self.engines[name]
+            try:
+                out = await attempt(engine)
+            except KeyError as e:
+                key_errors += 1
+                last_key = e
+                continue
+            except RuntimeError as e:
+                if "quarantined" in str(e):
+                    quarantined = e
+                else:
+                    self.router.note_failure(name)
+                    hard = e
+                continue
+            except (ConnectionError, asyncio.TimeoutError):
+                raise
+            except Exception as e:
+                self.router.note_failure(name)
+                hard = e
+                continue
+            self.router.note_success(name)
+            return out, name
+        if quarantined is not None and hard is None:
+            raise quarantined
+        if hard is not None:
+            raise hard
+        raise last_key  # every replica answered KeyError -> 404
+
     async def _tensor_get(self, writer, req: _Request, repo_id: str,
                           tensor_name: str, filename: str) -> None:
-        engine = self.engine_for(repo_id, filename)
+        async def attempt(engine):
+            await self._tensor_serve(writer, req, engine, repo_id,
+                                     tensor_name, filename)
+            return True
+        await self._with_failover(repo_id, filename, attempt)
+
+    async def _tensor_serve(self, writer, req: _Request,
+                            engine: RetrievalEngine, repo_id: str,
+                            tensor_name: str, filename: str) -> None:
         # zero-copy short-circuit: a `stored`-codec payload is a verbatim
         # on-disk span — full and ranged responses go through os.sendfile,
         # no decode, no userspace copy. Any irregularity (codec, race with
@@ -718,9 +805,12 @@ class StoreServer:
             return
         base = qs.get("base", [None])[0]
         # family-aware placement: a new repo declaring a BitX base lands on
-        # the root serving that base (per-root delta domains — a scattered
-        # family would store every fine-tune standalone)
-        root = self.router.locate_for_write(repo_id, filename, base=base)
+        # the root group serving that base (per-root delta domains — a
+        # scattered family would store every fine-tune standalone). The
+        # body spools into the first write target; replicated_enqueue
+        # stages per-replica copies from there.
+        targets = self.router.write_roots(repo_id, filename, base=base)
+        root = targets[0]
         store = self.router.store(root)
         fd, spath = tempfile.mkstemp(
             prefix="put-", suffix="-" + filename.replace("/", "_"),
@@ -748,20 +838,39 @@ class StoreServer:
             raise
         self.http["put_uploads"] += 1
         self.http["put_bytes"] += received
-        job_id = store.enqueue_ingest([(spath, repo_id, filename, base)],
-                                      cleanup=True)
+        # quorum fan-out (QuorumError -> 503 in the dispatcher); a
+        # single-root router degenerates to the old one-job path exactly
+        loop2 = asyncio.get_running_loop()
+        rep = await loop2.run_in_executor(
+            self.engine._pool,
+            lambda: self.router.replicated_enqueue(spath, repo_id, filename,
+                                                   base=base))
+        first = next(iter(rep["jobs"]))
         if qs.get("sync", ["0"])[0] in ("0", "", "false"):
-            await self._respond(writer, 202,
-                                {"job_id": job_id, "root": root,
-                                 "repo_id": repo_id, "filename": filename,
-                                 "bytes": received,
-                                 "status": f"/admin/jobs?job={job_id}"},
-                                keep=req.keep)
+            out = {"job_id": rep["jobs"][first], "root": first,
+                   "repo_id": repo_id, "filename": filename,
+                   "bytes": received,
+                   "status": f"/admin/jobs?job={rep['jobs'][first]}"}
+            if len(rep["targets"]) > 1:
+                out["replicas"] = {"jobs": rep["jobs"],
+                                   "failed": rep["failed"],
+                                   "quorum": rep["quorum"]}
+            await self._respond(writer, 202, out, keep=req.keep)
             return
-        job = await self._await_job(store, job_id)
-        status = 200 if job and job["state"] == "done" else 500
-        await self._respond(writer, status, {"root": root, "job": job},
-                            keep=req.keep)
+        ok, states = await loop2.run_in_executor(
+            self.engine._pool, lambda: self.router.await_quorum(rep["jobs"]))
+        job = states.get(first)
+        if job is not None:
+            job = dict(job)
+            job.setdefault("root", first)
+        status = 200 if ok else 500
+        out = {"root": first, "job": job}
+        if len(rep["targets"]) > 1:
+            out["replicas"] = {"quorum_met": ok,
+                               "states": {n: (s or {}).get("state")
+                                          for n, s in states.items()},
+                               "failed": rep["failed"]}
+        await self._respond(writer, status, out, keep=req.keep)
 
     async def _ingest_repo(self, writer, req: _Request) -> None:
         """Enqueue a *server-local* repo directory (bulk feeding / sidecar
@@ -887,6 +996,15 @@ class StoreServer:
                 lambda: self.router.fanout_fsck(root, repair=repair,
                                                 spot_check=spot))
             await self._respond(writer, 200, out, keep=req.keep)
+        elif path == "/admin/anti_entropy":
+            repos = qs.get("repo") or None
+            out = await loop.run_in_executor(
+                self.engine._pool,
+                lambda: self.router.anti_entropy(repos=repos))
+            out["diff_after"] = await loop.run_in_executor(
+                self.engine._pool,
+                lambda: self.router.replica_index_diff(repos=repos))
+            await self._respond(writer, 200, out, keep=req.keep)
         else:
             await self._respond(writer, 404,
                                 {"error": f"no admin route for {path}"},
@@ -1009,9 +1127,17 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-mb", type=int, default=128)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip sha256 verification of responses")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica group size per repo (clamped to the "
+                         "number of roots); 1 = shard-only placement")
+    ap.add_argument("--write-quorum", type=int, default=None,
+                    help="write acks required before a PUT succeeds "
+                         "(default: majority of --replicas)")
     args = ap.parse_args(argv)
 
-    router = StoreRouter.open_roots(args.root, workers=args.store_workers)
+    router = StoreRouter.open_roots(args.root, workers=args.store_workers,
+                                    replicas=args.replicas,
+                                    write_quorum=args.write_quorum)
     for name, store in router.items():
         if not store.file_index:
             print(f"store_server: no index under {store.root} "

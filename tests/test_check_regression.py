@@ -4,7 +4,9 @@ instead of failing (new metrics must not hard-fail CI until the baseline is
 regenerated), and the serving concurrent-retrieval metric is gated."""
 
 from benchmarks.check_regression import (GATED_INVERSE_SUFFIXES,
-                                         GATED_SUFFIXES, compare)
+                                         GATED_SUFFIXES,
+                                         INVERSE_FAIL_FLOOR,
+                                         INVERSE_FAIL_FLOORS, compare)
 
 
 def test_shared_key_regression_fails():
@@ -86,6 +88,63 @@ def test_incremental_gc_pause_is_rise_gated():
     _, failures, warnings = compare({}, base, max_drop=0.25)
     assert not failures
     assert any("incremental_gc_max_pause_ms" in w and "no baseline" in w
+               for w in warnings)
+
+
+def test_failover_read_throughput_is_drop_gated():
+    """PR-6 replicated-read metric: a collapse in read throughput with one
+    root down (failover fell off the skip-dead-roots fast path) must fail."""
+    assert any("failover_read_MBps".endswith(s) for s in GATED_SUFFIXES)
+    base = {"replication": {"failover_read_MBps": 80.0}}
+    _, failures, _ = compare(
+        base, {"replication": {"failover_read_MBps": 40.0}}, max_drop=0.25)
+    assert failures == ["replication.failover_read_MBps"]
+    _, failures, _ = compare(
+        base, {"replication": {"failover_read_MBps": 75.0}}, max_drop=0.25)
+    assert not failures
+
+
+def test_quorum_put_p99_is_rise_gated_with_default_floor():
+    """Lower-is-better quorum-write latency: fails only on a rise past the
+    multiplier AND past the default ms floor (scheduler noise on a fast
+    baseline never fails)."""
+    assert "quorum_put_p99_ms" in GATED_INVERSE_SUFFIXES
+    assert "quorum_put_p99_ms" not in INVERSE_FAIL_FLOORS  # default floor
+    base = {"replication": {"quorum_put_p99_ms": 120.0}}
+    _, failures, _ = compare(
+        base, {"replication": {"quorum_put_p99_ms": 900.0}},
+        max_drop=0.25, max_rise=3.0)
+    assert failures == ["replication.quorum_put_p99_ms"]
+    _, failures, _ = compare(
+        {"replication": {"quorum_put_p99_ms": 10.0}},
+        {"replication": {"quorum_put_p99_ms": 200.0}},  # 20x but sub-floor
+        max_drop=0.25, max_rise=3.0)
+    assert not failures
+    _, failures, _ = compare(
+        base, {"replication": {"quorum_put_p99_ms": 60.0}},
+        max_drop=0.25, max_rise=3.0)
+    assert not failures  # faster is never a regression
+
+
+def test_anti_entropy_repair_uses_per_suffix_floor():
+    """The repair sweep reports SECONDS, so the 250 default (meant for ms
+    keys) would let a 4-minute repair pass on a 60 s baseline — it carries
+    its own absolute floor instead."""
+    assert "anti_entropy_repair_s" in GATED_INVERSE_SUFFIXES
+    assert INVERSE_FAIL_FLOORS["anti_entropy_repair_s"] < INVERSE_FAIL_FLOOR
+    base = {"replication": {"anti_entropy_repair_s": 2.0}}
+    _, failures, _ = compare(
+        base, {"replication": {"anti_entropy_repair_s": 30.0}},
+        max_drop=0.25, max_rise=3.0)
+    assert failures == ["replication.anti_entropy_repair_s"]
+    _, failures, _ = compare(
+        {"replication": {"anti_entropy_repair_s": 0.5}},
+        {"replication": {"anti_entropy_repair_s": 4.0}},  # 8x but under 5 s
+        max_drop=0.25, max_rise=3.0)
+    assert not failures
+    _, failures, warnings = compare({}, base, max_drop=0.25)
+    assert not failures  # new metric warns until the baseline is regenerated
+    assert any("anti_entropy_repair_s" in w and "no baseline" in w
                for w in warnings)
 
 

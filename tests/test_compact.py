@@ -354,10 +354,12 @@ def test_index_v2_backward_compat_load(tmp_path):
     store.close()
 
     idx = json.load(open(idx_path))
-    assert idx["format"] == 3
+    assert idx["format"] == 4
     idx["format"] = 2
     del idx["gc_cursor"]
-    for k in ("compaction_reclaimed_bytes", "compact_runs", "gc_max_pause_ms"):
+    idx["lifecycle"].pop("tombstones", None)  # v4-only key
+    for k in ("compaction_reclaimed_bytes", "compact_runs", "gc_max_pause_ms",
+              "auto_compact_runs"):
         idx["stats"].pop(k, None)
     with open(idx_path, "w") as f:
         json.dump(idx, f)

@@ -349,7 +349,7 @@ def _downgrade_index_to_v1(index_path: str) -> None:
     """Rewrite a v2 index the way PR 1 wrote it: no format tag, no lifecycle
     section, 2-tuple tensor locations, no generation fields."""
     idx = json.load(open(index_path))
-    assert idx["format"] == 3
+    assert idx["format"] == 4
     del idx["format"]
     del idx["lifecycle"]
     idx.pop("gc_cursor", None)  # v3-only key
