@@ -10,7 +10,13 @@ they are memory-bound by construction, so the bound is bytes-moved/HBM-BW:
 
 Pallas-in-interpret-mode timings are NOT reported (Python emulation —
 meaningless); correctness of the Pallas kernels vs these same reference paths
-is covered by tests/test_kernels.py.
+is covered by tests/test_kernels.py and tests/test_backend_equiv.py.
+
+``gated_hotpath()`` is the CI-gated leg: it times the transforms the storage
+pipeline actually calls — ``get_backend("auto").{xor_delta_planes, byte_
+planes, merge_planes_xor}`` — so the regression gate watches the exact code
+the encode stage and decode fan-out run, whichever backend "auto" resolves
+to on the box (numpy on CPU-only hosts, batched jax on accelerator hosts).
 """
 
 from __future__ import annotations
@@ -23,7 +29,7 @@ import numpy as np
 
 from benchmarks.common import Timer, emit
 from repro.core.bitdistance import hamming_total_arrays
-from repro.core.bitx import merge_planes_xor_np, xor_delta_planes_np
+from repro.core.bitx import get_backend
 from repro.kernels import ref
 from repro.launch.mesh import HW
 
@@ -40,16 +46,41 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
+def gated_hotpath(n_mb: int = 8) -> dict:
+    """CI-gated backend hot-path throughput (zllm.kernel.* keys): the three
+    ArrayBackend transforms the pipeline's encode/decode stages call, on the
+    backend ``"auto"`` resolves to here. MB/s is model bytes per second."""
+    backend = get_backend("auto")
+    n = n_mb * 2**19  # uint16 elements for n_mb MB
+    rng = np.random.RandomState(1)
+    base = rng.randint(0, 2**16, n).astype(np.uint16)
+    ft = (base ^ rng.randint(0, 16, n).astype(np.uint16))
+    mb = n * 2 / 2**20
+
+    t_xor = _time(backend.xor_delta_planes, base, ft, reps=3)
+    planes = backend.xor_delta_planes(base, ft)
+    t_merge = _time(backend.merge_planes_xor, planes, base, reps=3)
+    t_split = _time(backend.byte_planes, ft, reps=3)
+    return {
+        "backend": backend.name,
+        "model_MB": round(mb, 1),
+        "xor_split_MBps": round(mb / t_xor, 1),
+        "merge_xor_MBps": round(mb / t_merge, 1),
+        "byte_planes_MBps": round(mb / t_split, 1),
+    }
+
+
 def run(ctx=None) -> dict:
     n = 16 * 2**20  # 16M elements = 32 MB bf16
     rng = np.random.RandomState(0)
     base = rng.randint(0, 2**16, n).astype(np.uint16)
     ft = (base ^ rng.randint(0, 16, n).astype(np.uint16))
     jb, jf = jnp.asarray(base).reshape(-1, 1024), jnp.asarray(ft).reshape(-1, 1024)
+    host = get_backend("numpy")
 
-    t_np_enc = _time(xor_delta_planes_np, base, ft, reps=3)
-    planes = xor_delta_planes_np(base, ft)
-    t_np_dec = _time(merge_planes_xor_np, planes, base, reps=3)
+    t_np_enc = _time(host.xor_delta_planes, base, ft, reps=3)
+    planes = host.xor_delta_planes(base, ft)
+    t_np_dec = _time(host.merge_planes_xor, planes, base, reps=3)
     t_np_ham = _time(hamming_total_arrays, base, ft, reps=3)
 
     enc_j = jax.jit(ref.xor_split_planes)
@@ -61,6 +92,7 @@ def run(ctx=None) -> dict:
     out = {
         "elements": n,
         "model_MB": round(mb, 1),
+        "kernel": gated_hotpath(),
         "host_numpy": {
             "bitx_encode_MBps": round(mb / t_np_enc, 1),
             "bitx_decode_MBps": round(mb / t_np_dec, 1),

@@ -113,14 +113,41 @@ def workers_sweep(ctx: Ctx, workers=(1, 4)) -> dict:
     store.save_index()
     store.close()
 
+    # device-batched ingest leg (the gated zllm.ingest.device_batched_MBps
+    # figure): same corpus through the backend "auto" resolves to on this
+    # box — the batched jax/Pallas path on accelerator hosts, the numpy host
+    # path on CPU-only boxes (so the gate measures "no regression when
+    # falling back" there). Containers must stay bit-identical to serial.
+    from repro.core.bitx import get_backend
+    droot = "/tmp/repro-bench-zllm-device"
+    shutil.rmtree(droot, ignore_errors=True)
+    store = ZLLMStore(droot, workers=max(workers), backend="auto")
+    with Timer() as t_in:
+        for rid, _ in ctx.manifest:
+            store.ingest_repo(ctx.repo_path(rid), rid)
+    with Timer() as t_out:
+        for rid, _ in ctx.manifest:
+            store.retrieve_file(rid, "model.safetensors", verify=False)
+    out["ingest"] = {
+        "array_backend": store.backend.name,
+        "device_batched_MBps": _mbps(total, t_in.seconds),
+        "device_batched_retrieve_MBps": _mbps(total, t_out.seconds),
+    }
+    store.close()
+
     w0 = workers[0]
     for w in workers[1:]:
         _assert_identical_containers(roots[w0], roots[w])
     _assert_identical_containers(roots[w0], proot)
+    _assert_identical_containers(roots[w0], droot)
     out["containers_bit_identical"] = True
     base = out[f"workers_{w0}"]["ingest_MBps"]
     best = max(out[f"workers_{w}"]["ingest_MBps"] for w in workers)
     out["ingest_speedup_best_vs_serial"] = round(best / base, 2) if base else 0.0
+
+    # backend hot-path transform throughput (gated zllm.kernel.* keys)
+    from benchmarks.bench_kernels import gated_hotpath
+    out["kernel"] = gated_hotpath()
     return out
 
 

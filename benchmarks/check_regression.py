@@ -39,9 +39,18 @@ from typing import Dict, List, Tuple
 # failover_read_MBps gates the replicated read path with one root down: a
 # drop means failover stopped skipping the dead root up front (per-request
 # timeout churn) or reads fell off the replica fast path.
+# zllm.kernel.{xor_split,merge_xor,byte_planes}_MBps gate the ArrayBackend
+# hot-path transforms the pipeline's encode/decode stages call (whatever
+# backend "auto" resolves to); zllm.ingest.device_batched_MBps gates the
+# backend="auto" store ingest end to end — a drop on a CPU-only runner
+# means the numpy fallback regressed, on an accelerator host it means the
+# batched device path did. All warn-on-missing like every other key, so a
+# baseline predating them never hard-fails CI.
 GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
                   "compaction_reclaimed_bytes", "keepalive_reqs_per_s",
-                  "range_read_MBps", "failover_read_MBps")
+                  "range_read_MBps", "failover_read_MBps",
+                  "xor_split_MBps", "merge_xor_MBps", "byte_planes_MBps",
+                  "device_batched_MBps")
 
 # Lower-is-better keys: fail when the FRESH value RISES past
 # baseline * (1 + max_rise). Pause times are noisy (scheduler, shared

@@ -6,12 +6,19 @@ byte planes (MSB plane ≈ all zeros within a family, Fig. 5), entropy-code each
 plane with zstd. Decode is the exact inverse; the pipeline verifies bit-exact
 reconstruction.
 
-Two compute paths, tested bit-identical:
+Array math goes through an :class:`ArrayBackend` selected once per store
+(``get_backend("numpy"|"jax"|"auto")``), two implementations tested
+bit-identical:
 
-* ``backend="numpy"`` — host path for mmap'd safetensors ingestion (the
+* ``numpy`` — host path for mmap'd safetensors ingestion (the
   evaluation/throughput path, mirroring the paper's C++ engine);
-* ``backend="jax"`` — the Pallas kernels (``repro.kernels``), the TPU
-  deployment path (encode checkpoints while they are still in HBM).
+* ``jax`` — the Pallas kernels (``repro.kernels``), the TPU deployment path:
+  same-width tensors are concatenated per bucket and transformed in ONE
+  fused kernel launch (interpret mode off-TPU, so tests validate the kernel
+  bodies on CPU). ``auto`` picks jax only when an accelerator is attached.
+
+The per-codec encode/decode lanes live in the :mod:`repro.core.codecs`
+registry; :class:`BitXCodec` remains as a thin back-compat facade over it.
 
 Container format (``.bitx``): a 16-byte magic+version, a JSON header
 describing per-tensor records, then concatenated zstd frames. Per-tensor
@@ -26,20 +33,25 @@ import json
 import mmap
 import os
 import struct
-import threading
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import zstd_compat as zstd
+from repro.core.codecs import CodecRuntime, EncodeInput, get_codec, raw_or_stored
 
 __all__ = [
+    "ArrayBackend",
     "BitXCodec",
     "TensorRecord",
     "BitXWriter",
     "BitXReader",
+    "JaxBackend",
+    "NumpyBackend",
     "TMP_SUFFIX",
+    "get_backend",
     "xor_delta_planes_np",
     "merge_planes_xor_np",
     "byte_planes_np",
@@ -65,12 +77,15 @@ def _bit_view_np(arr: np.ndarray) -> np.ndarray:
     raise ValueError(f"unsupported dtype {arr.dtype}")
 
 
-def xor_delta_planes_np(base: np.ndarray, ft: np.ndarray) -> List[np.ndarray]:
-    """Numpy path: XOR bit views and split into byte planes (MSB first).
+# ---------------------------------------------------------------------------
+# Host (numpy) transform implementations — the reference semantics every
+# ArrayBackend must match bit for bit.
+# ---------------------------------------------------------------------------
 
-    The plane split is a strided view of the little-endian byte buffer, so the
-    whole encode is two passes over memory (XOR, then per-plane copy).
-    """
+def _xor_delta_planes_host(base: np.ndarray, ft: np.ndarray) -> List[np.ndarray]:
+    """XOR bit views and split into byte planes (MSB first). The plane split
+    is a strided view of the little-endian byte buffer, so the whole encode
+    is two passes over memory (XOR, then per-plane copy)."""
     a = _bit_view_np(np.ascontiguousarray(base)).reshape(-1)
     b = _bit_view_np(np.ascontiguousarray(ft)).reshape(-1)
     assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape, a.dtype, b.dtype)
@@ -81,19 +96,17 @@ def xor_delta_planes_np(base: np.ndarray, ft: np.ndarray) -> List[np.ndarray]:
     return [np.ascontiguousarray(raw[:, nb - 1 - i]) for i in range(nb)]
 
 
-def byte_planes_np(x: np.ndarray) -> List[np.ndarray]:
-    """MSB-first byte planes of ``x``'s bit view (the ZipNN split). Shared by
-    ``BitXCodec.encode_planes`` and the process-pool entropy backend, so the
-    two paths split planes identically and stay bit-compatible."""
+def _byte_planes_host(x: np.ndarray) -> List[np.ndarray]:
+    """MSB-first byte planes of ``x``'s bit view (the ZipNN split)."""
     v = _bit_view_np(np.ascontiguousarray(x)).reshape(-1)
     nb = v.dtype.itemsize
     raw = v.view(np.uint8).reshape(-1, nb)
     return [np.ascontiguousarray(raw[:, nb - 1 - i]) for i in range(nb)]
 
 
-def merge_planes_xor_np(planes: Sequence[np.ndarray], base: np.ndarray) -> np.ndarray:
-    """Inverse of :func:`xor_delta_planes_np`; returns the ft bit view shaped
-    like ``base``."""
+def _merge_planes_xor_host(planes: Sequence[np.ndarray], base: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`_xor_delta_planes_host`; returns the ft bit view
+    shaped like ``base``."""
     a = _bit_view_np(np.ascontiguousarray(base))
     nb = a.dtype.itemsize
     assert len(planes) == nb
@@ -103,6 +116,311 @@ def merge_planes_xor_np(planes: Sequence[np.ndarray], base: np.ndarray) -> np.nd
         raw[:, nb - 1 - i] = p
     delta = raw.reshape(-1).view(a.dtype.str)
     return np.bitwise_xor(delta, a.reshape(-1)).reshape(a.shape)
+
+
+def _merge_planes_host(planes: Sequence[np.ndarray], dtype_np, shape) -> np.ndarray:
+    """Inverse of :func:`_byte_planes_host`; returns an array of ``dtype_np``
+    (the ZipNN merge)."""
+    nb = np.dtype(dtype_np).itemsize
+    assert len(planes) == nb
+    n = int(np.prod(shape)) if len(shape) else 1
+    raw = np.empty((n, nb), np.uint8)
+    for i, p in enumerate(planes):
+        raw[:, nb - 1 - i] = p
+    return raw.reshape(-1).view(np.dtype(dtype_np).str).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# ArrayBackend: the one dispatch point for the pipeline's array math.
+# ---------------------------------------------------------------------------
+
+class ArrayBackend(Protocol):
+    """Array-transform provider selected once at ``ZLLMStore`` construction.
+
+    Single-tensor ops are the reference semantics; the ``*_batch`` variants
+    take many tensors at once and MUST produce per-tensor results identical
+    to mapping the single op — backends exploit that freedom to concatenate
+    same-width tensors and run one fused kernel launch per bucket. The
+    transforms are elementwise in the bit view, so batching can never change
+    the emitted bytes.
+    """
+
+    name: str
+    supports_batching: bool
+
+    def xor_delta_planes(self, base: np.ndarray, ft: np.ndarray) -> List[np.ndarray]: ...
+    def byte_planes(self, x: np.ndarray) -> List[np.ndarray]: ...
+    def merge_planes_xor(self, planes: Sequence[np.ndarray], base: np.ndarray) -> np.ndarray: ...
+    def merge_planes(self, planes: Sequence[np.ndarray], dtype_np, shape) -> np.ndarray: ...
+    def xor_delta_planes_batch(self, pairs: Sequence[Tuple[np.ndarray, np.ndarray]]) -> List[List[np.ndarray]]: ...
+    def byte_planes_batch(self, xs: Sequence[np.ndarray]) -> List[List[np.ndarray]]: ...
+    def merge_planes_xor_batch(self, items: Sequence[Tuple[Sequence[np.ndarray], np.ndarray]]) -> List[np.ndarray]: ...
+    def merge_planes_batch(self, items: Sequence[Tuple[Sequence[np.ndarray], np.dtype, Tuple[int, ...]]]) -> List[np.ndarray]: ...
+
+
+class NumpyBackend:
+    """Host path: strided-view plane splits on the ingest thread(s). Batched
+    entry points degenerate to a loop — numpy gains nothing from fusion, and
+    the pipeline only engages its batching stage for backends that declare
+    ``supports_batching``."""
+
+    name = "numpy"
+    supports_batching = False
+
+    def xor_delta_planes(self, base, ft):
+        return _xor_delta_planes_host(base, ft)
+
+    def byte_planes(self, x):
+        return _byte_planes_host(x)
+
+    def merge_planes_xor(self, planes, base):
+        return _merge_planes_xor_host(planes, base)
+
+    def merge_planes(self, planes, dtype_np, shape):
+        return _merge_planes_host(planes, dtype_np, shape)
+
+    def xor_delta_planes_batch(self, pairs):
+        return [_xor_delta_planes_host(b, f) for b, f in pairs]
+
+    def byte_planes_batch(self, xs):
+        return [_byte_planes_host(x) for x in xs]
+
+    def merge_planes_xor_batch(self, items):
+        return [_merge_planes_xor_host(p, b) for p, b in items]
+
+    def merge_planes_batch(self, items):
+        return [_merge_planes_host(p, d, s) for p, d, s in items]
+
+
+class JaxBackend:
+    """Device path over the Pallas kernels (``repro.kernels.ops``).
+
+    Inputs are converted to their unsigned bit views host-side (so int8 and
+    bool-free integer tensors work without kernel-side dtype plumbing), then
+    the fused XOR+split / merge kernels run once per same-width bucket: a
+    batch of N same-dtype tensors is concatenated flat and transformed in a
+    single launch, and per-tensor planes are sliced back out — bit-identical
+    to the per-tensor host path because the transforms are elementwise.
+
+    Off-TPU the kernels execute in interpret mode (`ops._interpret`), which
+    is how the equivalence tests validate the kernel bodies on CPU. 8-byte
+    words fall back to the host implementation unless jax runs with x64
+    enabled (jax would silently truncate uint64 otherwise).
+    """
+
+    name = "jax"
+    supports_batching = True
+
+    def __init__(self, use_pallas: bool = True):
+        self.use_pallas = use_pallas
+        self._ops_mod = None
+
+    @staticmethod
+    def available() -> bool:
+        import importlib.util
+        return importlib.util.find_spec("jax") is not None
+
+    def _ops(self):
+        if self._ops_mod is None:
+            try:
+                from repro.kernels import ops as ops_mod
+            except Exception as e:  # missing/broken jax toolchain
+                raise RuntimeError(
+                    "backend='jax' needs the jax/Pallas toolchain "
+                    "(repro.kernels.ops failed to import); construct the "
+                    "store with backend='numpy' or 'auto'") from e
+            self._ops_mod = ops_mod
+        return self._ops_mod
+
+    def _device_ok(self, dtype: np.dtype) -> bool:
+        """uint64 needs jax x64; without it jnp.asarray silently truncates."""
+        if np.dtype(dtype).itemsize < 8:
+            return True
+        import jax
+        return bool(jax.config.jax_enable_x64)
+
+    # -- single-tensor ops (reference semantics) -----------------------------
+    def xor_delta_planes(self, base, ft):
+        return self.xor_delta_planes_batch([(base, ft)])[0]
+
+    def byte_planes(self, x):
+        return self.byte_planes_batch([x])[0]
+
+    def merge_planes_xor(self, planes, base):
+        return self.merge_planes_xor_batch([(planes, base)])[0]
+
+    def merge_planes(self, planes, dtype_np, shape):
+        return self.merge_planes_batch([(planes, dtype_np, shape)])[0]
+
+    # -- batched ops: one kernel launch per same-width bucket ----------------
+    def _buckets(self, dtypes: Sequence[np.dtype]) -> Dict[str, List[int]]:
+        groups: Dict[str, List[int]] = {}
+        for i, d in enumerate(dtypes):
+            groups.setdefault(np.dtype(d).str, []).append(i)
+        return groups
+
+    def xor_delta_planes_batch(self, pairs):
+        out: List[Optional[List[np.ndarray]]] = [None] * len(pairs)
+        views = []
+        for base, ft in pairs:
+            a = _bit_view_np(np.ascontiguousarray(base)).reshape(-1)
+            b = _bit_view_np(np.ascontiguousarray(ft)).reshape(-1)
+            assert a.shape == b.shape and a.dtype == b.dtype, \
+                (a.shape, b.shape, a.dtype, b.dtype)
+            views.append((a, b))
+        for dstr, idxs in self._buckets([v[0].dtype for v in views]).items():
+            if not self._device_ok(np.dtype(dstr)):
+                for i in idxs:
+                    out[i] = _xor_delta_planes_host(*views[i])
+                continue
+            cat_a = np.concatenate([views[i][0] for i in idxs])
+            cat_b = np.concatenate([views[i][1] for i in idxs])
+            planes = [np.asarray(p) for p in self._ops().bitx_encode_planes(
+                cat_a, cat_b, use_pallas=self.use_pallas)]
+            off = 0
+            for i in idxs:
+                n = views[i][0].size
+                out[i] = [np.ascontiguousarray(p[off:off + n]) for p in planes]
+                off += n
+        return out
+
+    def byte_planes_batch(self, xs):
+        out: List[Optional[List[np.ndarray]]] = [None] * len(xs)
+        views = [_bit_view_np(np.ascontiguousarray(x)).reshape(-1) for x in xs]
+        for dstr, idxs in self._buckets([v.dtype for v in views]).items():
+            if not self._device_ok(np.dtype(dstr)):
+                for i in idxs:
+                    out[i] = _byte_planes_host(views[i])
+                continue
+            cat = np.concatenate([views[i] for i in idxs])
+            planes = [np.asarray(p) for p in self._ops().zipnn_split_planes(
+                cat, use_pallas=self.use_pallas)]
+            off = 0
+            for i in idxs:
+                n = views[i].size
+                out[i] = [np.ascontiguousarray(p[off:off + n]) for p in planes]
+                off += n
+        return out
+
+    def merge_planes_xor_batch(self, items):
+        out: List[Optional[np.ndarray]] = [None] * len(items)
+        views = [_bit_view_np(np.ascontiguousarray(base)) for _, base in items]
+        for dstr, idxs in self._buckets([v.dtype for v in views]).items():
+            if not self._device_ok(np.dtype(dstr)):
+                for i in idxs:
+                    out[i] = _merge_planes_xor_host(items[i][0], views[i])
+                continue
+            nb = np.dtype(dstr).itemsize
+            cat_base = np.concatenate([views[i].reshape(-1) for i in idxs])
+            cat_planes = [
+                np.concatenate([np.ascontiguousarray(np.asarray(items[i][0][pi]))
+                                for i in idxs])
+                for pi in range(nb)]
+            merged = np.asarray(self._ops().bitx_decode_planes(
+                cat_planes, cat_base, use_pallas=self.use_pallas))
+            off = 0
+            for i in idxs:
+                n = views[i].size
+                out[i] = np.ascontiguousarray(
+                    merged[off:off + n]).reshape(views[i].shape)
+                off += n
+        return out
+
+    def merge_planes_batch(self, items):
+        out: List[Optional[np.ndarray]] = [None] * len(items)
+        dtypes = [np.dtype(d) for _, d, _ in items]
+        for dstr, idxs in self._buckets(dtypes).items():
+            dtype_np = np.dtype(dstr)
+            nb = dtype_np.itemsize
+            if not self._device_ok(dtype_np):
+                for i in idxs:
+                    out[i] = _merge_planes_host(*items[i])
+                continue
+            uview = np.dtype(f"<u{nb}")
+            cat_planes = [
+                np.concatenate([np.ascontiguousarray(np.asarray(items[i][0][pi]))
+                                for i in idxs])
+                for pi in range(nb)]
+            total = int(cat_planes[0].size)
+            merged = np.asarray(self._ops().zipnn_merge_planes(
+                cat_planes, uview, (total,), use_pallas=self.use_pallas))
+            off = 0
+            for i in idxs:
+                shape = items[i][2]
+                n = int(np.prod(shape)) if len(shape) else 1
+                out[i] = np.ascontiguousarray(
+                    merged[off:off + n]).view(dtype_np.str).reshape(shape)
+                off += n
+        return out
+
+
+_BACKENDS: Dict[str, ArrayBackend] = {}
+
+
+def get_backend(spec="auto") -> ArrayBackend:
+    """Resolve an array backend: ``"numpy"``, ``"jax"``, ``"auto"``, or an
+    :class:`ArrayBackend` instance (passed through).
+
+    ``"auto"`` picks jax only when an accelerator is actually attached
+    (``jax.default_backend() != "cpu"``) — on CPU-only boxes the numpy host
+    path wins by a wide margin (interpret-mode kernels are Python emulation),
+    so auto-fallback keeps ingest throughput unregressed.
+    """
+    if not isinstance(spec, str):
+        return spec
+    cached = _BACKENDS.get(spec)
+    if cached is not None:
+        return cached
+    if spec == "numpy":
+        backend: ArrayBackend = NumpyBackend()
+    elif spec == "jax":
+        backend = JaxBackend()
+    elif spec == "auto":
+        backend = NumpyBackend()
+        if JaxBackend.available():
+            try:
+                import jax
+                if jax.default_backend() != "cpu":
+                    backend = JaxBackend()
+            except Exception:
+                pass  # broken jax install: the host path always works
+    else:
+        raise ValueError(f"unknown array backend {spec!r} "
+                         f"(expected 'numpy', 'jax' or 'auto')")
+    _BACKENDS[spec] = backend
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Deprecated free-function aliases (one-release shim): external callers used
+# to import the host transforms directly; array math now routes through an
+# ArrayBackend so the jax device path is substitutable.
+# ---------------------------------------------------------------------------
+
+def _warn_shim(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.bitx.{old} is deprecated; use "
+        f"repro.core.bitx.get_backend(...).{new} instead "
+        f"(this shim will be removed next release)",
+        DeprecationWarning, stacklevel=3)
+
+
+def xor_delta_planes_np(base: np.ndarray, ft: np.ndarray) -> List[np.ndarray]:
+    """Deprecated alias of ``get_backend("numpy").xor_delta_planes``."""
+    _warn_shim("xor_delta_planes_np", "xor_delta_planes")
+    return _xor_delta_planes_host(base, ft)
+
+
+def byte_planes_np(x: np.ndarray) -> List[np.ndarray]:
+    """Deprecated alias of ``get_backend("numpy").byte_planes``."""
+    _warn_shim("byte_planes_np", "byte_planes")
+    return _byte_planes_host(x)
+
+
+def merge_planes_xor_np(planes: Sequence[np.ndarray], base: np.ndarray) -> np.ndarray:
+    """Deprecated alias of ``get_backend("numpy").merge_planes_xor``."""
+    _warn_shim("merge_planes_xor_np", "merge_planes_xor")
+    return _merge_planes_xor_host(planes, base)
 
 
 @dataclass
@@ -145,96 +463,73 @@ class TensorRecord:
 
 
 class BitXCodec:
-    """Per-tensor BitX / ZipNN / raw encode+decode with a zstd entropy stage.
+    """Back-compat facade over the codec registry (kept for one release).
 
-    ``threads`` is forwarded to ``zstd.ZstdCompressor(threads=...)`` (zstd's
-    internal frame-level multithreading; ignored by the zlib fallback).
-
-    zstd compressor/decompressor *contexts* are not thread-safe, so a codec
-    instance keeps its contexts in thread-local storage: the parallel ingest
-    and retrieval engines share one ``BitXCodec`` across their worker pool and
-    each worker lazily materializes its own pair of contexts. Frames are a
-    pure function of (input bytes, level, threads), so per-worker contexts do
-    not change the emitted bytes.
+    New code goes through :mod:`repro.core.codecs` directly; this class maps
+    the old per-codec ``encode_*``/``decode_*`` methods onto registry lanes
+    sharing one :class:`~repro.core.codecs.CodecRuntime`. The runtime owns
+    the zstd contexts per worker thread (compressor objects are not
+    thread-safe), so a codec instance is still safe to share across a pool.
+    ``threads`` is forwarded to ``zstd.ZstdCompressor(threads=...)``.
     """
 
-    def __init__(self, level: int = DEFAULT_ZSTD_LEVEL, threads: int = 0):
+    def __init__(self, level: int = DEFAULT_ZSTD_LEVEL, threads: int = 0,
+                 backend=None):
         self.level = level
         self.threads = threads
-        self._tls = threading.local()
+        self.runtime = CodecRuntime(level=level, threads=threads,
+                                    backend=get_backend(backend or "numpy"))
 
     @property
     def _cctx(self):
-        ctx = getattr(self._tls, "cctx", None)
-        if ctx is None:
-            ctx = self._tls.cctx = zstd.ZstdCompressor(level=self.level,
-                                                       threads=self.threads)
-        return ctx
+        return self.runtime._compressor()
 
     @property
     def _dctx(self):
-        ctx = getattr(self._tls, "dctx", None)
-        if ctx is None:
-            ctx = self._tls.dctx = zstd.ZstdDecompressor()
-        return ctx
+        return self.runtime._decompressor()
 
     # -- BitX ---------------------------------------------------------------
     def encode_delta(self, base: np.ndarray, ft: np.ndarray) -> Tuple[List[bytes], int]:
         """Returns (compressed plane frames MSB-first, raw byte size)."""
-        planes = xor_delta_planes_np(base, ft)
-        frames = [self._cctx.compress(p.tobytes()) for p in planes]
-        return frames, int(_bit_view_np(ft).nbytes)
+        _, frames, raw = get_codec("bitx").encode(
+            self.runtime, EncodeInput(data=ft, base=base))
+        return frames, raw
 
     def decode_delta(
         self, frames: Sequence[bytes], base: np.ndarray
     ) -> np.ndarray:
-        planes = [np.frombuffer(self._dctx.decompress(f), np.uint8) for f in frames]
-        return merge_planes_xor_np(planes, base)
+        planes = [np.frombuffer(self.runtime.decompress(f), np.uint8) for f in frames]
+        return self.runtime.backend.merge_planes_xor(planes, base)
 
     # -- ZipNN fallback (no base available, §4.4.3) ---------------------------
     def encode_planes(self, x: np.ndarray) -> Tuple[List[bytes], int]:
-        planes = byte_planes_np(x)
-        frames = [self._cctx.compress(p.tobytes()) for p in planes]
-        return frames, int(sum(p.nbytes for p in planes))
+        _, frames, raw = get_codec("zipnn").encode(self.runtime, EncodeInput(data=x))
+        return frames, raw
 
     def decode_planes(self, frames: Sequence[bytes], dtype_np: np.dtype, shape) -> np.ndarray:
-        nb = np.dtype(dtype_np).itemsize
-        assert len(frames) == nb
-        n = int(np.prod(shape)) if len(shape) else 1
-        raw = np.empty((n, nb), np.uint8)
-        for i, f in enumerate(frames):
-            raw[:, nb - 1 - i] = np.frombuffer(self._dctx.decompress(f), np.uint8)
-        return raw.reshape(-1).view(np.dtype(dtype_np).str).reshape(shape)
+        planes = [np.frombuffer(self.runtime.decompress(f), np.uint8) for f in frames]
+        return self.runtime.backend.merge_planes(planes, dtype_np, shape)
 
     # -- raw zstd (non-float / last resort) ----------------------------------
     def encode_raw(self, data: bytes) -> bytes:
-        return self._cctx.compress(data)
+        return self.runtime.compress(data)
 
     def decode_raw(self, frame: bytes) -> bytes:
-        return self._dctx.decompress(frame)
+        return self.runtime.decompress(frame)
 
     # -- stored (verbatim) ----------------------------------------------------
     @staticmethod
     def choose_raw_codec(data: bytes, frame: bytes) -> Tuple[str, bytes]:
-        """Entropy-stage decision for raw-kind tensors: keep the compressed
-        frame only when it actually shrank the input; otherwise store the
-        bytes VERBATIM under codec ``stored``. A stored frame is a contiguous
-        on-disk span of the original tensor bytes, which is what lets the
-        serving layer answer range requests with zero-copy ``os.sendfile``
-        straight out of the container file. The decision is a pure function
-        of (bytes, entropy backend), so the parallel/process engines stay
-        bit-identical to the serial path."""
-        if len(frame) < len(data):
-            return "raw", frame
-        return "stored", data
+        """Deprecated alias of :func:`repro.core.codecs.raw_or_stored`."""
+        return raw_or_stored(data, frame)
 
 
 class BitXWriter:
     """Streams TensorRecords + frames into a .bitx container."""
 
     def __init__(self, level: int = DEFAULT_ZSTD_LEVEL, file_metadata: Optional[Dict] = None,
-                 threads: int = 0):
-        self.codec = BitXCodec(level=level, threads=threads)
+                 threads: int = 0, backend=None):
+        self.codec = BitXCodec(level=level, threads=threads, backend=backend)
         self.records: List[TensorRecord] = []
         self.frames: List[bytes] = []
         self.file_metadata = dict(file_metadata or {})
@@ -345,11 +640,15 @@ class BitXReader:
     eagerly, frames are lazy zero-copy slices of the map
     (:meth:`frames_for` returns memoryviews), so resolving a single tensor
     out of a multi-GB container touches just that tensor's pages. A reader
-    is safe to share across decode worker threads (the codec keeps its
+    is safe to share across decode worker threads (the runtime keeps its
     zstd contexts thread-local); call :meth:`close` to drop the map.
+
+    ``runtime`` selects the entropy settings and array backend used for
+    decode (the store passes its own); the default is a numpy-backed
+    runtime at default settings — decode output is identical either way.
     """
 
-    def __init__(self, data):
+    def __init__(self, data, runtime: Optional[CodecRuntime] = None):
         view = memoryview(data)
         assert bytes(view[:8]) == MAGIC, "not a BitX container"
         (hlen,) = struct.unpack("<Q", view[8:16])
@@ -380,18 +679,19 @@ class BitXReader:
                 spans.append((off, off + s))
                 off += s
             self._offsets.append(spans)
-        self.codec = BitXCodec()
+        self.runtime = runtime if runtime is not None else CodecRuntime()
 
     @staticmethod
-    def open(path: str, use_mmap: bool = True) -> "BitXReader":
+    def open(path: str, use_mmap: bool = True,
+             runtime: Optional[CodecRuntime] = None) -> "BitXReader":
         if not use_mmap:
             with open(path, "rb") as f:
-                return BitXReader(f.read())
+                return BitXReader(f.read(), runtime=runtime)
         f = open(path, "rb")
         mm = None
         try:
             mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
-            reader = BitXReader(mm)  # may raise (bad magic, backend mismatch)
+            reader = BitXReader(mm, runtime=runtime)  # may raise (bad magic, backend mismatch)
         except Exception:
             if mm is not None:
                 try:
@@ -456,7 +756,8 @@ class BitXReader:
         return self.payload_offset + spans[0][0], spans[-1][1] - spans[0][0]
 
     def decode_tensor(self, idx: int, base_resolver, pool_resolver) -> np.ndarray:
-        """Decode record ``idx`` to its raw bit-view array.
+        """Decode record ``idx`` to its raw bit-view array via the codec
+        registry (an unknown stamped codec raises ``ValueError`` naming it).
 
         ``base_resolver(base_hash) -> np.ndarray`` and
         ``pool_resolver(self_hash) -> np.ndarray`` fetch dependencies (CAS pool).
@@ -464,21 +765,6 @@ class BitXReader:
         from repro.formats.safetensors import STR_TO_DTYPE
 
         r = self.records[idx]
-        np_dtype = STR_TO_DTYPE[r.dtype_str]
-        if r.codec == "dedup":
-            arr = pool_resolver(r.self_hash)
-            return np.frombuffer(arr, np_dtype).reshape(r.shape) if isinstance(arr, (bytes, memoryview)) else arr.reshape(r.shape)
-        frames = self.frames_for(idx)
-        if r.codec == "bitx":
-            base = base_resolver(r.base_hash)
-            if isinstance(base, (bytes, memoryview)):
-                base = np.frombuffer(base, np_dtype)
-            return self.codec.decode_delta(frames, base.reshape(-1)).reshape(r.shape)
-        if r.codec == "zipnn":
-            return self.codec.decode_planes(frames, np_dtype, r.shape)
-        if r.codec == "raw":
-            return np.frombuffer(self.codec.decode_raw(frames[0]), np_dtype).reshape(r.shape)
-        if r.codec == "stored":
-            # verbatim frame: the on-disk bytes ARE the tensor bytes
-            return np.frombuffer(frames[0], np_dtype).reshape(r.shape)
-        raise ValueError(f"unknown codec {r.codec}")
+        codec = get_codec(r.codec)
+        return codec.decode(self.runtime, r, self.frames_for(idx),
+                            STR_TO_DTYPE[r.dtype_str], base_resolver, pool_resolver)

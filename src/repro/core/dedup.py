@@ -12,6 +12,13 @@
 
 Each engine exposes ``scan_file`` returning (hits, misses) against its global
 index plus byte-accurate accounting, so the benchmarks can replay Table 5.
+
+Interplay with the device-batched encode path: dedup decisions run in the
+pipeline's *serial* decision stage, strictly before any codec work, and are
+pure functions of the tensor hashes — so they are identical no matter which
+``ArrayBackend`` the store was built with, and a dedup'd tensor never reaches
+the batched kernel launches at all (its record carries zero payload). The
+hash counts these engines report are therefore backend-invariant.
 """
 
 from __future__ import annotations

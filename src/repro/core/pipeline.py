@@ -33,8 +33,17 @@ thread pool; sha256, zstd/zlib and numpy's XOR all release the GIL):
   (tensor bytes, base bytes, zstd level/threads). A container written with
   ``workers=N`` is therefore *bit-identical* to the serial ``workers=0``
   container — verified by test. Worker threads get their own zstd contexts
-  (thread-local inside ``BitXCodec``); compressor objects are not
-  thread-safe and must never be shared mid-operation.
+  (thread-local inside ``repro.core.codecs.CodecRuntime``, each wrapped in
+  an owner-thread assertion); compressor objects are not thread-safe and
+  must never be shared mid-operation.
+* **Array backend:** XOR-delta and byte-plane math routes through the
+  ``ArrayBackend`` chosen at construction (``backend="numpy"|"jax"|"auto"``).
+  A batching backend (jax/Pallas) makes ``_plan_loop`` defer the array stage
+  of bitx/zipnn tensors into dtype-bucketed flushes — one fused kernel
+  launch per bucket — and ``_decode_container`` merge whole containers in
+  bucketed launches. The decision stage stays serial and the transforms are
+  elementwise, so containers are bit-identical to the numpy path (verified
+  by the backend-equivalence tests).
 * **Base-map cache:** registering a base *primes* a ``_BaseTensorMap``
   (name → dtype/shape/hash + lazy mmap loader) from hashes already computed
   during that base's own ingest, so ingesting N fine-tunes of one base
@@ -146,9 +155,9 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 import numpy as np
 
 from repro.core import zstd_compat as zstd
-from repro.core.bitx import (TMP_SUFFIX, BitXCodec, BitXReader, BitXWriter,
-                             byte_planes_np, xor_delta_planes_np)
+from repro.core.bitx import (TMP_SUFFIX, BitXReader, BitXWriter, get_backend)
 from repro.core.clustering import FamilyRegistry
+from repro.core.codecs import CodecRuntime, EncodeInput, get_codec, raw_or_stored
 from repro.core.dedup import FileDedup, TensorDedup, sha256_bytes, sha256_file
 from repro.core.lifecycle import ContainerLifecycle, FsckReport, make_vid
 from repro.formats.modelcard import parse_repo_metadata
@@ -237,6 +246,12 @@ _FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
 # the GIL above ~2 KB anyway). Big tensors dominate bytes, so this trims
 # per-task overhead without hurting parallel coverage.
 _PARALLEL_MIN_BYTES = 64 << 10
+
+# Device-batched encode (backends with ``supports_batching``): the plan loop
+# accumulates bitx/zipnn tensors and flushes once a batch holds this many raw
+# bytes, bounding the host copies of the concatenated bit views that feed the
+# fused kernel launches.
+_DEVICE_BATCH_MAX_BYTES = 256 << 20
 
 
 @dataclass
@@ -563,11 +578,18 @@ class ZLLMStore:
                  zstd_threads: int = 0, tensor_cache_bytes: int = 256 << 20,
                  reader_cache_size: int = 16, pipeline_depth: int = 2,
                  entropy_procs: int = 0,
-                 auto_compact: Optional[AutoCompactPolicy] = None):
+                 auto_compact: Optional[AutoCompactPolicy] = None,
+                 backend="auto"):
         self.root = root
         os.makedirs(os.path.join(root, "containers"), exist_ok=True)
         self.zstd_level = zstd_level
         self.zstd_threads = zstd_threads
+        # array backend for XOR-delta / byte-plane math ("numpy", "jax",
+        # "auto", or an ArrayBackend instance); one runtime shared by every
+        # encode/decode site so the zstd contexts stay per-thread in one place
+        self.backend = get_backend(backend)
+        self._codec_runtime = CodecRuntime(level=zstd_level, threads=zstd_threads,
+                                           backend=self.backend)
         self.use_bitx = use_bitx
         self.use_tensor_dedup = use_tensor_dedup
         self.workers = max(0, int(workers))
@@ -937,7 +959,8 @@ class ZLLMStore:
             res.base_id, res.base_source = base_id, base_source
             base_tensors = self._base_tensor_map(base_id) if base_id else {}
             gen = self.lifecycle.next_generation(key)
-            writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
+            writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads,
+                                backend=self.backend)
             plan = self._plan_tensors(sf, writer, res, key, gen, base_tensors,
                                       entries, get_hash)
             writer.file_metadata.update({
@@ -1295,6 +1318,13 @@ class ZLLMStore:
                    entries, get_hash, pool, epool,
                    plan: List[Tuple[Any, str, str, Optional[str], Any]]) -> None:
         infos = sf.infos
+        # device-batched lane (batching backends only): bitx/zipnn tensors
+        # get a placeholder Future in the plan and their array stage runs in
+        # dtype-bucketed fused launches at flush time; decisions (this loop)
+        # stay strictly serial either way, so containers are bit-identical
+        batching = self.backend.supports_batching
+        batch: List[Tuple[Future, str, Any, Any]] = []
+        batch_bytes = 0
         for i, ti in enumerate(infos):
             res.n_tensors += 1
             thash = get_hash(i)
@@ -1322,17 +1352,103 @@ class ZLLMStore:
                 else:
                     kind, base_hash, base_loader = "raw", None, None
                     res.n_raw += 1
-                job = self._encode_job(writer.codec, kind, sf, ti, base_loader,
-                                       epool)
-                payload = (pool.submit(job)
-                           if pool is not None and ti.nbytes >= _PARALLEL_MIN_BYTES
-                           else job())
+                if batching and kind in ("bitx", "zipnn"):
+                    payload: Any = Future()
+                    batch.append((payload, kind, ti, base_loader))
+                    batch_bytes += ti.nbytes
+                    if batch_bytes >= _DEVICE_BATCH_MAX_BYTES:
+                        self._flush_device_batch(sf, batch, pool, epool)
+                        batch, batch_bytes = [], 0
+                else:
+                    job = self._encode_job(self._codec_runtime, kind, sf, ti,
+                                           base_loader, epool)
+                    payload = (pool.submit(job)
+                               if pool is not None and ti.nbytes >= _PARALLEL_MIN_BYTES
+                               else job())
                 plan.append((ti, thash, kind, base_hash, payload))
             # first location wins: a base tensor's hash must keep pointing
             # at its standalone (zipnn/raw) record, never at a later BitX
             # record that references the same hash as ITS base (cycle).
             # Record index == tensor index (dedup entries are records too).
             self.tensor_locations.setdefault(thash, (key, gen, i))
+        if batch:
+            self._flush_device_batch(sf, batch, pool, epool)
+
+    def _flush_device_batch(self, sf, batch: List[Tuple[Future, str, Any, Any]],
+                            pool, epool) -> None:
+        """Run the array stage of the accumulated bitx/zipnn tensors in
+        dtype-bucketed fused kernel launches (one per bit-width bucket), then
+        fan the per-tensor entropy stage back out across the pool. Each
+        placeholder resolves to the same ``(codec, frames, raw_size)`` tuple
+        the unbatched encode job produces — the transforms are elementwise,
+        so the plane bytes (hence the container bytes) are identical."""
+        try:
+            arrs = [np.frombuffer(sf.tensor_bytes(ti.name),
+                                  STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
+                    for _, _, ti, _ in batch]
+            planes_of: List[Any] = [None] * len(batch)
+            xor_idx = [i for i, (_, kind, _, _) in enumerate(batch) if kind == "bitx"]
+            pln_idx = [i for i, (_, kind, _, _) in enumerate(batch) if kind == "zipnn"]
+            if xor_idx:
+                pairs = [(batch[i][3]().reshape(-1), arrs[i].reshape(-1))
+                         for i in xor_idx]
+                for i, planes in zip(xor_idx,
+                                     self.backend.xor_delta_planes_batch(pairs)):
+                    planes_of[i] = planes
+            if pln_idx:
+                split = self.backend.byte_planes_batch([arrs[i] for i in pln_idx])
+                for i, planes in zip(pln_idx, split):
+                    planes_of[i] = planes
+        except BaseException as e:
+            for fut, _, _, _ in batch:
+                if not fut.done():
+                    fut.set_exception(e)
+            raise
+        # entropy stage: planes are private copies (the kernel outputs), so
+        # these jobs never touch the source mmap and may outlive the plan
+        for (fut, kind, ti, _), arr, planes in zip(batch, arrs, planes_of):
+            job = self._entropy_job(kind, planes, int(arr.nbytes), epool)
+            if pool is not None and ti.nbytes >= _PARALLEL_MIN_BYTES:
+                self._chain_future(pool.submit(job), fut)
+            else:
+                try:
+                    result = job()
+                except BaseException as e:
+                    fut.set_exception(e)
+                    raise
+                if not fut.cancelled():
+                    fut.set_result(result)
+
+    def _entropy_job(self, kind: str, planes, raw_size: int,
+                     epool) -> Callable[[], Tuple[str, List[bytes], int]]:
+        runtime = self._codec_runtime
+        def entropy() -> Tuple[str, List[bytes], int]:
+            if epool is not None:
+                return kind, self._entropy_frames(
+                    epool, [p.tobytes() for p in planes]), raw_size
+            return get_codec(kind).encode(
+                runtime, EncodeInput(planes=planes, raw_size=raw_size))
+        return entropy
+
+    @staticmethod
+    def _chain_future(src: Future, dst: Future) -> None:
+        """Forward ``src``'s outcome into the plan's placeholder ``dst``.
+        The placeholder may already be cancelled by the abort drain in
+        :meth:`_plan_tensors`; dropping the result there is correct (the
+        whole plan is doomed and the job touched no shared state)."""
+        def _done(f: Future) -> None:
+            try:
+                if f.cancelled():
+                    dst.cancel()
+                    return
+                e = f.exception()
+                if e is not None:
+                    dst.set_exception(e)
+                else:
+                    dst.set_result(f.result())
+            except Exception:
+                pass  # placeholder already resolved/cancelled
+        src.add_done_callback(_done)
 
     @staticmethod
     def _merge_plan(writer: BitXWriter, plan: List[Tuple]) -> None:
@@ -1349,45 +1465,44 @@ class ZLLMStore:
                 writer.add_precomputed(ti.name, ti.dtype_str, ti.shape, codec,
                                        base_hash, thash, frames, raw)
 
-    def _encode_job(self, codec: BitXCodec, kind: str, sf: SafetensorsFile, ti,
-                    base_loader, epool) -> Callable[[], Tuple[str, List[bytes], int]]:
-        """Closure encoding one tensor; safe to run on any worker thread
-        (codec contexts are thread-local, sf/base reads are mmap slices).
-        Returns ``(final codec, frames, raw size)`` — raw-kind tensors are
-        downgraded to ``stored`` when compression would grow them
-        (``BitXCodec.choose_raw_codec``), a pure function of (bytes,
-        backend), so every engine emits identical containers. With the
-        opt-in process entropy backend the numpy stages (XOR, plane split)
-        stay on the calling thread and only the entropy stage ships to a
-        child process — the frames are identical either way."""
+    def _encode_job(self, runtime: CodecRuntime, kind: str, sf: SafetensorsFile,
+                    ti, base_loader,
+                    epool) -> Callable[[], Tuple[str, List[bytes], int]]:
+        """Closure encoding one tensor via the codec registry; safe to run on
+        any worker thread (the runtime's zstd contexts are thread-local,
+        sf/base reads are mmap slices). Returns ``(final codec, frames, raw
+        size)`` — raw-kind tensors are downgraded to ``stored`` when
+        compression would grow them (``repro.core.codecs.raw_or_stored``), a
+        pure function of (bytes, backend), so every engine emits identical
+        containers. With the opt-in process entropy backend the array stages
+        (XOR, plane split) stay on the calling thread and only the entropy
+        stage ships to a child process — the frames are identical either
+        way."""
         def encode() -> Tuple[str, List[bytes], int]:
             raw = sf.tensor_bytes(ti.name)
             if kind == "raw":
                 data = bytes(raw)
                 if epool is not None:
                     frame = self._entropy_frames(epool, [data])[0]
-                else:
-                    frame = codec.encode_raw(data)
-                final, payload = BitXCodec.choose_raw_codec(data, frame)
-                return final, [payload], len(data)
+                    final, payload = raw_or_stored(data, frame)
+                    return final, [payload], len(data)
+                return get_codec("raw").encode(runtime, EncodeInput(data=data))
             arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
             if kind == "bitx":
                 base_arr = base_loader()
                 if epool is not None:
-                    planes = xor_delta_planes_np(base_arr.reshape(-1),
-                                                 arr.reshape(-1))
+                    planes = runtime.backend.xor_delta_planes(
+                        base_arr.reshape(-1), arr.reshape(-1))
                     return kind, self._entropy_frames(
                         epool, [p.tobytes() for p in planes]), int(arr.nbytes)
-                frames, raw_size = codec.encode_delta(base_arr.reshape(-1),
-                                                      arr.reshape(-1))
-                return kind, frames, raw_size
+                return get_codec("bitx").encode(
+                    runtime, EncodeInput(data=arr, base=base_arr))
             if epool is not None:
-                planes = byte_planes_np(arr)
+                planes = runtime.backend.byte_planes(arr)
                 return (kind,
                         self._entropy_frames(epool, [p.tobytes() for p in planes]),
                         int(arr.nbytes))
-            frames, raw_size = codec.encode_planes(arr)
-            return kind, frames, raw_size
+            return get_codec("zipnn").encode(runtime, EncodeInput(data=arr))
         return encode
 
     def _entropy_frames(self, epool: ProcessPoolExecutor,
@@ -1767,7 +1882,7 @@ class ZLLMStore:
             if handle is not None:
                 handle.pins += 1
                 return handle
-        reader = BitXReader.open(cpath)  # slow path outside the lock
+        reader = BitXReader.open(cpath, runtime=self._codec_runtime)  # slow path outside the lock
         with self._cache_lock:
             handle = self._reader_cache.get(cpath)
             if handle is None:
@@ -1988,13 +2103,64 @@ class ZLLMStore:
             n = len(reader.records)
             pool = self._executor()
             n_big = sum(1 for r in reader.records if r.raw_size >= _PARALLEL_MIN_BYTES)
-            if pool is not None and n_big > 1:
+            if self.backend.supports_batching and n > 0:
+                # device fan-out: entropy-decode planes across the pool, then
+                # merge every bitx/zipnn record in bucketed fused launches
+                chunks = self._decode_records_batched(reader)
+            elif pool is not None and n_big > 1:
                 # workers never re-enter the pool (dependency resolution decodes
                 # inline), so mapping from the ingest pool cannot deadlock
                 chunks = list(pool.map(decode, range(n)))
             else:
                 chunks = [decode(i) for i in range(n)]
             return b"".join([header_blob] + chunks)
+
+    def _decode_records_batched(self, reader: BitXReader) -> List[bytes]:
+        """Decode a whole container with the array stage bucketed into fused
+        device launches: plane frames entropy-decode across the pool
+        (order-preserving map), bases resolve serially, then ONE
+        ``merge_planes_xor_batch`` / ``merge_planes_batch`` call covers every
+        bitx / zipnn record; the remaining codecs decode per-record. The
+        merges are elementwise, so the output bytes are identical to the
+        per-record path."""
+        rt = self._codec_runtime
+        records = reader.records
+        out: List[Optional[bytes]] = [None] * len(records)
+        bitx_idx = [i for i, r in enumerate(records) if r.codec == "bitx"]
+        zip_idx = [i for i, r in enumerate(records) if r.codec == "zipnn"]
+
+        def planes_for(i: int) -> List[np.ndarray]:
+            return [np.frombuffer(rt.decompress(bytes(f)), np.uint8)
+                    for f in reader.frames_for(i)]
+
+        idxs = bitx_idx + zip_idx
+        pool = self._executor()
+        if pool is not None and len(idxs) > 1:
+            planes_of = dict(zip(idxs, pool.map(planes_for, idxs)))
+        else:
+            planes_of = {i: planes_for(i) for i in idxs}
+        resolver = self._resolve_tensor_hash
+        if bitx_idx:
+            items = []
+            for i in bitx_idx:
+                base = resolver(records[i].base_hash)
+                if isinstance(base, (bytes, memoryview)):
+                    base = np.frombuffer(base, STR_TO_DTYPE[records[i].dtype_str])
+                items.append((planes_of[i], base.reshape(-1)))
+            for i, merged in zip(bitx_idx,
+                                 self.backend.merge_planes_xor_batch(items)):
+                out[i] = np.ascontiguousarray(
+                    merged.reshape(records[i].shape)).tobytes()
+        if zip_idx:
+            items = [(planes_of[i], STR_TO_DTYPE[records[i].dtype_str],
+                      records[i].shape) for i in zip_idx]
+            for i, merged in zip(zip_idx, self.backend.merge_planes_batch(items)):
+                out[i] = np.ascontiguousarray(merged).tobytes()
+        for i in range(len(records)):
+            if out[i] is None:  # dedup / raw / stored
+                arr = reader.decode_tensor(i, resolver, resolver)
+                out[i] = np.ascontiguousarray(arr).tobytes()
+        return out
 
     def _resolve_tensor_hash(self, thash: str, _depth: int = 0) -> np.ndarray:
         """Fetch a tensor from the pool by content hash (dedup/bitx deps),
@@ -2657,7 +2823,8 @@ class ZLLMStore:
                            key=lambda kv: (make_vid(kv[1][0], kv[1][1]), kv[1][2]))
             gen = self.lifecycle.next_generation(COMPACT_KEY)
             cpath = self._container_path(COMPACT_KEY, gen)
-            writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads)
+            writer = BitXWriter(level=self.zstd_level, threads=self.zstd_threads,
+                                backend=self.backend)
             writer.file_metadata.update({
                 "compact": True,
                 "sources": sorted({make_vid(k, g)
@@ -3177,6 +3344,7 @@ class ZLLMStore:
     # ------------------------------------------------------------------
     def summary(self) -> Dict:
         return {
+            "array_backend": self.backend.name,
             "n_files": self.stats.n_files,
             "raw_bytes": self.stats.raw_bytes,
             "stored_bytes": self.stats.stored_bytes,

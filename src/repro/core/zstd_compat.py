@@ -21,8 +21,9 @@ a container written by a backend other than the active one.
 Thread-safety contract (identical for both backends): compressor and
 decompressor *objects* must not be shared across threads mid-operation —
 the storage layer gives each worker thread its own contexts
-(`BitXCodec` holds them in thread-local storage). The module-level
-classes themselves are safe to construct from any thread.
+(`repro.core.codecs.CodecRuntime` holds them in thread-local storage and
+asserts owner-thread on every use). The module-level classes themselves
+are safe to construct from any thread.
 """
 
 from __future__ import annotations

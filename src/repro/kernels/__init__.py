@@ -12,4 +12,13 @@ Each kernel pairs with a pure-jnp oracle in ``ref.py``; ``ops.py`` is the
 public jit'd API. On non-TPU backends kernels run in interpret mode; tests
 sweep shapes/dtypes asserting exact (bit ops) or tight-tolerance (attention)
 agreement with the oracles.
+
+These kernels are LIVE in the storage pipeline: the jax ``ArrayBackend``
+(``repro.core.bitx.JaxBackend``, selected via ``ZLLMStore(backend="jax")``
+or ``"auto"`` on accelerator hosts) routes the pipeline's encode stage and
+decode fan-out through ``ops.bitx_encode_planes`` / ``bitx_decode_planes`` /
+``zipnn_split_planes`` / ``zipnn_merge_planes``, concatenating same-width
+tensors so each dtype bucket costs one fused launch. Containers stay
+bit-identical to the numpy host path (test-enforced), so the kernels are a
+pure throughput substitution.
 """

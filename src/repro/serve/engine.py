@@ -57,17 +57,35 @@ class ServeEngine:
     def from_store(cls, store, repo_id: str, filename: str, cfg: ArchConfig,
                    mesh=None, rules: Optional[ShardingRules] = None,
                    param_prefix: str = "params/") -> "ServeEngine":
-        """Cold start from the compressed store: BitX-decode, verify, shard."""
+        """Cold start from the compressed store: BitX-decode, verify, shard.
+
+        The decode fan-out inside ``retrieve_file`` runs on the store's
+        configured ``ArrayBackend`` — with ``backend="jax"`` the byte-plane
+        merges of the whole checkpoint execute as dtype-bucketed fused
+        kernel launches instead of per-tensor numpy loops, so the cold-start
+        decode rides the same accelerator the params are about to land on.
+        The reconstructed bytes are backend-independent (bit-identity is
+        test-enforced), so the spool file below is too.
+        """
         import io
+        import os
+        import tempfile
         import ml_dtypes
         from repro.formats import safetensors as st
 
         data = store.retrieve_file(repo_id, filename, verify=True)
-        tmp = f"/tmp/serve-{abs(hash((repo_id, filename)))}.safetensors"
-        with open(tmp, "wb") as f:
-            f.write(data)
-        flat = st.load_file(tmp)
-        infos, _, _ = st.read_header(tmp)
+        # spool to a private temp file (mkstemp, not a guessable name) so the
+        # safetensors mmap loader can do its zero-copy thing, and always
+        # unlink it — a whole checkpoint must not leak into /tmp per cold
+        # start (load_file materializes the arrays before we return)
+        fd, tmp = tempfile.mkstemp(prefix="serve-", suffix=".safetensors")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            flat = st.load_file(tmp)
+            infos, _, _ = st.read_header(tmp)
+        finally:
+            os.unlink(tmp)
         tags = {ti.name: ti.dtype_str for ti in infos}
         params = {}
         for k, v in flat.items():

@@ -1,0 +1,181 @@
+"""Codec registry + CodecRuntime contract tests (satellites of the
+backend/registry redesign): registration semantics, the loud unknown-codec
+failure, the thread-guarded zstd contexts, and the one-release deprecation
+shims over the old free functions."""
+
+import threading
+import warnings
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import codecs
+from repro.core.bitx import BitXCodec, BitXReader, BitXWriter, get_backend
+from repro.core.codecs import (CodecRuntime, EncodeInput, get_codec,
+                               raw_or_stored, register_codec,
+                               registered_codecs)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+def test_builtin_codecs_registered():
+    assert registered_codecs() == ("bitx", "dedup", "raw", "stored", "zipnn")
+
+
+def test_unknown_codec_raises_naming_it():
+    with pytest.raises(ValueError) as ei:
+        get_codec("huffllm-v2")
+    msg = str(ei.value)
+    assert "huffllm-v2" in msg
+    # the error lists what IS registered, so the operator can tell a typo
+    # from a newer-build container
+    assert "bitx" in msg and "zipnn" in msg
+
+
+def test_register_duplicate_rejected_unless_replace():
+    enc = lambda rt, inp: ("bitx", [], 0)
+    dec = lambda rt, r, frames, d, br, pr: np.empty(0)
+    with pytest.raises(ValueError, match="already registered"):
+        register_codec("bitx", enc, dec)
+    # replace=True is the escape hatch; restore the original right away
+    orig = get_codec("bitx")
+    try:
+        register_codec("bitx", enc, dec, replace=True)
+        assert get_codec("bitx").encode is enc
+    finally:
+        register_codec("bitx", orig.encode, orig.decode, replace=True)
+
+
+def test_unknown_stamped_codec_on_load_raises(tmp_path):
+    """A container stamped with a codec this build doesn't know must fail
+    loudly at decode, naming the codec — never silently mis-decode."""
+    rng = np.random.default_rng(3)
+    x = rng.random((64,), np.float32)
+    w = BitXWriter()
+    w.add_zipnn("t0", "F32", (64,), x, "sh")
+    path = str(tmp_path / "c.bitx")
+    w.write(path)
+    r = BitXReader.open(path)
+    try:
+        r.records[0].codec = "from-the-future"
+        with pytest.raises(ValueError, match="from-the-future"):
+            r.decode_tensor(0, None, None)
+    finally:
+        r.close()
+
+
+def test_raw_or_stored_downgrade():
+    incompressible = bytes(np.random.default_rng(0).integers(0, 256, 64, np.uint8))
+    assert raw_or_stored(incompressible, incompressible + b"x") == ("stored", incompressible)
+    assert raw_or_stored(b"a" * 100, b"frame") == ("raw", b"frame")
+
+
+def test_encode_planes_shortcircuit_matches_full():
+    """The device-batched path hands pre-split planes to the codec; frames
+    must equal the codec splitting the planes itself."""
+    rt = CodecRuntime()
+    rng = np.random.default_rng(5)
+    x = rng.random((129,), np.float32)
+    _, full, raw_full = get_codec("zipnn").encode(rt, EncodeInput(data=x))
+    planes = rt.backend.byte_planes(x)
+    _, pre, raw_pre = get_codec("zipnn").encode(
+        rt, EncodeInput(planes=planes, raw_size=int(x.nbytes)))
+    assert full == pre and raw_full == raw_pre == x.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Thread-guarded zstd contexts (the small-fix satellite)
+# ---------------------------------------------------------------------------
+
+def test_ctx_used_from_owner_thread_ok():
+    rt = CodecRuntime()
+    ctx = rt._compressor()
+    assert ctx.compress(b"hello" * 100)  # same thread: fine
+
+
+def test_ctx_smuggled_across_threads_asserts():
+    """Grabbing a raw context object on one thread and using it from another
+    must trip the owner assertion — the exact bug class the runtime exists
+    to prevent (zstd contexts are not thread-safe)."""
+    rt = CodecRuntime()
+    ctx = rt._compressor()  # materialized on THIS thread
+    err: list = []
+
+    def smuggle():
+        try:
+            ctx.compress(b"x" * 64)
+        except BaseException as e:  # AssertionError
+            err.append(e)
+
+    t = threading.Thread(target=smuggle)
+    t.start()
+    t.join()
+    assert len(err) == 1 and isinstance(err[0], AssertionError)
+    assert "not thread-safe" in str(err[0])
+
+
+def test_runtime_contexts_are_per_thread():
+    """Going through runtime.compress from N threads hands each thread its
+    own context (distinct guard objects), and the frames stay identical to
+    serial — per-thread contexts never change the bytes."""
+    rt = CodecRuntime()
+    blob = bytes(np.random.default_rng(1).integers(0, 4, 4096, np.uint8))
+    serial = rt.compress(blob)
+    guards = {}
+    lock = threading.Lock()
+
+    def work(_):
+        frame = rt.compress(blob)
+        with lock:
+            guards[threading.get_ident()] = rt._compressor()
+        return frame
+
+    with ThreadPoolExecutor(4) as ex:
+        frames = list(ex.map(work, range(16)))
+    assert all(f == serial for f in frames)
+    assert len(set(id(g) for g in guards.values())) == len(guards) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims + facade
+# ---------------------------------------------------------------------------
+
+def test_free_function_shims_warn_and_match_backend():
+    from repro.core import bitx
+    nb = get_backend("numpy")
+    rng = np.random.default_rng(2)
+    base = rng.random((33,), np.float32)
+    ft = base + rng.random((33,), np.float32) * 1e-3
+    with warnings.catch_warnings(record=True) as wl:
+        warnings.simplefilter("always")
+        planes = bitx.xor_delta_planes_np(base, ft)
+        merged = bitx.merge_planes_xor_np(planes, base)
+        split = bitx.byte_planes_np(ft)
+    assert [w for w in wl if issubclass(w.category, DeprecationWarning)], \
+        "shims must emit DeprecationWarning"
+    ref = nb.xor_delta_planes(base, ft)
+    assert all((a == b).all() for a, b in zip(planes, ref))
+    assert (merged == nb.merge_planes_xor(ref, base)).all()
+    assert all((a == b).all() for a, b in zip(split, nb.byte_planes(ft)))
+
+
+def test_bitx_codec_facade_roundtrip():
+    """The retained BitXCodec class must keep working through the registry
+    for one release (external callers)."""
+    rng = np.random.default_rng(7)
+    base = rng.random((301,), np.float32)
+    ft = base + rng.random((301,), np.float32) * 1e-4
+    c = BitXCodec(level=3, threads=2)
+    assert c.level == 3 and c.threads == 2
+    frames, raw = c.encode_delta(base, ft)
+    assert raw == ft.nbytes
+    assert (c.decode_delta(frames, base) == ft.view(np.uint32)).all()
+    frames, raw = c.encode_planes(ft)
+    out = c.decode_planes(frames, np.dtype("<f4"), ft.shape)
+    assert out.dtype == np.dtype("<f4") and (out == ft).all()
+    data = b"\x00" * 500
+    assert c.decode_raw(c.encode_raw(data)) == data
+    assert BitXCodec.choose_raw_codec(data, b"tiny") == ("raw", b"tiny")
