@@ -42,15 +42,14 @@ def _bit_position_fractions(a: np.ndarray, b: np.ndarray) -> list:
 
 def run(ctx: Ctx) -> dict:
     bases = [rid for rid, k in ctx.manifest if k == "base"]
-    fts = {}
-    for rid, k in ctx.manifest:
-        if k == "finetune":
-            fam = rid.split("-")[-2][-1] if False else rid
-            fts.setdefault(rid.split("/")[0][4], []).append(rid)  # userN-... -> family N
+    # a fine-tune of the FIRST base's family, by generator ground truth
+    fam0 = ctx.families[bases[0]]
+    ft0 = next(rid for rid, k in ctx.manifest
+               if k == "finetune" and ctx.families[rid] == fam0)
 
-    b0 = _flat_floats(ctx.model_file(bases[0]))
-    b1 = _flat_floats(ctx.model_file(bases[1]))
-    ft_fam0 = _flat_floats(ctx.model_file(fts["0"][0]))
+    b0 = _flat_floats(ctx.primary_file(bases[0]))
+    b1 = _flat_floats(ctx.primary_file(bases[1]))
+    ft_fam0 = _flat_floats(ctx.primary_file(ft0))
 
     f32 = lambda u16: u16.view(ml_dtypes.bfloat16).astype(np.float32)
     delta_within = f32(ft_fam0) - f32(b0)

@@ -15,13 +15,14 @@ from repro.core.clustering import pairwise_bit_distances
 
 def run(ctx: Ctx) -> dict:
     # ---------- Fig 4: clustering over full-weight repos -------------------
+    # Ground-truth family labels come from the corpus generator's
+    # families.json (ctx.families) — not parsed back out of repo-id naming,
+    # which breaks for >=10 families and arch-named hub repos.
     paths, fam_labels = [], []
     for rid, kind in ctx.manifest:
         if kind in ("base", "finetune", "checkpoint", "reupload"):
-            paths.append(ctx.model_file(rid))
-            # family id is encoded in the repo naming convention of the corpus
-            digits = [c for c in rid.split("/")[0] if c.isdigit()]
-            fam_labels.append(digits[0] if digits else "?")
+            paths.append(ctx.primary_file(rid))
+            fam_labels.append(ctx.families[rid])
     D = pairwise_bit_distances(paths, sample_elems=32768)
     n = len(paths)
 

@@ -14,24 +14,21 @@ from repro.formats.safetensors import SafetensorsFile
 def _per_model_ratios(ctx: Ctx):
     codec = BitXCodec()
     zc = zstd.ZstdCompressor(level=3)
+    # base file per family, by generator ground truth (ctx.families)
     base_files = {}
     for rid, kind in ctx.manifest:
         if kind == "base":
-            fam = rid.split("/")[0][-1]
-            base_files[fam] = ctx.model_file(rid)
+            base_files[ctx.families[rid]] = ctx.primary_file(rid)
 
     ratios = {"bitx": [], "zipnn": [], "zstd": []}
     for rid, kind in ctx.manifest:
         if kind not in ("finetune", "checkpoint", "vocab_expanded"):
             continue
-        fam = None
-        for f in base_files:
-            if f"user{f}" in rid or f"run{f}" in rid:
-                fam = f
-        if fam is None:
+        fam = ctx.families.get(rid)
+        if fam not in base_files:
             continue
         raw = comp_bitx = comp_zipnn = comp_zstd = 0
-        with SafetensorsFile(ctx.model_file(rid)) as sf, \
+        with SafetensorsFile(ctx.primary_file(rid)) as sf, \
              SafetensorsFile(base_files[fam]) as bf:
             base_by_name = {ti.name: ti for ti in bf.infos}
             for ti in sf.infos:

@@ -20,7 +20,8 @@ HF_SCALE_BYTES = 45e15  # 45 PB hosted (paper §5.3.1)
 def _scan(engine, ctx: Ctx):
     with Timer() as t:
         for rid, _ in ctx.manifest:
-            engine.scan_file(ctx.model_file(rid), rid)
+            for p in ctx.repo_files(rid):
+                engine.scan_file(p, rid)
     return t.seconds
 
 

@@ -32,9 +32,9 @@ def run(ctx: Ctx) -> dict:
     curves = {"model_count": [], "file_dedup": [], "chunk_dedup": [],
               "zipnn_filededup": [], "zllm": []}
     for i, (rid, kind) in enumerate(order):
-        p = ctx.model_file(rid)
-        fd.scan_file(p, rid)
-        cd.scan_file(p, rid)
+        for p in ctx.repo_files(rid):
+            fd.scan_file(p, rid)
+            cd.scan_file(p, rid)
         s_zipnn.ingest_repo(ctx.repo_path(rid), rid)
         s_zllm.ingest_repo(ctx.repo_path(rid), rid)
         if (i + 1) % max(1, len(order) // 12) == 0 or i == len(order) - 1:

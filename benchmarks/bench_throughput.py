@@ -39,6 +39,46 @@ def _mbps(nbytes: int, secs: float) -> float:
     return round(nbytes / 2**20 / secs, 1) if secs > 0 else float("inf")
 
 
+def _retrieve_all(ctx: Ctx, store) -> None:
+    """Retrieve every weight file of every repo (sharded repos have several)."""
+    for rid, _ in ctx.manifest:
+        for path in ctx.repo_files(rid):
+            store.retrieve_file(rid, os.path.basename(path), verify=False)
+
+
+def family_scoring(ctx: Ctx, store) -> dict:
+    """The CI-gated accuracy/efficiency figures the synthetic hub's ground
+    truth makes scorable (flattened to ``zllm.cluster.family_f1`` and
+    ``zllm.reduction.ratio``):
+
+    * ``cluster.family_f1`` — pairwise F1 of bit-distance clustering against
+      ``families.json``, scored over the full-weight same-signature kinds
+      (base / finetune / reupload / checkpoint). Vocab-expanded and
+      quantized variants are excluded by design: they cross the shape or
+      dtype signature, which defeats bit-distance on purpose — the store
+      reaches them via declared metadata instead (see docs/EVALUATION.md).
+    * ``reduction.ratio`` — the end-to-end stored-bytes reduction of the
+      full pipeline over the whole corpus (the paper's headline ~54%
+      hub-wide figure, scaled to the synthetic tier).
+    """
+    from repro.core.clustering import score_family_clustering
+    from repro.core.bitdistance import DEFAULT_THRESHOLD
+
+    kinds = {"base", "finetune", "reupload", "checkpoint"}
+    scored = [(ctx.primary_file(rid), ctx.families[rid])
+              for rid, kind in ctx.manifest if kind in kinds]
+    paths, labels = zip(*scored)
+    s = score_family_clustering(paths, labels)
+    return {
+        "cluster": {"family_f1": s["f1"], "family_precision": s["precision"],
+                    "family_recall": s["recall"],
+                    "pair_accuracy": s["accuracy"],
+                    "n_models": s["n_models"], "n_clusters": s["n_clusters"],
+                    "threshold_bits_per_elem": DEFAULT_THRESHOLD},
+        "reduction": {"ratio": round(store.stats.reduction_ratio, 4)},
+    }
+
+
 def _thread_ceiling(n_threads: int, blob_kb: int = 512, reps: int = 48) -> float:
     """Measured speedup of pure GIL-releasing compression jobs across
     ``n_threads`` — the hardware ceiling any threaded engine can reach on
@@ -78,8 +118,7 @@ def workers_sweep(ctx: Ctx, workers=(1, 4)) -> dict:
             for rid, _ in ctx.manifest:
                 store.ingest_repo(ctx.repo_path(rid), rid)
         with Timer() as t_out:
-            for rid, _ in ctx.manifest:
-                store.retrieve_file(rid, "model.safetensors", verify=False)
+            _retrieve_all(ctx, store)
         out[f"workers_{w}"] = {
             "ingest_MBps": _mbps(total, t_in.seconds),
             "retrieve_MBps": _mbps(total, t_out.seconds),
@@ -103,13 +142,15 @@ def workers_sweep(ctx: Ctx, workers=(1, 4)) -> dict:
         store.ingest_repos([(ctx.repo_path(rid), rid)
                             for rid, _ in ctx.manifest])
     with Timer() as t_out:
-        for rid, _ in ctx.manifest:
-            store.retrieve_file(rid, "model.safetensors", verify=False)
+        _retrieve_all(ctx, store)
     out["pipelined"] = {
         "ingest_MBps": _mbps(total, t_in.seconds),
         "retrieve_MBps": _mbps(total, t_out.seconds),
         "reduction_ratio": round(store.stats.reduction_ratio, 4),
     }
+    # scored family-accuracy + end-to-end reduction (CI-gated): computed on
+    # the pipelined store, the same one the serving benches front
+    out.update(family_scoring(ctx, store))
     store.save_index()
     store.close()
 
@@ -126,8 +167,7 @@ def workers_sweep(ctx: Ctx, workers=(1, 4)) -> dict:
         for rid, _ in ctx.manifest:
             store.ingest_repo(ctx.repo_path(rid), rid)
     with Timer() as t_out:
-        for rid, _ in ctx.manifest:
-            store.retrieve_file(rid, "model.safetensors", verify=False)
+        _retrieve_all(ctx, store)
     out["ingest"] = {
         "array_backend": store.backend.name,
         "device_batched_MBps": _mbps(total, t_in.seconds),
@@ -158,9 +198,9 @@ def two_upload_overlap(ctx: Ctx, workers: int = 4, repeats: int = 5) -> dict:
     deferred container write under B's decisions; best-of-``repeats`` on
     both sides to cut scheduler noise."""
     picks = sorted(ctx.manifest,
-                   key=lambda m: os.path.getsize(ctx.model_file(m[0])),
+                   key=lambda m: os.path.getsize(ctx.primary_file(m[0])),
                    reverse=True)[:2]
-    uploads = [(ctx.model_file(rid), rid) for rid, _ in picks]
+    uploads = [(ctx.primary_file(rid), rid) for rid, _ in picks]
     nbytes = sum(os.path.getsize(p) for p, _ in uploads)
     best_serial, serial_parts, best_wall = float("inf"), None, float("inf")
     for _ in range(repeats):
@@ -256,13 +296,14 @@ def http_serving_bench(ctx: Ctx, store_root: str, small_reqs: int = 300,
     store = ZLLMStore(store_root, workers=2)
     assert store.load_index(), f"no index under {store_root}"
     target = max((rid for rid, _ in ctx.manifest),
-                 key=lambda rid: os.path.getsize(ctx.model_file(rid)))
-    size = os.path.getsize(ctx.model_file(target))
+                 key=lambda rid: os.path.getsize(ctx.primary_file(rid)))
+    target_file = os.path.basename(ctx.primary_file(target))
+    size = os.path.getsize(ctx.primary_file(target))
     out: dict = {}
     try:
         with ServerThread(store, max_concurrency=4) as srv:
             conn = http.client.HTTPConnection(srv.host, srv.port, timeout=60)
-            path = f"/repo/{target}/file/model.safetensors"
+            path = f"/repo/{target}/file/{target_file}"
 
             def ranged(lo: int, hi: int) -> int:  # [lo, hi) -> bytes served
                 conn.request("GET", path,
@@ -317,7 +358,7 @@ def compaction_bench(ctx: Ctx, workers: int = 2) -> dict:
             store.ingest_repo(ctx.repo_path(rid), rid)
         base_rid = next(rid for rid, kind in ctx.manifest if kind == "base")
         prev = os.path.join(scratch, "g0", "model.safetensors")
-        chain_copy(ctx.model_file(base_rid), prev, seed=31, residue=None)
+        chain_copy(ctx.primary_file(base_rid), prev, seed=31, residue=None)
         store.ingest_file(prev, "bench-compact/base")
         for r in range(3):
             p = os.path.join(scratch, f"g{r + 1}", "model.safetensors")
@@ -385,7 +426,8 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
     frames = []
     with Timer() as t_in:
         for rid, _ in ctx.manifest:
-            frames.append(c.compress(open(ctx.model_file(rid), "rb").read()))
+            for path in ctx.repo_files(rid):
+                frames.append(c.compress(open(path, "rb").read()))
     with Timer() as t_out:
         for f in frames:
             d.decompress(f)
@@ -397,7 +439,8 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
     cd = ChunkDedup(FastCDC(min_size=4096, avg_size=16384, max_size=65536))
     with Timer() as t_cdc:
         for rid, _ in ctx.manifest:
-            cd.scan_file(ctx.model_file(rid))
+            for path in ctx.repo_files(rid):
+                cd.scan_file(path)
     out["hf_fastcdc"] = {"ingest_MBps": _mbps(total, t_cdc.seconds),
                          "retrieve_MBps": "line-rate",
                          "reduction_ratio": round(cd.stats.reduction_ratio, 4)}
@@ -410,8 +453,7 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
         for rid, _ in ctx.manifest:
             s_zipnn.ingest_repo(ctx.repo_path(rid), rid)
     with Timer() as t_out:
-        for rid, _ in ctx.manifest:
-            s_zipnn.retrieve_file(rid, "model.safetensors", verify=False)
+        _retrieve_all(ctx, s_zipnn)
     out["zipnn_filededup"] = {"ingest_MBps": _mbps(total, t_in.seconds),
                               "retrieve_MBps": _mbps(total, t_out.seconds),
                               "reduction_ratio": round(s_zipnn.stats.reduction_ratio, 4)}
@@ -451,9 +493,11 @@ def main() -> None:
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scale", default="default",
-                    choices=["tiny", "small", "default", "large"])
+                    choices=["tiny", "small", "default", "large", "hub"])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: seconds-scale corpus (alias for --scale tiny)")
+    ap.add_argument("--hub-scale", action="store_true",
+                    help="paper-§4.2-shaped hub tier (alias for --scale hub)")
     def workers_list(text: str):
         try:
             out = tuple(int(w) for w in text.split(","))
@@ -467,7 +511,7 @@ def main() -> None:
     ap.add_argument("--workers", default=(1, 4), type=workers_list,
                     help="comma-separated worker counts; first entry is the serial reference")
     args = ap.parse_args()
-    scale = "tiny" if args.tiny else args.scale
+    scale = "tiny" if args.tiny else "hub" if args.hub_scale else args.scale
     emit("throughput", run(build_ctx(scale), args.workers))
 
 

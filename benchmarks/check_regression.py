@@ -46,11 +46,20 @@ from typing import Dict, List, Tuple
 # means the numpy fallback regressed, on an accelerator host it means the
 # batched device path did. All warn-on-missing like every other key, so a
 # baseline predating them never hard-fails CI.
+# cluster.family_f1 / reduction.ratio are ACCURACY gates, not throughput:
+# family_f1 is the pairwise F1 of bit-distance clustering against the
+# synthetic hub's emitted ground truth (families.json), reduction.ratio the
+# end-to-end stored-bytes reduction of the zLLM store on that corpus. A drop
+# means the clustering threshold/prefilter or a codec lane (bitx / bitxq /
+# dedup) regressed. Both suffixes are DOTTED on purpose: endswith-matching a
+# bare "ratio"/"f1" would accidentally gate unrelated keys like
+# zstd.reduction_ratio or compaction_reclaim_ratio.
 GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
                   "compaction_reclaimed_bytes", "keepalive_reqs_per_s",
                   "range_read_MBps", "failover_read_MBps",
                   "xor_split_MBps", "merge_xor_MBps", "byte_planes_MBps",
-                  "device_batched_MBps")
+                  "device_batched_MBps",
+                  "cluster.family_f1", "reduction.ratio")
 
 # Lower-is-better keys: fail when the FRESH value RISES past
 # baseline * (1 + max_rise). Pause times are noisy (scheduler, shared

@@ -58,12 +58,26 @@ class Ctx:
     corpus_root: str
     manifest: List[Tuple[str, str]]
     spec: CorpusSpec
+    families: Dict[str, str] = None  # ground truth: repo_id -> family label
 
     def repo_path(self, rid: str) -> str:
         return os.path.join(self.corpus_root, rid)
 
     def model_file(self, rid: str) -> str:
         return os.path.join(self.corpus_root, rid, "model.safetensors")
+
+    def repo_files(self, rid: str) -> List[str]:
+        """Every weight file of the repo, sorted — one entry for the classic
+        single-file layout, N for the hub tier's sharded repos."""
+        d = self.repo_path(rid)
+        return sorted(os.path.join(d, f) for f in os.listdir(d)
+                      if f.endswith(".safetensors"))
+
+    def primary_file(self, rid: str) -> str:
+        """The repo's first weight file (== ``model_file`` for single-file
+        repos; shard 1 for sharded repos)."""
+        files = self.repo_files(rid)
+        return files[0] if files else self.model_file(rid)
 
     def repos(self, kinds=None):
         for rid, kind in self.manifest:
@@ -73,11 +87,28 @@ class Ctx:
 
 def bench_spec(scale: str = "default") -> CorpusSpec:
     if scale == "tiny":
-        # CI smoke: one family, seconds-scale end to end
-        return CorpusSpec(n_families=1, finetunes_per_family=2, reuploads_per_family=1,
+        # CI smoke: seconds-scale end to end. Two families + one int8 repack
+        # per family so the CI-gated zllm.cluster.family_f1 and
+        # zllm.reduction.ratio metrics (and the bitxq lane) are exercised at
+        # the scale check_regression compares against.
+        return CorpusSpec(n_families=2, finetunes_per_family=2, reuploads_per_family=1,
                           lora_per_family=0, vocab_expanded_per_family=0,
-                          checkpoints_per_family=0, n_layers=2, d_model=96,
-                          d_ff=192, vocab=384, seed=11)
+                          checkpoints_per_family=0, quantized_per_family=1,
+                          n_layers=2, d_model=96, d_ff=192, vocab=384, seed=11)
+    if scale == "hub":
+        # the paper-§4.2-shaped hub tier: family trees over the configs/
+        # architectures (dense + MoE + SSM), one sharded 314B-style family,
+        # int8/int4 repacks and Zipf-skewed family popularity. Nightly soak
+        # scale — minutes, not CI seconds.
+        return CorpusSpec(n_families=6, finetunes_per_family=4, reuploads_per_family=1,
+                          lora_per_family=1, vocab_expanded_per_family=1,
+                          checkpoints_per_family=1, quantized_per_family=1,
+                          int4_per_family=1, sharded_families=1, shards=3,
+                          popularity_skew=0.8,
+                          architectures=("grok-1-314b", "qwen2-7b", "mixtral-8x7b",
+                                         "falcon-mamba-7b", "zamba2-2.7b",
+                                         "phi4-mini-3.8b"),
+                          n_layers=2, d_model=160, d_ff=320, vocab=640, seed=11)
     if scale == "small":
         return CorpusSpec(n_families=2, finetunes_per_family=3, reuploads_per_family=1,
                           lora_per_family=1, vocab_expanded_per_family=1,
@@ -98,18 +129,23 @@ def build_ctx(scale: str = "default", root: Optional[str] = None) -> Ctx:
     spec = bench_spec(scale)
     root = root or f"/tmp/repro-bench-corpus-{scale}"
     marker = os.path.join(root, "manifest.json")
-    if os.path.exists(marker):
+    truth = os.path.join(root, "families.json")
+    # a cached corpus without families.json predates the ground-truth labels
+    # — regenerate rather than score against nothing
+    if os.path.exists(marker) and os.path.exists(truth):
         manifest = [tuple(x) for x in json.load(open(marker))]
     else:
         shutil.rmtree(root, ignore_errors=True)
         manifest = make_corpus(root, spec)
-    return Ctx(root, manifest, spec)
+    families = json.load(open(truth))
+    return Ctx(root, manifest, spec, families)
 
 
 def corpus_bytes(ctx: Ctx) -> int:
     total = 0
     for rid, _ in ctx.manifest:
-        total += os.path.getsize(ctx.model_file(rid))
+        for path in ctx.repo_files(rid):
+            total += os.path.getsize(path)
     return total
 
 

@@ -9,9 +9,36 @@ re-uploads (FileDedup, Table 2), vocab-expanded variants (the Fig.-9
 embedding mismatch), LoRA-adapter repos (§5.1: 22% of repos, ~0.1% of bytes)
 and training-checkpoint chains (the framework's own storage workload).
 
-Every repo is a directory with model.safetensors (+ config.json, README.md —
-a configurable fraction of READMEs omit base_model to exercise the
-bit-distance fallback).
+Hub-scale extensions (the ``--hub-scale``/``hub`` tier in
+``benchmarks.common.bench_spec``):
+
+* **Architecture family trees** — each family may derive its tensor layout
+  from a ``repro.configs`` architecture (MoE per-expert mats for mixtral-like
+  configs, Mamba mixer stacks for the SSM configs, dense llama-like
+  otherwise), scaled down to the spec's small dims. The structural params
+  (expert count, state size, conv width) come from the real config; only the
+  widths shrink.
+* **Sharded repos** — the first ``sharded_families`` families write their
+  full-weight repos as multi-file ``model-0000i-of-0000N.safetensors`` shards
+  (the grok-1-314B upload pattern).
+* **Quantized variants** — int8 repacks of the float base (symmetric
+  per-tensor scale derived from the base, the exact grid the store's
+  ``bitxq`` dtype-crossing delta lane predicts, so a pure repack's residual
+  is all-zero) plus packed-int4 repacks (two nibbles per byte, a raw-lane
+  realism case the dedup/clustering layers must tolerate).
+* **Skewed popularity** — ``popularity_skew > 0`` distributes the family's
+  fine-tune budget Zipf-style (family f's weight ∝ 1/(f+1)^skew), matching
+  the paper's observation that a few bases dominate hub traffic.
+* **Ground-truth labels** — ``families.json`` beside ``manifest.json`` maps
+  every repo id to its true family, turning clustering accuracy and
+  end-to-end reduction into *scored* bench metrics
+  (``zllm.cluster.family_f1`` / ``zllm.reduction.ratio``).
+
+Every repo is a directory with one or more ``*.safetensors`` files
+(+ config.json, README.md — a configurable fraction of READMEs omit
+base_model to exercise the bit-distance fallback; quantized repos ALWAYS
+declare it, because an int8 repack changes the shape signature and the
+bit-distance prefilter cannot match it).
 """
 
 from __future__ import annotations
@@ -26,7 +53,8 @@ import numpy as np
 
 from repro.formats import safetensors as st
 
-__all__ = ["CorpusSpec", "make_corpus", "make_base_tensors", "make_finetune"]
+__all__ = ["CorpusSpec", "make_corpus", "make_base_tensors", "make_finetune",
+           "make_quantized_int8", "make_quantized_int4"]
 
 BF16 = ml_dtypes.bfloat16
 
@@ -50,28 +78,100 @@ class CorpusSpec:
     metadata_prob: float = 0.5         # fraction of fine-tunes with base_model declared
     dtype: str = "bfloat16"            # bfloat16 | float32
     seed: int = 0
+    # -- hub-scale extensions (all default OFF: existing tiers unchanged) --
+    quantized_per_family: int = 0      # int8 repacks of the base (bitxq lane)
+    int4_per_family: int = 0           # packed-int4 repacks (raw-lane realism)
+    architectures: Tuple[str, ...] = ()  # repro.configs ids, cycled per family
+    sharded_families: int = 0          # first N families upload multi-file shards
+    shards: int = 3                    # shard count for those families
+    popularity_skew: float = 0.0       # Zipf exponent over family fine-tune counts
 
 
 def _np_dtype(name: str):
     return BF16 if name == "bfloat16" else np.float32
 
 
-def make_base_tensors(spec: CorpusSpec, rng: np.random.RandomState) -> Dict[str, np.ndarray]:
-    d, f, V = spec.d_model, spec.d_ff, spec.vocab
+def _arch_for_family(spec: CorpusSpec, fam: int):
+    """Resolve the family's architecture config (None = llama-like dense)."""
+    if not spec.architectures:
+        return None
+    from repro.configs import get_config
+    return get_config(spec.architectures[fam % len(spec.architectures)])
+
+
+def _dense_layer(t: Dict[str, np.ndarray], p: str, spec: CorpusSpec,
+                 rng: np.random.RandomState, dt) -> None:
+    d, f = spec.d_model, spec.d_ff
+    t[p + "input_layernorm.weight"] = np.ones(d, dt)
+    t[p + "self_attn.q_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "self_attn.k_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "self_attn.v_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "self_attn.o_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "post_attention_layernorm.weight"] = np.ones(d, dt)
+    t[p + "mlp.gate_proj.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
+    t[p + "mlp.up_proj.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
+    t[p + "mlp.down_proj.weight"] = (rng.randn(d, f) * spec.sigma_w).astype(dt)
+
+
+def _moe_layer(t: Dict[str, np.ndarray], p: str, spec: CorpusSpec,
+               rng: np.random.RandomState, dt, moe) -> None:
+    """Mixtral-style layer: shared attention, per-expert MLP mats + router.
+    Expert count is capped at 4 — the synthetic hub scales widths AND
+    breadth down, keeping the structural signature (many same-shape expert
+    mats, a dedup-rich surface) without ballooning corpus bytes."""
+    d, f = spec.d_model, spec.d_ff
+    n_exp = min(moe.n_experts, 4)
+    t[p + "input_layernorm.weight"] = np.ones(d, dt)
+    t[p + "self_attn.q_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "self_attn.k_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "self_attn.v_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "self_attn.o_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
+    t[p + "post_attention_layernorm.weight"] = np.ones(d, dt)
+    t[p + "block_sparse_moe.gate.weight"] = (rng.randn(n_exp, d) * spec.sigma_w).astype(dt)
+    for e in range(n_exp):
+        ep = f"{p}block_sparse_moe.experts.{e}."
+        t[ep + "w1.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
+        t[ep + "w2.weight"] = (rng.randn(d, f) * spec.sigma_w).astype(dt)
+        t[ep + "w3.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
+
+
+def _ssm_layer(t: Dict[str, np.ndarray], p: str, spec: CorpusSpec,
+               rng: np.random.RandomState, dt, ssm) -> None:
+    """Mamba-style mixer block (falcon-mamba / zamba2 families): projections
+    in bf16, the state-space params (A_log/D/dt) in float32 as published."""
+    d = spec.d_model
+    d_in = ssm.expand * d
+    dt_rank = ssm.dt_rank or -(-d // 16)  # ceil(d/16), the Mamba-1 default
+    t[p + "norm.weight"] = np.ones(d, dt)
+    t[p + "mixer.in_proj.weight"] = (rng.randn(2 * d_in, d) * spec.sigma_w).astype(dt)
+    t[p + "mixer.conv1d.weight"] = (rng.randn(d_in, 1, ssm.d_conv) * spec.sigma_w).astype(dt)
+    t[p + "mixer.x_proj.weight"] = (
+        rng.randn(dt_rank + 2 * ssm.d_state, d_in) * spec.sigma_w).astype(dt)
+    t[p + "mixer.dt_proj.weight"] = (rng.randn(d_in, dt_rank) * spec.sigma_w).astype(dt)
+    t[p + "mixer.A_log"] = np.log(
+        np.tile(np.arange(1, ssm.d_state + 1, dtype=np.float32), (d_in, 1)))
+    t[p + "mixer.D"] = np.ones(d_in, np.float32)
+    t[p + "mixer.out_proj.weight"] = (rng.randn(d, d_in) * spec.sigma_w).astype(dt)
+
+
+def make_base_tensors(spec: CorpusSpec, rng: np.random.RandomState,
+                      arch=None) -> Dict[str, np.ndarray]:
+    """Base weights for one family. ``arch`` (an ``ArchConfig`` or None)
+    selects the layer template: MoE and SSM configs get their structural
+    layouts at the spec's scaled-down dims; everything else (and None, the
+    pre-hub default) is the dense llama-like stack."""
+    d, V = spec.d_model, spec.vocab
     dt = _np_dtype(spec.dtype)
     t: Dict[str, np.ndarray] = {}
     t["model.embed_tokens.weight"] = (rng.randn(V, d) * spec.sigma_w).astype(dt)
     for i in range(spec.n_layers):
         p = f"model.layers.{i}."
-        t[p + "input_layernorm.weight"] = np.ones(d, dt)
-        t[p + "self_attn.q_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
-        t[p + "self_attn.k_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
-        t[p + "self_attn.v_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
-        t[p + "self_attn.o_proj.weight"] = (rng.randn(d, d) * spec.sigma_w).astype(dt)
-        t[p + "post_attention_layernorm.weight"] = np.ones(d, dt)
-        t[p + "mlp.gate_proj.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
-        t[p + "mlp.up_proj.weight"] = (rng.randn(f, d) * spec.sigma_w).astype(dt)
-        t[p + "mlp.down_proj.weight"] = (rng.randn(d, f) * spec.sigma_w).astype(dt)
+        if arch is not None and arch.moe is not None:
+            _moe_layer(t, p, spec, rng, dt, arch.moe)
+        elif arch is not None and arch.ssm is not None:
+            _ssm_layer(t, p, spec, rng, dt, arch.ssm)
+        else:
+            _dense_layer(t, p, spec, rng, dt)
     t["model.norm.weight"] = np.ones(d, dt)
     t["lm_head.weight"] = (rng.randn(V, d) * spec.sigma_w).astype(dt)
     return t
@@ -91,13 +191,86 @@ def make_finetune(base: Dict[str, np.ndarray], spec: CorpusSpec,
     return out
 
 
+def _repack_scale(f32: np.ndarray) -> np.float32:
+    """Symmetric per-tensor int8 scale: max finite |x| / 127, fallback 1.0.
+    Mirrors ``repro.core.codecs._qdelta_scale_bits`` operation-for-operation
+    so a pure repack of a base lands EXACTLY on the bitxq lane's predicted
+    grid (all-zero residual, the maximally-compressible case)."""
+    finite = f32[np.isfinite(f32)]
+    amax = float(np.abs(finite).max()) if finite.size else 0.0
+    scale = np.float32(amax / 127) if amax > 0.0 else np.float32(1.0)
+    if not np.isfinite(scale) or scale == 0.0:
+        scale = np.float32(1.0)
+    return scale
+
+
+def make_quantized_int8(base: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """int8 repack of a float checkpoint: float tensors quantize onto a
+    symmetric per-tensor grid (scale companion tensors ride along, as real
+    quantized exports ship them); non-float tensors pass through."""
+    out: Dict[str, np.ndarray] = {}
+    for name, arr in base.items():
+        if arr.dtype == BF16 or arr.dtype.kind == "f":
+            f32 = np.asarray(arr).astype(np.float32)
+            scale = _repack_scale(f32)
+            bf = np.where(np.isfinite(f32), f32, np.float32(0.0))
+            out[name] = np.clip(np.rint(bf / scale), -127, 127).astype(np.int8)
+            out[name + ".quant_scale"] = np.array([scale], np.float32)
+        else:
+            out[name] = arr
+    return out
+
+
+def make_quantized_int4(base: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Packed-int4 repack: two signed nibbles per uint8 byte (shape halves on
+    the last axis, padded to even length first). The shape/dtype crossing
+    defeats both tensor dedup and the delta lanes by design — these repos
+    exercise the raw/stored path and the clustering layer's tolerance of
+    family members it cannot bit-match."""
+    out: Dict[str, np.ndarray] = {}
+    for name, arr in base.items():
+        if arr.dtype == BF16 or arr.dtype.kind == "f":
+            f32 = np.asarray(arr).astype(np.float32).reshape(-1)
+            finite = f32[np.isfinite(f32)]
+            amax = float(np.abs(finite).max()) if finite.size else 0.0
+            scale = np.float32(amax / 7) if amax > 0.0 else np.float32(1.0)
+            bf = np.where(np.isfinite(f32), f32, np.float32(0.0))
+            q = (np.clip(np.rint(bf / scale), -7, 7).astype(np.int8) + 8
+                 ).astype(np.uint8)  # bias to [1, 15]
+            if q.size % 2:
+                q = np.concatenate([q, np.zeros(1, np.uint8)])
+            out[name] = (q[0::2] << 4) | q[1::2]
+            out[name + ".quant_scale"] = np.array([scale], np.float32)
+        else:
+            out[name] = arr
+    return out
+
+
+def _shard_names(tensors: Dict[str, np.ndarray], shards: int) -> List[List[str]]:
+    """Contiguous near-equal split of the tensor names into ``shards`` files
+    (insertion order preserved, as real sharded uploads do)."""
+    names = list(tensors)
+    n = max(1, min(shards, len(names)))
+    per = -(-len(names) // n)
+    return [names[i:i + per] for i in range(0, len(names), per)]
+
+
 def _write_repo(root: str, repo_id: str, tensors: Dict[str, np.ndarray],
                 base_model: Optional[str], declare_base: bool,
-                architecture: str = "LlamaForCausalLM") -> str:
+                architecture: str = "LlamaForCausalLM",
+                torch_dtype: str = "bfloat16", shards: int = 1) -> str:
     repo_dir = os.path.join(root, repo_id)
     os.makedirs(repo_dir, exist_ok=True)
-    st.save_file(tensors, os.path.join(repo_dir, "model.safetensors"))
-    cfg = {"architectures": [architecture], "torch_dtype": "bfloat16"}
+    if shards > 1:
+        groups = _shard_names(tensors, shards)
+        n = len(groups)
+        for i, names in enumerate(groups):
+            fn = f"model-{i + 1:05d}-of-{n:05d}.safetensors"
+            st.save_file({k: tensors[k] for k in names},
+                         os.path.join(repo_dir, fn))
+    else:
+        st.save_file(tensors, os.path.join(repo_dir, "model.safetensors"))
+    cfg = {"architectures": [architecture], "torch_dtype": torch_dtype}
     readme = f"# {repo_id}\n"
     if base_model and declare_base:
         readme = f"---\nbase_model: {base_model}\n---\n" + readme
@@ -108,34 +281,73 @@ def _write_repo(root: str, repo_id: str, tensors: Dict[str, np.ndarray],
     return repo_dir
 
 
+def _finetune_counts(spec: CorpusSpec) -> List[int]:
+    """Per-family fine-tune counts. With ``popularity_skew == 0`` every family
+    gets ``finetunes_per_family`` (the pre-hub behavior). Otherwise the total
+    budget (n_families × finetunes_per_family) is distributed Zipf-style by
+    largest remainder — deterministic, every family keeps at least one."""
+    n, per = spec.n_families, spec.finetunes_per_family
+    if spec.popularity_skew <= 0.0 or n <= 1:
+        return [per] * n
+    total = n * per
+    weights = [1.0 / (f + 1) ** spec.popularity_skew for f in range(n)]
+    wsum = sum(weights)
+    raw = [total * w / wsum for w in weights]
+    counts = [max(1, int(c)) for c in raw]
+    remainders = sorted(range(n), key=lambda f: raw[f] - int(raw[f]), reverse=True)
+    i = 0
+    while sum(counts) < total:
+        counts[remainders[i % n]] += 1
+        i += 1
+    return counts
+
+
 def make_corpus(root: str, spec: CorpusSpec) -> List[Tuple[str, str]]:
     """Generate the corpus. Returns [(repo_id, kind)] in upload order:
-    bases first (as on the real hub), then variants interleaved."""
+    bases first (as on the real hub), then variants interleaved. Writes
+    ``manifest.json`` (the returned list) and ``families.json`` — the
+    ground-truth ``{repo_id: family_label}`` map the clustering-accuracy
+    scoring reads."""
     rng = np.random.RandomState(spec.seed)
     os.makedirs(root, exist_ok=True)
     manifest: List[Tuple[str, str]] = []
+    families: Dict[str, str] = {}
     bases: Dict[str, Dict[str, np.ndarray]] = {}
+    archs = {fam: _arch_for_family(spec, fam) for fam in range(spec.n_families)}
+    fam_shards = {fam: (spec.shards if fam < spec.sharded_families else 1)
+                  for fam in range(spec.n_families)}
+    ft_counts = _finetune_counts(spec)
+
+    def record(rid: str, kind: str, fam: int) -> None:
+        manifest.append((rid, kind))
+        families[rid] = f"family-{fam}"
 
     for fam in range(spec.n_families):
         base_id = f"org{fam}/base-model-{fam}"
-        base = make_base_tensors(spec, rng)
+        base = make_base_tensors(spec, rng, archs[fam])
         bases[base_id] = base
-        _write_repo(root, base_id, base, None, False)
-        manifest.append((base_id, "base"))
+        arch_name = archs[fam].name if archs[fam] is not None else "LlamaForCausalLM"
+        _write_repo(root, base_id, base, None, False, architecture=arch_name,
+                    shards=fam_shards[fam])
+        record(base_id, "base", fam)
 
     for fam in range(spec.n_families):
         base_id = f"org{fam}/base-model-{fam}"
         base = bases[base_id]
-        for v in range(spec.finetunes_per_family):
+        arch_name = archs[fam].name if archs[fam] is not None else "LlamaForCausalLM"
+        shards = fam_shards[fam]
+        for v in range(ft_counts[fam]):
             rid = f"user{fam}-{v}/ft-{fam}-{v}"
             ft = make_finetune(base, spec, rng)
             declare = rng.rand() < spec.metadata_prob
-            _write_repo(root, rid, ft, base_id, declare)
-            manifest.append((rid, "finetune"))
+            _write_repo(root, rid, ft, base_id, declare, architecture=arch_name,
+                        shards=shards)
+            record(rid, "finetune", fam)
         for r in range(spec.reuploads_per_family):
             rid = f"mirror{fam}-{r}/base-reupload-{fam}-{r}"
-            _write_repo(root, rid, base, base_id, True)
-            manifest.append((rid, "reupload"))
+            _write_repo(root, rid, base, base_id, True, architecture=arch_name,
+                        shards=shards)
+            record(rid, "reupload", fam)
         for l in range(spec.lora_per_family):
             rid = f"peft{fam}-{l}/lora-{fam}-{l}"
             rank = 4
@@ -145,7 +357,7 @@ def make_corpus(root: str, spec: CorpusSpec) -> List[Tuple[str, str]]:
                 lora[p + ".lora_A.weight"] = (rng.randn(rank, spec.d_model) * 0.02).astype(np.float32)
                 lora[p + ".lora_B.weight"] = np.zeros((spec.d_model, rank), np.float32)
             _write_repo(root, rid, lora, base_id, True, architecture="PeftModel")
-            manifest.append((rid, "lora"))
+            record(rid, "lora", fam)
         for x in range(spec.vocab_expanded_per_family):
             rid = f"user{fam}x/ft-vocab-{fam}-{x}"
             ft = make_finetune(base, spec, rng)
@@ -154,15 +366,32 @@ def make_corpus(root: str, spec: CorpusSpec) -> List[Tuple[str, str]]:
                 old = ft[key]
                 new_rows = (rng.randn(extra, old.shape[1]) * spec.sigma_w).astype(old.dtype)
                 ft[key] = np.concatenate([old, new_rows], axis=0)
-            _write_repo(root, rid, ft, base_id, True)
-            manifest.append((rid, "vocab_expanded"))
+            _write_repo(root, rid, ft, base_id, True, architecture=arch_name)
+            record(rid, "vocab_expanded", fam)
+        # quantized repos ALWAYS declare base_model: the dtype/shape crossing
+        # defeats the bit-distance prefilter, so metadata is the only family
+        # signal the store's delta lane can use (paper insight 2's limit)
+        for q in range(spec.quantized_per_family):
+            rid = f"quant{fam}-{q}/int8-{fam}-{q}"
+            src = base if q == 0 else make_finetune(base, spec, rng)
+            _write_repo(root, rid, make_quantized_int8(src), base_id, True,
+                        architecture=arch_name, torch_dtype="int8")
+            record(rid, "quantized_int8", fam)
+        for q in range(spec.int4_per_family):
+            rid = f"quant4{fam}-{q}/int4-{fam}-{q}"
+            _write_repo(root, rid, make_quantized_int4(base), base_id, True,
+                        architecture=arch_name, torch_dtype="int4")
+            record(rid, "quantized_int4", fam)
         prev = base
         for ck in range(spec.checkpoints_per_family):
             rid = f"run{fam}/checkpoint-{(ck + 1) * 100}"
             prev = make_finetune(prev, spec, rng, sigma_delta=spec.sigma_delta / 4)
-            _write_repo(root, rid, prev, base_id, True)
-            manifest.append((rid, "checkpoint"))
+            _write_repo(root, rid, prev, base_id, True, architecture=arch_name,
+                        shards=shards)
+            record(rid, "checkpoint", fam)
 
+    with open(os.path.join(root, "families.json"), "w") as f:
+        json.dump(families, f, indent=1)
     with open(os.path.join(root, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     return manifest

@@ -83,10 +83,15 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
     with ZLLMStore(root, workers=2, auto_compact=policy) as store:
         store.ingest_repos([(ctx.repo_path(rid), rid) for rid, _ in ctx.manifest])
         stable = [rid for rid, _ in ctx.manifest]  # never churned: always servable
-        originals = {rid: store.retrieve_file(rid, "model.safetensors")
-                     for rid in stable}
+        # one (repo, file) serving unit per weight file — the hub tier's
+        # sharded repos contribute several, single-file repos exactly one
+        stable_files = [(rid, os.path.basename(p))
+                        for rid in stable for p in ctx.repo_files(rid)]
+        originals = {(rid, fn): store.retrieve_file(rid, fn)
+                     for rid, fn in stable_files}
         log.line(f"soak: ingested {store.stats.n_files} files, "
-                 f"{len(stable)} stable repos, {minutes} min of churn ahead")
+                 f"{len(stable)} stable repos ({len(stable_files)} weight "
+                 f"files), {minutes} min of churn ahead")
 
         with ServerThread(store, max_concurrency=8) as srv:
             base = f"http://{srv.host}:{srv.port}"
@@ -97,29 +102,31 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
                     return r.read()
 
             def client(cid: int):
-                order = stable[cid % len(stable):] + stable[:cid % len(stable)]
+                k = cid % len(stable_files)
+                order = stable_files[k:] + stable_files[:k]
                 sweep = 0
                 while not stop.is_set():
                     sweep += 1
-                    for rid in order:
+                    for rid, fn in order:
                         if stop.is_set():
                             break
-                        url = f"{base}/repo/{rid}/file/model.safetensors"
+                        url = f"{base}/repo/{rid}/file/{fn}"
                         try:
                             if sweep % 3 == 0:
                                 # range leg: two halves, reassembled
-                                size = len(originals[rid])
+                                size = len(originals[(rid, fn)])
                                 mid = size // 2
                                 body = (fetch(url, {"Range": f"bytes=0-{mid - 1}"})
                                         + fetch(url, {"Range": f"bytes={mid}-"}))
                             else:
                                 body = fetch(url)
                         except Exception as e:
-                            failures.append(f"client {cid}: {rid}: {e!r}")
+                            failures.append(f"client {cid}: {rid}/{fn}: {e!r}")
                             stop.set()
                             return
-                        if body != originals[rid]:
-                            failures.append(f"client {cid}: {rid} byte mismatch")
+                        if body != originals[(rid, fn)]:
+                            failures.append(f"client {cid}: {rid}/{fn} "
+                                            f"byte mismatch")
                             stop.set()
                             return
                         with stats_lock:
@@ -144,7 +151,7 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
                     #    concurrently with live serving
                     new_rid = f"soak/r{rnd}"
                     p = os.path.join(scratch, new_rid, "model.safetensors")
-                    _perturbed_copy(ctx.model_file(donor), p)
+                    _perturbed_copy(ctx.primary_file(donor), p)
                     put = urllib.request.Request(
                         f"{base}/repo/{new_rid}/file/model.safetensors?sync=1",
                         data=open(p, "rb").read(), method="PUT")
@@ -218,9 +225,9 @@ def run(ctx: Ctx, minutes: float, log_path: str) -> int:
             failures.append(f"final fsck dirty: {report.summary()}")
         if report.orphans:
             failures.append(f"orphan containers after churn: {report.orphans}")
-        for rid in stable:  # end-to-end: stable population still bit-exact
-            if store.retrieve_file(rid, "model.safetensors") != originals[rid]:
-                failures.append(f"post-soak byte mismatch: {rid}")
+        for rid, fn in stable_files:  # end-to-end: stable set still bit-exact
+            if store.retrieve_file(rid, fn) != originals[(rid, fn)]:
+                failures.append(f"post-soak byte mismatch: {rid}/{fn}")
         auto_runs = store.summary()["lifecycle"]["auto_compact_runs"]
         log.line(f"soak: auto-compact fired {auto_runs}x "
                  f"(policy every_n_gc={policy.every_n_gc})")
@@ -279,37 +286,39 @@ def replicated_leg(ctx: Ctx, minutes: float, log: Log) -> list:
                     return json.loads(r.read())
 
             stable = [rid for rid, _ in ctx.manifest]
+            stable_files = [(rid, os.path.basename(p))
+                            for rid in stable for p in ctx.repo_files(rid)]
             originals = {}
-            for rid in stable:
+            for rid, fn in stable_files:
                 meta = parse_repo_metadata(ctx.repo_path(rid))
                 q = "&base=" + urllib.request.quote(
                     meta["base_model"], safe="") \
                     if meta.get("base_model") else ""
-                data = open(ctx.model_file(rid), "rb").read()
-                out = req(f"/repo/{rid}/file/model.safetensors?sync=1{q}",
-                          "PUT", data)
+                data = open(os.path.join(ctx.repo_path(rid), fn), "rb").read()
+                out = req(f"/repo/{rid}/file/{fn}?sync=1{q}", "PUT", data)
                 if not out.get("replicas", {}).get("quorum_met", True):
-                    failures.append(f"seed PUT {rid} missed quorum")
-                originals[rid] = data
+                    failures.append(f"seed PUT {rid}/{fn} missed quorum")
+                originals[(rid, fn)] = data
             log.line(f"replica soak: quorum-wrote {len(stable)} repos "
-                     f"(replicas=3, W=2), {minutes:.1f} min of churn ahead")
+                     f"({len(stable_files)} weight files, replicas=3, W=2), "
+                     f"{minutes:.1f} min of churn ahead")
 
             def client(cid: int):
-                order = stable[cid % len(stable):] + stable[:cid % len(stable)]
+                k = cid % len(stable_files)
+                order = stable_files[k:] + stable_files[:k]
                 while not stop.is_set():
-                    for rid in order:
+                    for rid, fn in order:
                         if stop.is_set():
                             break
                         try:
-                            body = fetch(
-                                f"{base}/repo/{rid}/file/model.safetensors")
+                            body = fetch(f"{base}/repo/{rid}/file/{fn}")
                         except Exception as e:
-                            failures.append(f"replica client {cid}: {rid}: "
-                                            f"{e!r} (failed read)")
+                            failures.append(f"replica client {cid}: "
+                                            f"{rid}/{fn}: {e!r} (failed read)")
                             stop.set()
                             return
-                        if body != originals[rid]:
-                            failures.append(f"replica client {cid}: {rid} "
+                        if body != originals[(rid, fn)]:
+                            failures.append(f"replica client {cid}: {rid}/{fn} "
                                             f"byte mismatch")
                             stop.set()
                             return
@@ -336,7 +345,8 @@ def replicated_leg(ctx: Ctx, minutes: float, log: Log) -> list:
                         # kill the root that JUST served a read so the
                         # failover path is provably on the hot path
                         rq = urllib.request.Request(
-                            f"{base}/repo/{stable[0]}/file/model.safetensors")
+                            f"{base}/repo/{stable_files[0][0]}"
+                            f"/file/{stable_files[0][1]}")
                         with urllib.request.urlopen(rq, timeout=60) as r:
                             victim = r.headers["x-served-by"]
                         router.set_root_down(victim, True)
@@ -360,7 +370,7 @@ def replicated_leg(ctx: Ctx, minutes: float, log: Log) -> list:
                     donor = stable[rnd % len(stable)]
                     new_rid = f"soak-rep/r{rnd}"
                     p = os.path.join(scratch, f"r{rnd}", "model.safetensors")
-                    _perturbed_copy(ctx.model_file(donor), p)
+                    _perturbed_copy(ctx.primary_file(donor), p)
                     out = req(f"/repo/{new_rid}/file/model.safetensors?sync=1",
                               "PUT", open(p, "rb").read())
                     reps = out.get("replicas", {})
@@ -399,11 +409,12 @@ def replicated_leg(ctx: Ctx, minutes: float, log: Log) -> list:
             fsck = req("/admin/fsck", "GET")
             if not fsck.get("ok"):
                 failures.append(f"replica fsck dirty: {fsck}")
-            for rid in stable:
-                blobs = {n: s.retrieve_file(rid, "model.safetensors")
+            for rid, fn in stable_files:
+                blobs = {n: s.retrieve_file(rid, fn)
                          for n, s in router.items()}
-                if set(blobs.values()) != {originals[rid]}:
-                    failures.append(f"post-soak replica divergence: {rid}")
+                if set(blobs.values()) != {originals[(rid, fn)]}:
+                    failures.append(f"post-soak replica divergence: "
+                                    f"{rid}/{fn}")
             with stats_lock:
                 log.line(f"replica soak: {rnd} churn rounds, "
                          f"{client_stats['fetches']} fetches, "
@@ -419,7 +430,7 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--minutes", type=float, default=2.0)
     ap.add_argument("--scale", default="tiny",
-                    choices=["tiny", "small", "default", "large"])
+                    choices=["tiny", "small", "default", "large", "hub"])
     ap.add_argument("--log", default="/tmp/repro-soak.log")
     args = ap.parse_args()
     return run(build_ctx(args.scale), args.minutes, args.log)

@@ -107,7 +107,11 @@ def main():
     manifest = make_corpus(hub, spec)
     print(f"synthetic hub: {len(manifest)} repos under {hub}\n")
 
-    store = ZLLMStore(os.path.join(tmp, "store"), workers=2)
+    # backend= picks the ArrayBackend every codec lane encodes/decodes on:
+    # "numpy" (host), "jax" (device-batched kernels), or "auto" which
+    # selects jax only on accelerator hosts. Containers are bit-identical
+    # either way, so "auto" is always safe.
+    store = ZLLMStore(os.path.join(tmp, "store"), workers=2, backend="auto")
     ingest_hub(store, hub, manifest)
 
     print("\nverifying bit-exact retrieval of every file...")

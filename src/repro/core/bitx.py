@@ -430,14 +430,22 @@ class TensorRecord:
     name: str
     dtype_str: str            # safetensors tag of the original tensor ("BF16", "F32", ...)
     shape: Tuple[int, ...]
-    codec: str                # "bitx" | "zipnn" | "raw" | "stored" | "dedup"
-    base_hash: Optional[str]  # CAS hash of the base tensor (bitx) / None
+    codec: str                # "bitx" | "bitxq" | "zipnn" | "raw" | "stored" | "dedup"
+    base_hash: Optional[str]  # CAS hash of the base tensor (bitx/bitxq) / None
     self_hash: str            # CAS hash of this tensor's raw bytes (dedup + verify)
     plane_sizes: List[int] = field(default_factory=list)  # compressed bytes per plane
     raw_size: int = 0
+    # quantized-delta (bitxq) stamp — emitted only when set, so containers
+    # that never use the lane stay byte-identical to pre-bitxq builds.
+    # ``qscale_bits`` is the float32 scale's raw bit pattern (uint32): round-
+    # tripping the scale through JSON as a decimal float could perturb the
+    # last bit and break the decode-side prediction replay.
+    base_dtype: Optional[str] = None   # safetensors tag of the base ("BF16", ...)
+    qscale_bits: Optional[int] = None  # float32 bit pattern of the quant scale
+    qzero_point: Optional[int] = None  # integer zero point of the quant grid
 
     def to_json(self) -> Dict:
-        return {
+        d = {
             "name": self.name,
             "dtype": self.dtype_str,
             "shape": list(self.shape),
@@ -447,9 +455,18 @@ class TensorRecord:
             "plane_sizes": self.plane_sizes,
             "raw_size": self.raw_size,
         }
+        if self.base_dtype is not None:
+            d["base_dtype"] = self.base_dtype
+        if self.qscale_bits is not None:
+            d["qscale_bits"] = self.qscale_bits
+        if self.qzero_point is not None:
+            d["qzero_point"] = self.qzero_point
+        return d
 
     @staticmethod
     def from_json(d: Dict) -> "TensorRecord":
+        qs = d.get("qscale_bits")
+        qz = d.get("qzero_point")
         return TensorRecord(
             name=d["name"],
             dtype_str=d["dtype"],
@@ -459,6 +476,9 @@ class TensorRecord:
             self_hash=d["self_hash"],
             plane_sizes=list(d.get("plane_sizes", [])),
             raw_size=int(d.get("raw_size", 0)),
+            base_dtype=d.get("base_dtype"),
+            qscale_bits=int(qs) if qs is not None else None,
+            qzero_point=int(qz) if qz is not None else None,
         )
 
 
@@ -573,15 +593,18 @@ class BitXWriter:
 
     def add_precomputed(self, name: str, dtype_str: str, shape, codec: str,
                         base_hash: Optional[str], self_hash: str,
-                        frames: Sequence[bytes], raw_size: int) -> int:
+                        frames: Sequence[bytes], raw_size: int,
+                        extras: Optional[Dict] = None) -> int:
         """Append a record whose frames were encoded elsewhere (the parallel
         ingest engine encodes off-thread, then merges in tensor order so the
-        container bytes match the serial path exactly). Zero-payload dedup
-        records go through :meth:`add_dedup` instead."""
-        assert codec in ("bitx", "zipnn", "raw", "stored"), codec
+        container bytes match the serial path exactly). ``extras`` carries
+        optional stamp fields a lane needs replayed at decode time (the
+        quantized-delta lane's ``base_dtype``/``qscale_bits``/``qzero_point``).
+        Zero-payload dedup records go through :meth:`add_dedup` instead."""
+        assert codec in ("bitx", "bitxq", "zipnn", "raw", "stored"), codec
         self.records.append(
             TensorRecord(name, dtype_str, tuple(shape), codec, base_hash, self_hash,
-                         [len(f) for f in frames], raw_size)
+                         [len(f) for f in frames], raw_size, **(extras or {}))
         )
         self.frames.extend(frames)
         return sum(len(f) for f in frames)

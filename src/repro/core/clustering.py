@@ -19,7 +19,8 @@ from repro.core.bitdistance import (DEFAULT_THRESHOLD, bit_distance_arrays,
                                     hamming_total_arrays, shape_signature)
 from repro.formats.safetensors import SafetensorsFile
 
-__all__ = ["FamilyRegistry", "cluster_models", "pairwise_bit_distances"]
+__all__ = ["FamilyRegistry", "cluster_models", "pairwise_bit_distances",
+           "score_family_clustering"]
 
 
 def _sampled_distance(fa: SafetensorsFile, fb: SafetensorsFile,
@@ -125,3 +126,49 @@ def cluster_models(paths: Sequence[str], threshold: float = DEFAULT_THRESHOLD,
     for i in range(n):
         comps.setdefault(find(i), []).append(i)
     return sorted(comps.values(), key=len, reverse=True)
+
+
+def score_family_clustering(paths: Sequence[str], true_labels: Sequence[str],
+                            threshold: float = DEFAULT_THRESHOLD,
+                            sample_elems: int = 65536) -> Dict[str, float]:
+    """Score :func:`cluster_models` against ground-truth family labels.
+
+    Pairwise counting — the standard external clustering measure: every
+    unordered model pair is a trial; a true positive is a same-family pair
+    the clustering put in one component. Returns precision / recall / F1 /
+    Rand-accuracy over all pairs, plus the trial counts. This is what turns
+    the paper's "93.5% clustering accuracy" (§A.0.1) claim into a scored,
+    CI-gated bench metric (``zllm.cluster.family_f1``) on the synthetic
+    hub's emitted ground truth (``families.json``).
+    """
+    if len(paths) != len(true_labels):
+        raise ValueError(f"{len(paths)} paths but {len(true_labels)} labels")
+    clusters = cluster_models(paths, threshold, sample_elems)
+    pred = [0] * len(paths)
+    for ci, comp in enumerate(clusters):
+        for i in comp:
+            pred[i] = ci
+    tp = fp = fn = tn = 0
+    n = len(paths)
+    for i in range(n):
+        for j in range(i + 1, n):
+            same_true = true_labels[i] == true_labels[j]
+            same_pred = pred[i] == pred[j]
+            if same_true and same_pred:
+                tp += 1
+            elif same_pred:
+                fp += 1
+            elif same_true:
+                fn += 1
+            else:
+                tn += 1
+    n_pairs = tp + fp + fn + tn
+    precision = tp / (tp + fp) if tp + fp else 1.0
+    recall = tp / (tp + fn) if tp + fn else 1.0
+    f1 = (2 * precision * recall / (precision + recall)
+          if precision + recall else 0.0)
+    return {"precision": round(precision, 4), "recall": round(recall, 4),
+            "f1": round(f1, 4),
+            "accuracy": round((tp + tn) / n_pairs, 4) if n_pairs else 1.0,
+            "n_models": n, "n_pairs": n_pairs,
+            "n_clusters": len(clusters)}

@@ -1,18 +1,23 @@
 """Codec registry: the store's pluggable per-tensor encode/decode lanes.
 
-Every payload lane a container can stamp (``bitx`` / ``zipnn`` / ``raw`` /
-``stored`` / ``dedup``) is registered here as a pair of PURE functions of
-(bytes, backend): given the same tensor bytes, the same entropy settings and
-the same :class:`~repro.core.bitx.ArrayBackend`, a codec must emit identical
-frames on every engine (serial, threaded, process-entropy, device-batched) —
-that purity is what lets the pipeline's ordered merge produce bit-identical
-containers no matter how the work is scheduled.
+Every payload lane a container can stamp (``bitx`` / ``bitxq`` / ``zipnn`` /
+``raw`` / ``stored`` / ``dedup``) is registered here as a pair of PURE
+functions of (bytes, backend): given the same tensor bytes, the same entropy
+settings and the same :class:`~repro.core.bitx.ArrayBackend`, a codec must
+emit identical frames on every engine (serial, threaded, process-entropy,
+device-batched) — that purity is what lets the pipeline's ordered merge
+produce bit-identical containers no matter how the work is scheduled.
 
 Registry contract:
 
 * ``register_codec(name, encode, decode)`` — ``encode(runtime, EncodeInput)
   -> (final_codec, frames, raw_size)`` may *downgrade* the lane (``raw`` →
-  ``stored`` when entropy coding would grow the bytes); ``decode(runtime,
+  ``stored`` when entropy coding would grow the bytes; ``bitxq`` → the
+  standalone ``raw``/``stored`` outcome when the delta does not beat it).
+  An encode may instead return a 4-tuple ``(final_codec, frames, raw_size,
+  extras)`` where ``extras`` is a dict of :class:`TensorRecord` stamp
+  fields the decode side must see (the quantized-delta lane stamps
+  ``base_dtype``/``qscale_bits``/``qzero_point`` this way). ``decode(runtime,
   record, frames, np_dtype, base_resolver, pool_resolver) -> np.ndarray``
   must invert it bit-exactly.
 * ``get_codec(name)`` — raises ``ValueError`` naming the unknown codec (a
@@ -124,10 +129,13 @@ class EncodeInput:
 
     ``data`` is the tensor payload: an ndarray for the plane codecs, raw
     bytes for ``raw``/``stored``. ``base`` is the aligned base tensor for
-    ``bitx``. ``planes`` short-circuits the array stage: the device-batched
-    encode path splits planes for a whole bucket in one kernel launch and
-    hands them in pre-computed, leaving the codec only the entropy stage —
-    the frames are identical either way because the plane bytes are.
+    ``bitx``/``bitxq``. ``base_dtype`` names the base's safetensors tag for
+    the dtype-crossing ``bitxq`` lane (the base arrives as a bit view —
+    uint16 for BF16 — so its dtype is not recoverable from the array alone).
+    ``planes`` short-circuits the array stage: the device-batched encode
+    path splits planes for a whole bucket in one kernel launch and hands
+    them in pre-computed, leaving the codec only the entropy stage — the
+    frames are identical either way because the plane bytes are.
     ``raw_size`` carries the pool payload size for zero-frame ``dedup``
     records.
     """
@@ -136,6 +144,7 @@ class EncodeInput:
     base: Optional[np.ndarray] = None
     planes: Optional[Sequence[np.ndarray]] = None
     raw_size: int = 0
+    base_dtype: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -187,9 +196,10 @@ def raw_or_stored(data: bytes, frame: bytes) -> Tuple[str, bytes]:
 
 
 # ---------------------------------------------------------------------------
-# The five built-in lanes (paper §4.3/§4.4): BitX XOR-delta planes, ZipNN
-# byte planes, raw zstd with the stored downgrade, verbatim stored bytes,
-# and zero-payload dedup references.
+# The six built-in lanes (paper §4.3/§4.4): BitX XOR-delta planes, the
+# quantized dtype-crossing delta (bitxq), ZipNN byte planes, raw zstd with
+# the stored downgrade, verbatim stored bytes, and zero-payload dedup
+# references.
 # ---------------------------------------------------------------------------
 
 def _entropy_planes(rt: CodecRuntime, planes: Sequence) -> List[bytes]:
@@ -219,6 +229,98 @@ def _decode_bitx(rt, r, frames, np_dtype, base_resolver, pool_resolver):
         base = np.frombuffer(base, np_dtype)
     planes = _plane_arrays(rt, frames)
     return rt.backend.merge_planes_xor(planes, base.reshape(-1)).reshape(r.shape)
+
+
+# -- quantized (dtype-crossing) delta lane ----------------------------------
+# An int8 repack of a float family base deltas against the ORIGINAL base via
+# dequantize-predict-residual: the base is expanded to float32, a symmetric
+# per-tensor scale is derived from the base itself, the base is re-quantized
+# onto the int8 grid as a *prediction*, and only the XOR residual between
+# prediction and actual quantized bytes is entropy-coded. Everything the
+# decode side needs to replay the prediction (base hash, base dtype, the
+# scale's exact f32 bit pattern, the zero point) is stamped on the record,
+# so the lane is lossless by construction — ZipNN (arXiv:2411.05239) and
+# Huff-LLM (arXiv:2502.00922) both motivate keeping dtype-aware lanes
+# bit-exact. The prediction is ALWAYS computed host-side in numpy (float32
+# arithmetic is not guaranteed bit-stable across accelerators); only the
+# elementwise XOR/merge goes through the ArrayBackend, so numpy and jax
+# engines emit and decode identical containers.
+
+_QDELTA_INT_RANGE = 127  # symmetric int8 grid: [-127, 127]
+
+
+def _base_to_f32(base: Any, base_dtype: str) -> np.ndarray:
+    """Expand a base tensor (bytes or bit-view ndarray) to float32, exactly.
+
+    BF16 arrives as a uint16 bit view; shifting into the high half of a
+    uint32 reconstructs the float32 it truncates — exact by definition, no
+    ml_dtypes dependency. F16/F32 widen losslessly via astype.
+    """
+    from repro.formats.safetensors import STR_TO_DTYPE
+    np_dtype = STR_TO_DTYPE[base_dtype]
+    if isinstance(base, (bytes, memoryview)):
+        base = np.frombuffer(base, np_dtype)
+    else:
+        base = np.asarray(base).reshape(-1).view(np_dtype)
+    if base_dtype == "BF16":
+        bits = base.view("<u2").astype(np.uint32) << np.uint32(16)
+        return bits.view(np.float32)
+    return base.astype(np.float32)
+
+
+def _qdelta_scale_bits(base_f32: np.ndarray) -> int:
+    """Symmetric per-tensor scale derived from the BASE: max finite |x| / 127,
+    returned as the float32 bit pattern (the container stamps bits, not a
+    decimal, so encode and decode replay the identical scale). Degenerate
+    bases (all-zero / no finite values) fall back to scale 1.0."""
+    finite = base_f32[np.isfinite(base_f32)]
+    amax = float(np.abs(finite).max()) if finite.size else 0.0
+    scale = np.float32(amax / _QDELTA_INT_RANGE) if amax > 0.0 else np.float32(1.0)
+    if not np.isfinite(scale) or scale == 0.0:
+        scale = np.float32(1.0)
+    return int(scale.view(np.uint32))
+
+
+def _qdelta_predict(base_f32: np.ndarray, scale_bits: int,
+                    zero_point: int) -> np.ndarray:
+    """Re-quantize the base onto the int8 grid — the decode side's prediction.
+    Pure float32 numpy math: divide, round-to-nearest-even, shift by the zero
+    point, clip to the symmetric range. Non-finite base elements predict the
+    zero point (their residual then carries the actual bits verbatim)."""
+    scale = np.array(scale_bits, dtype=np.uint32).view(np.float32)[()]
+    bf = np.where(np.isfinite(base_f32), base_f32, np.float32(0.0))
+    q = np.rint(bf / scale) + np.float32(zero_point)
+    return np.clip(q, -_QDELTA_INT_RANGE, _QDELTA_INT_RANGE).astype(np.int8)
+
+
+def _encode_bitxq(rt: CodecRuntime, inp: EncodeInput):
+    q = np.asarray(inp.data).reshape(-1).view(np.int8)
+    raw = int(q.nbytes)
+    base_f32 = _base_to_f32(inp.base, inp.base_dtype)
+    scale_bits = _qdelta_scale_bits(base_f32)
+    zero_point = 0
+    pred = _qdelta_predict(base_f32, scale_bits, zero_point)
+    planes = rt.backend.xor_delta_planes(pred, q)
+    frames = _entropy_planes(rt, planes)
+    # lane-vs-standalone decision, a pure function of the tensor bytes: the
+    # delta only ships when it beats what the standalone raw lane would
+    # store for the same bytes; otherwise downgrade to that exact outcome
+    # (the merge stage nulls the base reference on a 3-tuple downgrade).
+    data = q.tobytes()
+    final, payload = raw_or_stored(data, rt.compress(data))
+    if sum(len(f) for f in frames) < len(payload):
+        return "bitxq", frames, raw, {"base_dtype": inp.base_dtype,
+                                      "qscale_bits": scale_bits,
+                                      "qzero_point": zero_point}
+    return final, [payload], raw
+
+
+def _decode_bitxq(rt, r, frames, np_dtype, base_resolver, pool_resolver):
+    base_f32 = _base_to_f32(base_resolver(r.base_hash), r.base_dtype)
+    pred = _qdelta_predict(base_f32, r.qscale_bits, r.qzero_point or 0)
+    planes = _plane_arrays(rt, frames)
+    q = rt.backend.merge_planes_xor(planes, pred)
+    return q.view(np_dtype).reshape(r.shape)
 
 
 def _encode_zipnn(rt: CodecRuntime, inp: EncodeInput):
@@ -269,6 +371,7 @@ def _decode_dedup(rt, r, frames, np_dtype, base_resolver, pool_resolver):
 
 
 register_codec("bitx", _encode_bitx, _decode_bitx)
+register_codec("bitxq", _encode_bitxq, _decode_bitxq)
 register_codec("zipnn", _encode_zipnn, _decode_zipnn)
 register_codec("raw", _encode_raw, _decode_raw)
 register_codec("stored", _encode_stored, _decode_stored)

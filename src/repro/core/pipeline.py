@@ -241,6 +241,12 @@ class AutoCompactPolicy:
 
 _FLOAT_TAGS = {"F64", "F32", "F16", "BF16"}
 
+# Base dtypes the quantized (dtype-crossing) delta lane can predict from: an
+# int8 repack of a float family base re-quantizes the base as its prediction
+# and ships only the XOR residual (codec "bitxq"). BF16 expands to float32
+# exactly via a 16-bit shift; F16/F32 widen losslessly.
+_QDELTA_BASE_TAGS = {"BF16", "F32", "F16"}
+
 # Tensors below this size are hashed/encoded inline on the decision thread:
 # pool dispatch costs more than the work itself (and sha256 only releases
 # the GIL above ~2 KB anyway). Big tensors dominate bytes, so this trims
@@ -267,6 +273,7 @@ class IngestResult:
     n_tensors: int = 0
     n_dedup: int = 0
     n_bitx: int = 0
+    n_bitxq: int = 0
     n_zipnn: int = 0
     n_raw: int = 0
     ingest_seconds: float = 0.0
@@ -1339,10 +1346,24 @@ class ZLLMStore:
                 plan.append((ti, thash, "dedup", None, None))
             else:
                 base = base_tensors.get(ti.name)
+                base_dtype = None
                 if (self.use_bitx and base is not None and ti.dtype_str in _FLOAT_TAGS
                         and base[0] == ti.dtype_str and base[1] == ti.shape):
                     kind, base_hash, base_loader = "bitx", base[3], base[2]
                     res.n_bitx += 1
+                    bloc = self.tensor_locations.get(base_hash)
+                    if bloc is not None:
+                        self.lifecycle.add_edge(self_vid, make_vid(bloc[0], bloc[1]))
+                elif (self.use_bitx and base is not None and ti.dtype_str == "I8"
+                        and base[0] in _QDELTA_BASE_TAGS and base[1] == ti.shape):
+                    # dtype-crossing delta: int8 repack of a float base. The
+                    # encode may still downgrade to the standalone outcome
+                    # (merge nulls the base ref then); the lifecycle edge
+                    # stays either way — conservative pinning, same as a
+                    # dedup edge to a version we later stop referencing.
+                    kind, base_hash, base_loader = "bitxq", base[3], base[2]
+                    base_dtype = base[0]
+                    res.n_bitxq += 1
                     bloc = self.tensor_locations.get(base_hash)
                     if bloc is not None:
                         self.lifecycle.add_edge(self_vid, make_vid(bloc[0], bloc[1]))
@@ -1361,7 +1382,7 @@ class ZLLMStore:
                         batch, batch_bytes = [], 0
                 else:
                     job = self._encode_job(self._codec_runtime, kind, sf, ti,
-                                           base_loader, epool)
+                                           base_loader, epool, base_dtype)
                     payload = (pool.submit(job)
                                if pool is not None and ti.nbytes >= _PARALLEL_MIN_BYTES
                                else job())
@@ -1455,19 +1476,29 @@ class ZLLMStore:
         """Stage 4: ordered merge — append strictly in tensor order. The
         encode payload carries the final codec: raw-kind tensors the entropy
         stage could not shrink come back as ``stored`` (verbatim bytes, the
-        zero-copy sendfile span of the serving layer)."""
+        zero-copy sendfile span of the serving layer), and quantized-delta
+        tensors the residual could not beat come back as their standalone
+        ``raw``/``stored`` outcome — the base reference is nulled then, so
+        the record carries no dangling dependency. A 4-tuple payload's
+        fourth element is the lane's extra stamp fields (the bitxq
+        scale/zero-point replay data)."""
         for ti, thash, kind, base_hash, payload in plan:
             if kind == "dedup":
                 writer.add_dedup(ti.name, ti.dtype_str, ti.shape, thash, ti.nbytes)
             else:
-                codec, frames, raw = (payload.result()
-                                      if isinstance(payload, Future) else payload)
+                out = (payload.result()
+                       if isinstance(payload, Future) else payload)
+                codec, frames, raw = out[:3]
+                extras = out[3] if len(out) > 3 else None
                 writer.add_precomputed(ti.name, ti.dtype_str, ti.shape, codec,
-                                       base_hash, thash, frames, raw)
+                                       base_hash if codec in ("bitx", "bitxq")
+                                       else None,
+                                       thash, frames, raw, extras)
 
     def _encode_job(self, runtime: CodecRuntime, kind: str, sf: SafetensorsFile,
                     ti, base_loader,
-                    epool) -> Callable[[], Tuple[str, List[bytes], int]]:
+                    epool, base_dtype: Optional[str] = None
+                    ) -> Callable[[], Tuple[str, List[bytes], int]]:
         """Closure encoding one tensor via the codec registry; safe to run on
         any worker thread (the runtime's zstd contexts are thread-local,
         sf/base reads are mmap slices). Returns ``(final codec, frames, raw
@@ -1477,7 +1508,11 @@ class ZLLMStore:
         containers. With the opt-in process entropy backend the array stages
         (XOR, plane split) stay on the calling thread and only the entropy
         stage ships to a child process — the frames are identical either
-        way."""
+        way. The quantized-delta lane (``bitxq``) always runs fully
+        in-thread via the registry, even under the entropy pool: its
+        lane-vs-standalone decision needs both the residual frames and the
+        standalone frame, and the frames are identical executor-independent
+        anyway."""
         def encode() -> Tuple[str, List[bytes], int]:
             raw = sf.tensor_bytes(ti.name)
             if kind == "raw":
@@ -1488,6 +1523,10 @@ class ZLLMStore:
                     return final, [payload], len(data)
                 return get_codec("raw").encode(runtime, EncodeInput(data=data))
             arr = np.frombuffer(raw, STR_TO_DTYPE[ti.dtype_str]).reshape(ti.shape)
+            if kind == "bitxq":
+                return get_codec("bitxq").encode(
+                    runtime, EncodeInput(data=arr, base=base_loader(),
+                                         base_dtype=base_dtype))
             if kind == "bitx":
                 base_arr = base_loader()
                 if epool is not None:
@@ -1756,7 +1795,7 @@ class ZLLMStore:
                          "reduction": round(r.reduction, 4),
                          "base_id": r.base_id, "base_source": r.base_source,
                          "n_tensors": r.n_tensors, "n_dedup": r.n_dedup,
-                         "n_bitx": r.n_bitx,
+                         "n_bitx": r.n_bitx, "n_bitxq": r.n_bitxq,
                          "file_dedup_hit": r.file_dedup_hit,
                          "near_dup_hit": r.near_dup_hit} for r in results]
                 with self._job_cv:
@@ -2157,7 +2196,7 @@ class ZLLMStore:
             for i, merged in zip(zip_idx, self.backend.merge_planes_batch(items)):
                 out[i] = np.ascontiguousarray(merged).tobytes()
         for i in range(len(records)):
-            if out[i] is None:  # dedup / raw / stored
+            if out[i] is None:  # dedup / raw / stored / bitxq (never batched)
                 arr = reader.decode_tensor(i, resolver, resolver)
                 out[i] = np.ascontiguousarray(arr).tobytes()
         return out
@@ -2302,7 +2341,8 @@ class ZLLMStore:
                                 r.self_hash, (key, gen, i))
                     for r in reader.records:
                         h = (r.self_hash if r.codec == "dedup"
-                             else r.base_hash if r.codec == "bitx" else "")
+                             else r.base_hash if r.codec in ("bitx", "bitxq")
+                             else "")
                         loc = self.tensor_locations.get(h) if h else None
                         if loc is not None:
                             self.lifecycle.add_edge(vid, make_vid(loc[0], loc[1]))
@@ -2404,7 +2444,8 @@ class ZLLMStore:
                                 r.self_hash, (key, gen, i))
                     for r in reader.records:
                         h = (r.self_hash if r.codec == "dedup"
-                             else r.base_hash if r.codec == "bitx" else "")
+                             else r.base_hash if r.codec in ("bitx", "bitxq")
+                             else "")
                         loc = self.tensor_locations.get(h) if h else None
                         if loc is not None:
                             self.lifecycle.add_edge(vid, make_vid(loc[0], loc[1]))
@@ -2700,7 +2741,7 @@ class ZLLMStore:
                     for rec in reader.records:
                         if rec.codec == "dedup":
                             hs.append(rec.self_hash)
-                        elif rec.codec == "bitx":
+                        elif rec.codec in ("bitx", "bitxq"):
                             hs.append(rec.base_hash)
             except (OSError, ValueError, AssertionError) as e:
                 # an unreadable anchored container means its reference set
@@ -2740,7 +2781,7 @@ class ZLLMStore:
         def deps_of(vid: str) -> List[str]:
             return [r.self_hash if r.codec == "dedup" else r.base_hash
                     for r in sup_records.get(vid, ())
-                    if r.codec in ("dedup", "bitx")]
+                    if r.codec in ("dedup", "bitx", "bitxq")]
 
         anchor_seed = [h for hs in dep_hashes.values() for h in hs]
         skipped: set = set()
@@ -2776,7 +2817,7 @@ class ZLLMStore:
                         bad_gens.add(vid)
                         grew_bad = True
                     continue
-                if rec.codec == "bitx":
+                if rec.codec in ("bitx", "bitxq"):
                     work.append(rec.base_hash)
                 move_src[h] = (k, g, i)
             if grew_bad:
@@ -2837,7 +2878,11 @@ class ZLLMStore:
                 new_locs[h] = len(writer.records)
                 writer.add_precomputed(rec.name, rec.dtype_str, rec.shape,
                                        rec.codec, rec.base_hash, rec.self_hash,
-                                       frames, rec.raw_size)
+                                       frames, rec.raw_size,
+                                       extras={"base_dtype": rec.base_dtype,
+                                               "qscale_bits": rec.qscale_bits,
+                                               "qzero_point": rec.qzero_point}
+                                       if rec.codec == "bitxq" else None)
             os.makedirs(os.path.dirname(cpath), exist_ok=True)
             stored = writer.write(cpath, fault_hook=self._fault
                                   if self.fault_hook else None, fsync=True)
@@ -2852,7 +2897,7 @@ class ZLLMStore:
                 for h, idx in new_locs.items():
                     self.tensor_locations[h] = (COMPACT_KEY, gen, idx)
                 for rec in writer.records:
-                    if rec.codec == "bitx":
+                    if rec.codec in ("bitx", "bitxq"):
                         loc = self.tensor_locations.get(rec.base_hash)
                         if loc is not None:
                             self.lifecycle.add_edge(cvid, make_vid(loc[0], loc[1]))
@@ -3121,8 +3166,8 @@ class ZLLMStore:
         for r in records:
             if r.codec == "dedup":
                 check_ref(vid, r.self_hash, "dedup target")
-            elif r.codec == "bitx":
-                check_ref(vid, r.base_hash, "bitx base")
+            elif r.codec in ("bitx", "bitxq"):
+                check_ref(vid, r.base_hash, f"{r.codec} base")
 
     def _fsck_version_content(self, info, report: FsckReport,
                               spot_check: Optional[int]) -> Optional[str]:
@@ -3146,7 +3191,7 @@ class ZLLMStore:
             to_spot = to_spot[:spot_check]
         for i in to_spot:
             r = reader.records[i]
-            if r.codec == "bitx":
+            if r.codec in ("bitx", "bitxq"):
                 # blame attribution: verify the DEPENDENCY first. A corrupt
                 # or quarantined base must be flagged on its own version —
                 # never cascade onto this (healthy) dependant.

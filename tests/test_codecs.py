@@ -22,7 +22,8 @@ from repro.core.codecs import (CodecRuntime, EncodeInput, get_codec,
 # ---------------------------------------------------------------------------
 
 def test_builtin_codecs_registered():
-    assert registered_codecs() == ("bitx", "dedup", "raw", "stored", "zipnn")
+    assert registered_codecs() == ("bitx", "bitxq", "dedup", "raw", "stored",
+                                   "zipnn")
 
 
 def test_unknown_codec_raises_naming_it():

@@ -9,7 +9,11 @@
    the dispatcher does not actually serve fails here even if the table
    matches the registry.
 3. Every fixed path in the registry appears in the dispatcher source.
-4. ``tools/check_docs.py`` finds no dangling links/anchors in
+4. The gated-metric table in ``docs/BENCHMARKS.md`` must list EXACTLY
+   the suffixes in ``benchmarks.check_regression``'s ``GATED_SUFFIXES``
+   / ``GATED_INVERSE_SUFFIXES`` with the right direction — same
+   live-gating pattern, different registry.
+5. ``tools/check_docs.py`` finds no dangling links/anchors in
    ``docs/*.md`` or the repo's READMEs.
 """
 
@@ -31,10 +35,14 @@ from repro.serve.store_server import ROUTES, ServerThread
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 HTTP_API_MD = os.path.join(REPO_ROOT, "docs", "HTTP_API.md")
+BENCHMARKS_MD = os.path.join(REPO_ROOT, "docs", "BENCHMARKS.md")
 
 # `| `METHOD /path` | summary |` rows of the Routes table; the in-code-span
 # pipe of GET|POST is escaped as \| per GFM table rules
 DOC_ROW_RE = re.compile(r"^\|\s*`([A-Z\\|]+)\s+(/[^`]*)`\s*\|")
+
+# `| `suffix` | higher/lower | ...` rows of the gated-key catalog
+METRIC_ROW_RE = re.compile(r"^\|\s*`([\w.]+)`\s*\|\s*(higher|lower)\s*\|")
 
 
 def documented_routes():
@@ -121,6 +129,43 @@ def test_every_documented_route_is_served(live_server):
                     f"{r.status}: {payload[:200]!r}")
     finally:
         conn.close()
+
+
+def test_gated_metric_table_matches_regression_registries():
+    """docs/BENCHMARKS.md's catalog must mirror check_regression's gate
+    registries exactly — suffix AND direction. A suffix gated in code but
+    undocumented (or documented but ungated, or flipped direction) fails."""
+    from benchmarks.check_regression import (GATED_INVERSE_SUFFIXES,
+                                             GATED_SUFFIXES)
+    doc = []
+    for line in open(BENCHMARKS_MD, encoding="utf-8"):
+        m = METRIC_ROW_RE.match(line)
+        if m:
+            doc.append((m.group(1), m.group(2)))
+    assert doc, "docs/BENCHMARKS.md has no parsable gated-key table"
+    registry = ([(s, "higher") for s in GATED_SUFFIXES]
+                + [(s, "lower") for s in GATED_INVERSE_SUFFIXES])
+    assert sorted(doc) == sorted(registry), (
+        "docs/BENCHMARKS.md gated-key table diverged from "
+        "check_regression registries:\n"
+        f"  documented only: {sorted(set(doc) - set(registry))}\n"
+        f"  gated only:      {sorted(set(registry) - set(doc))}")
+    assert len(doc) == len(set(doc))
+
+
+def test_gated_metrics_emitted_by_tiny_baseline():
+    """Every higher-is-better gated suffix must match at least one numeric
+    key in the COMMITTED tiny baseline — a gate whose metric no bench
+    emits would silently never be enforced (warn-on-missing semantics)."""
+    from benchmarks.check_regression import GATED_SUFFIXES, _flatten
+    baseline_path = os.path.join(REPO_ROOT, "experiments", "bench",
+                                 "throughput.json")
+    flat = _flatten(json.load(open(baseline_path)))
+    for suffix in GATED_SUFFIXES:
+        hits = [k for k, v in flat.items()
+                if k.endswith(suffix) and isinstance(v, (int, float))]
+        assert hits, (f"gated suffix {suffix!r} matches no numeric key in "
+                      f"the committed baseline {baseline_path}")
 
 
 def test_docs_links_and_anchors_resolve():
