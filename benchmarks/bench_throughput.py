@@ -392,6 +392,21 @@ def compaction_bench(ctx: Ctx, workers: int = 2) -> dict:
         }
 
 
+def loadgen_bench(ctx: Ctx, store_root: str) -> dict:
+    """Read-path tail latency + conditional-GET revalidation ratio via the
+    ``server_smoke`` multi-process load-generator leg, fronting the same
+    pipelined store the other serving benches use (CI-gated
+    ``serving.p99_ms`` lower-is-better / ``serving.conditional_hit_ratio``
+    higher-is-better). The leg's correctness assertions (byte-identical
+    full GETs, bodiless 304s, stable validators under read-only load)
+    must hold or the bench aborts."""
+    from benchmarks.server_smoke import loadgen_leg
+
+    failures, metrics = loadgen_leg(ctx, store_root=store_root)
+    assert not failures, f"loadgen leg failed: {failures[:3]}"
+    return metrics
+
+
 def replication_bench(ctx: Ctx) -> dict:
     """Replicated-tier figures (3 roots, replicas=3, W=2) via the
     ``server_smoke`` replica leg — sync quorum-PUT p99 latency, read
@@ -467,6 +482,9 @@ def run(ctx: Ctx, workers=(1, 4)) -> dict:
     out["serving"] = serving_bench(ctx, PIPELINED_STORE_ROOT)
     # --- HTTP keep-alive + range-read protocol figures (PR 5) ------------
     out["serving"].update(http_serving_bench(ctx, PIPELINED_STORE_ROOT))
+    # --- multi-process conditional-GET load (PR 9): serving.p99_ms
+    # lower-is-better, serving.conditional_hit_ratio higher-is-better ----
+    out["serving"].update(loadgen_bench(ctx, PIPELINED_STORE_ROOT))
 
     # --- compaction + incremental GC (PR 4): the CI-gated lifecycle
     # metrics (compaction_reclaimed_bytes higher-is-better,

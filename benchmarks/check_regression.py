@@ -54,12 +54,20 @@ from typing import Dict, List, Tuple
 # dedup) regressed. Both suffixes are DOTTED on purpose: endswith-matching a
 # bare "ratio"/"f1" would accidentally gate unrelated keys like
 # zstd.reduction_ratio or compaction_reclaim_ratio.
+# serving.conditional_hit_ratio gates the conditional-GET read path: the
+# multi-process loadgen leg revalidates a read-only corpus with
+# If-None-Match, so the 304-per-conditional-request ratio sits at 1.0 —
+# any drop means validators drifted or revalidation started answering
+# full 200s (every cached read re-pays decode + transfer). Dotted for
+# the same reason as the accuracy keys: a bare "hit_ratio"-style suffix
+# could silently gate unrelated cache counters.
 GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
                   "compaction_reclaimed_bytes", "keepalive_reqs_per_s",
                   "range_read_MBps", "failover_read_MBps",
                   "xor_split_MBps", "merge_xor_MBps", "byte_planes_MBps",
                   "device_batched_MBps",
-                  "cluster.family_f1", "reduction.ratio")
+                  "cluster.family_f1", "reduction.ratio",
+                  "serving.conditional_hit_ratio")
 
 # Lower-is-better keys: fail when the FRESH value RISES past
 # baseline * (1 + max_rise). Pause times are noisy (scheduler, shared
@@ -77,8 +85,16 @@ GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
 # on stragglers (or the retry/backoff path engaged on healthy roots); a
 # repair-time blow-up means anti-entropy stopped diffing per-key state and
 # went back to shipping everything.
+# serving.p99_ms is the loadgen leg's per-request p99 (cold decodes
+# included): a blow-up means the read path's tail regressed — conditional
+# fast path gone, response cache thrashing, or single-flight decodes
+# serializing behind each other. The suffix MUST stay dotted: a bare
+# "p99_ms" would also endswith-match quorum_put_p99_ms, double-gating it
+# and shadowing its floor lookup. Rise-gated with the default absolute
+# floor (like incremental_gc_max_pause_ms), so scheduler noise on a
+# millisecond-scale localhost baseline cannot fail CI.
 GATED_INVERSE_SUFFIXES = ("incremental_gc_max_pause_ms", "quorum_put_p99_ms",
-                          "anti_entropy_repair_s")
+                          "anti_entropy_repair_s", "serving.p99_ms")
 INVERSE_FAIL_FLOOR = 250.0  # ms: rises that stay under this never fail
 # Per-suffix absolute fail floors, in each key's OWN unit (the gc pause and
 # quorum p99 are milliseconds; the anti-entropy repair is wall seconds —

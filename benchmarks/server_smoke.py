@@ -28,6 +28,13 @@ byte-identical, clean fscks). Emits the three CI-gated replication
 metrics (``quorum_put_p99_ms``, ``failover_read_MBps``,
 ``anti_entropy_repair_s``) for ``bench_throughput``.
 
+Leg 4 (multi-process load generator): ``processes`` OS processes sweep
+file + tensor routes over keep-alive connections mixing cold full GETs
+(sha256-verified) with ``If-None-Match`` revalidations (bodiless ``304``
+required on a read-only corpus). Emits the two CI-gated read-path
+figures (``serving.p99_ms``, ``serving.conditional_hit_ratio``) for
+``bench_throughput``.
+
 Exits non-zero on mismatch, HTTP error, or a dirty final fsck.
 
     PYTHONPATH=src python -m benchmarks.server_smoke [--tiny] [--scale S]
@@ -130,6 +137,9 @@ def run(ctx: Ctx, concurrency: int = 8) -> int:
     rep_failures, rep_metrics = replica_leg(ctx, concurrency=min(4, concurrency))
     failures += rep_failures
     print(f"server_smoke: replication metrics {rep_metrics}")
+    lg_failures, lg_metrics = loadgen_leg(ctx, processes=min(3, concurrency))
+    failures += lg_failures
+    print(f"server_smoke: loadgen metrics {lg_metrics}")
 
     for f in failures:
         print(f"server_smoke: FAIL {f}", file=sys.stderr)
@@ -416,6 +426,155 @@ def replica_leg(ctx: Ctx, concurrency: int = 4) -> tuple:
                 failures.append(f"final replica index diff not empty: {diff}")
     finally:
         router.close()
+    return failures, metrics
+
+
+def _loadgen_worker(host: str, port: int, paths: list, etags: dict,
+                    digests: dict, rounds: int):
+    """Load-generator worker body (top-level so the ``spawn`` start method
+    can pickle it by reference): one keep-alive connection, ``rounds``
+    sweeps over ``paths`` — sweep 0 is full GETs (sha256-verified against
+    the parent's direct store reads), every later sweep revalidates with
+    ``If-None-Match`` and must get a bodiless ``304``. Returns
+    ``(latencies_ms, n_conditional, n_304, failures)``."""
+    import hashlib
+    import http.client
+    import time
+
+    lat: list = []
+    n_cond = n_304 = 0
+    fails: list = []
+    conn = http.client.HTTPConnection(host, port, timeout=60)
+    try:
+        for sweep in range(rounds):
+            for path in paths:
+                headers = {}
+                conditional = sweep > 0
+                if conditional:
+                    headers["If-None-Match"] = etags[path]
+                t0 = time.perf_counter()
+                conn.request("GET", path, headers=headers)
+                r = conn.getresponse()
+                body = r.read()
+                lat.append((time.perf_counter() - t0) * 1e3)
+                if conditional:
+                    n_cond += 1
+                    if r.status == 304:
+                        n_304 += 1
+                        if body:
+                            fails.append(f"{path}: 304 carried a body")
+                        if r.getheader("etag") != etags[path]:
+                            fails.append(f"{path}: 304 validator changed "
+                                         f"under a read-only load")
+                    elif r.status != 200:
+                        fails.append(f"{path}: revalidation -> {r.status}")
+                elif r.status != 200:
+                    fails.append(f"{path}: cold GET -> {r.status}")
+                elif hashlib.sha256(body).hexdigest() != digests[path]:
+                    fails.append(f"{path}: full GET diverged from direct "
+                                 f"store read")
+    except Exception as e:  # pragma: no cover - failure report
+        fails.append(f"worker error: {e!r}")
+    finally:
+        conn.close()
+    return lat, n_cond, n_304, fails
+
+
+def loadgen_leg(ctx: Ctx, store_root: str = None, processes: int = 3,
+                rounds: int = 8) -> tuple:
+    """Multi-process conditional-GET load generator: ``processes`` OS
+    processes (not threads — real client-side parallelism, no shared GIL
+    with the parent) each sweep the corpus's file routes plus a handful
+    of tensor routes over keep-alive connections, mixing cold full GETs
+    with ``If-None-Match`` revalidations. Returns ``(failures, metrics)``
+    where metrics carries the CI-gated read-path figures: ``p99_ms``
+    (per-request wall latency across ALL requests, cold decodes included)
+    and ``conditional_hit_ratio`` (304s over conditional requests — 1.0
+    on a read-only corpus, anything less means revalidation broke).
+    ``bench_throughput`` flattens them as ``serving.p99_ms`` /
+    ``serving.conditional_hit_ratio``.
+
+    With ``store_root`` the leg fronts an existing indexed store (the
+    bench reuses the pipelined root); without, it ingests the corpus
+    into a scratch root."""
+    import hashlib
+    import multiprocessing
+    from concurrent.futures import ProcessPoolExecutor
+
+    failures: list = []
+    metrics: dict = {"loadgen_processes": processes, "loadgen_rounds": rounds}
+    own_root = store_root is None
+    if own_root:
+        store_root = "/tmp/repro-server-smoke-loadgen"
+        shutil.rmtree(store_root, ignore_errors=True)
+    store = ZLLMStore(store_root, workers=2)
+    try:
+        if own_root:
+            store.ingest_repos([(ctx.repo_path(rid), rid)
+                                for rid, _ in ctx.manifest])
+        else:
+            assert store.load_index(), f"no index under {store_root}"
+        with ServerThread(store, max_concurrency=2 * processes) as srv:
+            base = f"http://{srv.host}:{srv.port}"
+            paths = [f"/repo/{rid}/file/model.safetensors"
+                     for rid, _ in ctx.manifest]
+            rid0 = ctx.manifest[0][0]
+            with SafetensorsFile(ctx.model_file(rid0)) as sf:
+                tensor_truth = {f"/repo/{rid0}/tensor/{ti.name}":
+                                bytes(sf.tensor_bytes(ti.name))
+                                for ti in sf.infos[:4]}
+            paths += list(tensor_truth)
+
+            # prime: learn each path's validator and ground-truth digest
+            etags, digests = {}, {}
+            for p in paths:
+                status, h, body = _get(base, p)
+                truth = tensor_truth.get(p)
+                if truth is None:
+                    rid = p[len("/repo/"):-len("/file/model.safetensors")]
+                    truth = store.retrieve_file(rid, "model.safetensors")
+                if status != 200 or body != truth:
+                    failures.append(f"prime GET {p}: status {status} or "
+                                    f"divergent bytes")
+                    continue
+                if "etag" not in h:
+                    failures.append(f"prime GET {p}: no etag header")
+                    continue
+                etags[p] = h["etag"]
+                digests[p] = hashlib.sha256(body).hexdigest()
+            if failures:
+                return failures, metrics
+            nm0 = srv.server.http["not_modified"]  # isolate the workers' 304s
+
+            mp = multiprocessing.get_context("spawn")
+            t0 = time.perf_counter()
+            with ProcessPoolExecutor(processes, mp_context=mp) as ex:
+                results = [f.result() for f in
+                           [ex.submit(_loadgen_worker, srv.host, srv.port,
+                                      paths, etags, digests, rounds)
+                            for _ in range(processes)]]
+            wall = time.perf_counter() - t0
+            lat = sorted(x for r in results for x in r[0])
+            n_cond = sum(r[1] for r in results)
+            n_304 = sum(r[2] for r in results)
+            for r in results:
+                failures += r[3]
+            metrics["p50_ms"] = round(lat[len(lat) // 2], 2)
+            metrics["p99_ms"] = round(
+                lat[min(len(lat) - 1, int(round(0.99 * (len(lat) - 1))))], 2)
+            metrics["conditional_hit_ratio"] = round(n_304 / n_cond, 4) \
+                if n_cond else 0.0
+            metrics["loadgen_requests"] = len(lat)
+            metrics["loadgen_reqs_per_s"] = round(len(lat) / wall, 1) \
+                if wall > 0 else float("inf")
+            if n_304 != n_cond:
+                failures.append(f"read-only revalidations not all 304: "
+                                f"{n_304}/{n_cond}")
+            if srv.server.http["not_modified"] - nm0 < n_304:
+                failures.append("server not_modified counter did not "
+                                "advance with the workers' 304s")
+    finally:
+        store.close()
     return failures, metrics
 
 

@@ -468,6 +468,21 @@ class _LRUCache:
             if self.on_evict:
                 self.on_evict(ent[0])
 
+    def discard(self, key):
+        """Drop an entry WITHOUT firing ``on_evict`` — for callers
+        retiring dead entries whose eviction side effect (e.g. a disk
+        spill) must not run."""
+        ent = self._od.pop(key, None)
+        if ent is not None:
+            self._bytes -= ent[1]
+
+    def keys(self):
+        return list(self._od)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
     def values(self):
         return [v for v, _ in self._od.values()]
 
@@ -1694,6 +1709,16 @@ class ZLLMStore:
         os.makedirs(p, exist_ok=True)
         return p
 
+    def decoded_dir(self) -> str:
+        """Directory for the serving layer's decoded-object spill tier
+        (``repro.serve.singleflight.TieredResponseCache``). Lives outside
+        ``containers/`` like the spool; spill files are disposable cache
+        state (wiped on engine construction), and ``.part`` temps left by
+        a crash mid-spill are cleaned by the fsck orphan scan."""
+        p = os.path.join(self.root, ".decoded")
+        os.makedirs(p, exist_ok=True)
+        return p
+
     def enqueue_ingest(self, uploads: Sequence, *, cleanup: bool = False) -> str:
         """Queue an ``ingest_many`` batch for the background worker;
         returns the job id (poll :meth:`ingest_job`). ``cleanup=True``
@@ -1971,6 +1996,31 @@ class ZLLMStore:
         twice (``verify`` reuses this one digest for the index check)."""
         return self._retrieve_with_digest(repo_id, filename, verify,
                                           want_digest=True)
+
+    def entity_tag(self, repo_id: str, filename: str) -> Optional[str]:
+        """Strong HTTP validator for ``repo_id/filename``'s current index
+        record, or ``None`` when the key is missing or quarantined.
+
+        Containers are immutable once registered and generations are
+        monotonic per key, so ``key@gN`` changes exactly when the served
+        bytes can change — a free strong validator. Ref-kind records
+        (file_dedup / near_dup) pin an exact target generation instead of
+        owning one, so their validator embeds the pinned coordinates plus
+        a whole-file-hash prefix: replacing the record (even re-pinning
+        the same target for different bytes) can never collide.
+
+        Lock-free on purpose: one dict read of an atomically-replaced
+        record — cheap enough for the serving event loop to call per
+        request, and consistent-by-construction because no generation is
+        ever reused (an observed tag can only mean one byte content)."""
+        key = f"{repo_id}/{filename}"
+        rec = self.file_index.get(key)
+        if rec is None or rec.get("quarantined"):
+            return None
+        if rec.get("kind") == "container":
+            return f"{key}@g{rec['gen']}"
+        return (f"{key}@{rec['kind']}:{rec.get('ref', '')}"
+                f"@g{rec.get('ref_gen', 0)}:{rec.get('file_hash', '')[:12]}")
 
     def _retrieve_with_digest(self, repo_id: str, filename: str, verify: bool,
                               want_digest: bool) -> Tuple[bytes, str]:
@@ -3122,6 +3172,30 @@ class ZLLMStore:
                         report.dangling.append((p, f"orphan delete failed: {e}"))
                     else:
                         report.repaired.append((p, "orphan container deleted"))
+
+        # decoded-spill debris: the serving layer's two-tier response cache
+        # spills decoded objects under ``.decoded/`` with the same
+        # temp+rename discipline as containers, so a ``.part`` file there is
+        # crash debris BY CONSTRUCTION (a spill killed mid-write — nothing
+        # references it). Finished spill files are live cache state owned by
+        # a possibly-running server (wiped on engine construction), so the
+        # scan leaves them alone.
+        droot = os.path.join(self.root, ".decoded")
+        if os.path.isdir(droot):
+            for fn in sorted(os.listdir(droot)):
+                if not fn.endswith(TMP_SUFFIX):
+                    continue
+                p = os.path.abspath(os.path.join(droot, fn))
+                report.orphans.append(p)
+                if repair:
+                    try:
+                        os.remove(p)
+                    except OSError as e:
+                        report.dangling.append(
+                            (p, f"orphan delete failed: {e}"))
+                    else:
+                        report.repaired.append(
+                            (p, "decoded-spill temp deleted"))
         return report
 
     def _hash_resolves(self, thash: str) -> bool:

@@ -115,6 +115,10 @@ class StoreRouter:
     # suspect backoff: BACKOFF_BASE_S * 2^(fails-1), capped
     BACKOFF_BASE_S = 0.5
     BACKOFF_MAX_S = 30.0
+    # a repo's read-repair is not rescheduled within this window of the
+    # previous one finishing (a persistently-down replica would otherwise
+    # enqueue one repair job per failover read)
+    READ_REPAIR_COOLDOWN_S = 5.0
 
     def __init__(self, stores: Union[Dict[str, ZLLMStore],
                                      Sequence[ZLLMStore], ZLLMStore],
@@ -147,6 +151,11 @@ class StoreRouter:
         self._health_lock = threading.Lock()
         self._ae_lock = threading.Lock()  # one anti-entropy sweep at a time
         self._repair_pending: Set[str] = set()
+        # read-repair bookkeeping: one in-flight repair per repo, plus a
+        # completion stamp for the reschedule cooldown
+        self._read_repair_inflight: Set[str] = set()
+        self._read_repair_done: Dict[str, float] = {}
+        self.read_repairs = 0  # repairs actually scheduled (stats)
         # crash-injection hook (REPLICATION_FAULT_POINTS), mirroring
         # store.fault_hook; never set in production
         self.fault_hook = None
@@ -191,10 +200,27 @@ class StoreRouter:
         """True when the root may be tried: up, and either healthy or past
         its suspect backoff (the next request doubles as the probe — on
         success ``note_success`` clears the suspicion, on failure
-        ``note_failure`` re-suspends it with a longer backoff)."""
+        ``note_failure`` re-suspends it with a longer backoff).
+
+        The probe is CLAIMED single-flight: the first caller to observe an
+        expired backoff re-arms ``suspect_until`` for the current backoff
+        window before returning True, so concurrent callers keep treating
+        the root as suspect (it stays a last-resort candidate) instead of
+        all hammering the just-recovered root at once. The claimant's
+        request resolves the probe either way — ``note_success`` clears
+        the re-armed deadline, ``note_failure`` extends it."""
         with self._health_lock:
             h = self._health[name]
-            return not h.down and time.monotonic() >= h.suspect_until
+            if h.down:
+                return False
+            if h.fails == 0:
+                return True
+            if time.monotonic() < h.suspect_until:
+                return False
+            backoff = min(self.BACKOFF_BASE_S * (2 ** (h.fails - 1)),
+                          self.BACKOFF_MAX_S)
+            h.suspect_until = time.monotonic() + backoff
+            return True
 
     def health(self) -> Dict[str, Dict]:
         """Per-root health snapshot (the ``/healthz`` + ``/stats`` field)."""
@@ -326,6 +352,84 @@ class StoreRouter:
         up = [n for n in group if self.is_up(n)]
         ready = [n for n in up if self._probe_ok(n)]
         return ready + [n for n in up if n not in ready]
+
+    @staticmethod
+    def _state_rank(state: Tuple) -> Tuple:
+        """Comparable strength of a ``_key_state`` tuple — the anti-entropy
+        winner rule (container generations beat pinned refs beat gone), as
+        a fixed-shape tuple so heterogeneous states still compare."""
+        if state[0] == "gone":
+            return (0, ())
+        if state[0] == "container":
+            return (2, state[1:])
+        return (1, state[1:])
+
+    def read_plan(self, repo_id: str,
+                  filename: str = "model.safetensors") -> Tuple[List[str], bool]:
+        """``(candidates, divergent)`` for one read. Candidates are
+        :meth:`read_candidates` order with one refinement: within the
+        probe-ready tier, roots whose index record for the key ranks
+        strongest (same winner rule anti-entropy ships by) come first —
+        a failover read never serves a weaker validator while a stronger
+        replica is ready. ``divergent`` reports whether the up members of
+        the group disagree on the key's state; the GET path uses it to
+        schedule read-repair instead of waiting for a full sweep."""
+        group = self.replica_roots(repo_id)
+        up = [n for n in group if self.is_up(n)]
+        key = f"{repo_id}/{filename}"
+        states = {n: self._key_state(n, key) for n in up}
+        divergent = len(set(states.values())) > 1
+        ready = [n for n in up if self._probe_ok(n)]
+        if divergent:
+            ready.sort(key=lambda n: self._state_rank(states[n]),
+                       reverse=True)  # stable: group order breaks ties
+        return ready + [n for n in up if n not in ready], divergent
+
+    def schedule_read_repair(self, repo_id: str,
+                             note: str = "") -> Optional[str]:
+        """Enqueue a scoped anti-entropy pass for one repo on a healthy
+        root's background job worker — the GET path's repair trigger when
+        a failover read succeeded somewhere other than the first replica,
+        or :meth:`read_plan` saw divergent per-key state. Per-key diffs
+        re-ship over the ``adopt_container`` path exactly as in a sweep,
+        just without waiting for one. Deduped to one in-flight repair per
+        repo with a post-completion cooldown; returns the job id, or
+        ``None`` when deduped or no root is up."""
+        now = time.monotonic()
+        with self._health_lock:
+            if repo_id in self._read_repair_inflight:
+                return None
+            if now - self._read_repair_done.get(repo_id, -1e9) \
+                    < self.READ_REPAIR_COOLDOWN_S:
+                return None
+            self._read_repair_inflight.add(repo_id)
+        healthy = next((n for n in self.replica_roots(repo_id)
+                        if self.is_up(n)), None)
+        if healthy is None:
+            with self._health_lock:
+                self._read_repair_inflight.discard(repo_id)
+            return None
+
+        def run(rid=repo_id):
+            try:
+                return self.anti_entropy(repos=[rid])
+            finally:
+                with self._health_lock:
+                    self._read_repair_inflight.discard(rid)
+                    self._read_repair_done[rid] = time.monotonic()
+                    while len(self._read_repair_done) > 1024:
+                        self._read_repair_done.pop(
+                            next(iter(self._read_repair_done)))
+
+        try:
+            jid = self.roots[healthy].enqueue_repair(
+                run, note=note or f"read-repair: {repo_id}")
+        except Exception:
+            with self._health_lock:
+                self._read_repair_inflight.discard(repo_id)
+            raise
+        self.read_repairs += 1
+        return jid
 
     def write_roots(self, repo_id: str,
                     filename: str = "model.safetensors",
@@ -760,7 +864,8 @@ class StoreRouter:
         agg["replication"] = {"replicas": self.replicas,
                               "write_quorum": self.write_quorum,
                               "health": self.health(),
-                              "repair_pending": pending}
+                              "repair_pending": pending,
+                              "read_repairs": self.read_repairs}
         return agg
 
     def ingest_jobs(self, limit: int = 64) -> List[Dict]:

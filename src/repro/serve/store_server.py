@@ -10,11 +10,14 @@ this module turns it into a servable hub node:
   a bounded thread pool (sha256/zstd/XOR release the GIL, so concurrent
   retrievals genuinely overlap); concurrent requests for the same object
   are *single-flighted* (one decode, N waiters —
-  ``repro.serve.singleflight``); finished responses land in a
-  byte-budgeted LRU. Every flight and cache entry is keyed by the store's
-  ``read_gen``, so an ingest / delete / gc rolls the caches over
-  atomically (snapshot isolation, with the store's read gate guaranteeing
-  the decode itself never races physical reclamation).
+  ``repro.serve.singleflight``); finished responses land in a two-tier
+  decoded cache (byte-budgeted RAM LRU over a disk spill directory under
+  the store root — ``TieredResponseCache``), keyed by each object's
+  strong entity tag. Flights are additionally keyed by the store's
+  ``read_gen`` (snapshot isolation), and entries of re-registered /
+  deleted keys are purged when a generation change is observed — the
+  store's read gate guarantees the decode itself never races physical
+  reclamation.
 
 * :class:`StoreServer` — an HTTP/1.1 front over asyncio streams
   (deliberately dependency-free; the paper-repro analogue of the
@@ -34,6 +37,12 @@ this module turns it into a servable hub node:
     object is decoded once (single-flight + response cache) and sliced
     from the cached buffer; multi-range requests fall back to a full 200;
     unsatisfiable ranges get 416.
+  - **conditional GETs**: file and tensor GETs carry a strong ``ETag``
+    (the store's ``key@gN`` entity tag — generations are immutable, so
+    HTTP caching is free correctness) plus ``Cache-Control: no-cache``;
+    ``If-None-Match`` revalidation answers a bodiless 304, evaluated
+    before ``Range`` per RFC 9110. Failover reads order replicas
+    strongest-validator-first and schedule read-repair on divergence.
   - **zero-copy sendfile**: tensors whose payload is a ``stored``-codec
     frame (raw bytes the entropy stage could not shrink) are served —
     full or ranged — straight from the container file with
@@ -70,11 +79,12 @@ from urllib.parse import parse_qs, unquote, urlsplit
 
 from repro.core.pipeline import ZLLMStore, _LRUCache
 from repro.serve.router import QuorumError, StoreRouter
-from repro.serve.singleflight import SingleFlight
+from repro.serve.singleflight import SingleFlight, TieredResponseCache
 
 __all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "ROUTES", "main"]
 
 _REASONS = {200: "OK", 202: "Accepted", 206: "Partial Content",
+            304: "Not Modified",
             400: "Bad Request", 404: "Not Found", 405: "Method Not Allowed",
             410: "Gone", 411: "Length Required",
             416: "Range Not Satisfiable", 500: "Internal Server Error",
@@ -112,9 +122,38 @@ ROUTES: Tuple[Tuple[str, str, str], ...] = (
      "tombstoned delete of a whole repo on every replica (idempotent)"),
 )
 
-_RANGE_RE = re.compile(r"^(\d+)-(\d*)$")
+# STRICT ASCII grammars (RFC 9110 range-spec is 1*DIGIT). Python's int()
+# is far laxer than the ABNF — it accepts "+5", "1_0", surrounding
+# whitespace and unicode digits (and bare \d matches unicode digits too),
+# so grammar-invalid specs like "bytes=-1_0" used to parse and answer 206.
+_RANGE_RE = re.compile(r"^([0-9]+)-([0-9]*)$", re.ASCII)
+_SUFFIX_RANGE_RE = re.compile(r"^-([0-9]+)$", re.ASCII)
 _MAX_JSON_BODY = 1 << 20        # POST bodies are control-plane JSON only
 _UPLOAD_CHUNK = 1 << 20         # PUT spool streaming granularity
+
+
+def quote_etag(tag: str) -> str:
+    """``key@gN`` -> the quoted strong validator on the wire."""
+    return f'"{tag}"'
+
+
+def if_none_match_hit(header: Optional[str], etag: str) -> bool:
+    """RFC 9110 §13.1.2 ``If-None-Match`` evaluation against one current
+    entity tag (already quoted). ``*`` matches any current representation;
+    the list form compares member by member with *weak comparison* — a
+    ``W/``-prefixed copy of a tag still matches it."""
+    if not header:
+        return False
+    header = header.strip()
+    if header == "*":
+        return True
+    for cand in header.split(","):
+        cand = cand.strip()
+        if cand.startswith("W/"):
+            cand = cand[2:]
+        if cand == etag:
+            return True
+    return False
 
 
 def _span_sha256_ok(path: str, offset: int, size: int, expect: str) -> bool:
@@ -149,11 +188,9 @@ def parse_byte_range(header: Optional[str], size: int):
     spec = header[len("bytes="):].strip()
     if "," in spec:
         return None  # multi-range: fall back to the full representation
-    if spec.startswith("-"):  # suffix form: last N bytes
-        try:
-            n = int(spec[1:])
-        except ValueError:
-            return None
+    sm = _SUFFIX_RANGE_RE.match(spec)
+    if sm is not None:  # suffix form: last N bytes
+        n = int(sm.group(1))
         if n <= 0 or size == 0:
             return "unsat"
         return max(0, size - n), size - 1
@@ -196,17 +233,30 @@ class RetrievalEngine:
     """
 
     def __init__(self, store: ZLLMStore, *, max_concurrency: int = 8,
-                 cache_bytes: int = 128 << 20, verify: bool = True):
+                 cache_bytes: int = 128 << 20,
+                 spill_bytes: Optional[int] = None, verify: bool = True):
         self.store = store
         self.verify = verify
         self._pool = ThreadPoolExecutor(max_workers=max(1, max_concurrency),
                                         thread_name_prefix="zllm-serve")
         self._flight = SingleFlight()
         # cache_bytes <= 0 disables response caching entirely (the serving
-        # bench measures concurrent decodes, not cache hits)
-        self._cache = (_LRUCache(max_items=1024, max_bytes=cache_bytes)
-                       if cache_bytes > 0 else None)
-        self._cache_gen = -1  # read_gen the cached entries belong to
+        # bench measures concurrent decodes, not cache hits). Otherwise the
+        # two-tier cache: RAM LRU + decoded-spill files under the store
+        # root, keyed by (object, entity tag) — see TieredResponseCache.
+        # spill_bytes <= 0 keeps the RAM tier but disables the disk tier;
+        # None sizes it at the TieredResponseCache default (4x RAM).
+        if cache_bytes > 0:
+            spill_dir = (None if (spill_bytes is not None and spill_bytes <= 0)
+                         else store.decoded_dir())
+            self._cache = TieredResponseCache(
+                spill_dir, max_bytes=cache_bytes,
+                spill_max_bytes=(spill_bytes if spill_bytes is not None
+                                 and spill_bytes > 0 else None),
+                max_items=1024)
+        else:
+            self._cache = None
+        self._cache_gen = -1  # read_gen the cache was last validated at
         self.requests = 0
         self.errors = 0
 
@@ -239,36 +289,50 @@ class RetrievalEngine:
                                                verify=self.verify))
 
     async def _fetch(self, key: Tuple, call):
-        """Cache → single-flight → executor. The composite key includes the
-        store's read_gen: one mutation and every subsequent request misses
-        the old view, while an in-flight pre-mutation decode still completes
-        under the store's read gate."""
+        """Cache → single-flight → executor.
+
+        Cache entries are keyed by the object's strong validator (the
+        entity tag conditional GETs revalidate against), so an unrelated
+        mutation no longer wipes every hot object — only entries whose
+        OWN key was re-registered / deleted go stale, and those are
+        purged the first time a ``read_gen`` change is observed. Flights
+        still include the read_gen (snapshot isolation: a request issued
+        after a mutation never coalesces onto a stale in-flight decode),
+        and a decode that outlives a re-registration of its key is
+        re-validated before insertion — a slow flight completing after a
+        gen bump must not park dead bytes on the budget (the
+        stale-generation leak regression)."""
         self.requests += 1
         gen = self.store.read_gen
-        ck = (gen,) + key
+        tag = self.store.entity_tag(key[1], key[2])
         if self._cache is not None:
             if gen != self._cache_gen:
-                # only current-generation entries are ever servable again —
-                # purge instead of letting stale bytes squat on the budget
-                self._cache.clear()
+                self._cache.purge(self._entry_current)
                 self._cache_gen = gen
-            hit = self._cache.get(ck)
-            if hit is not None:
-                return hit
+            if tag is not None:
+                hit = self._cache.get(key, tag)
+                if hit is not None:
+                    return hit
         loop = asyncio.get_running_loop()
 
         async def thunk():
             return await loop.run_in_executor(self._pool, call)
 
         try:
-            result = await self._flight.run(ck, thunk)
+            result = await self._flight.run((gen, tag) + key, thunk)
         except Exception:
             self.errors += 1
             raise
-        if self._cache is not None:
+        if (self._cache is not None and tag is not None
+                and self.store.entity_tag(key[1], key[2]) == tag):
             nbytes = len(result[0]) if isinstance(result, tuple) else len(result)
-            self._cache.put(ck, result, nbytes)
+            self._cache.put(key, tag, result, nbytes)
         return result
+
+    def _entry_current(self, objkey: Tuple, validator: str) -> bool:
+        """Is a cache entry's validator still the one its key serves?
+        ``objkey[1:3]`` is ``(repo_id, filename)`` for both object kinds."""
+        return self.store.entity_tag(objkey[1], objkey[2]) == validator
 
     # -- admin ----------------------------------------------------------
     # These are the single-store *embedding* API (callers holding an
@@ -301,9 +365,7 @@ class RetrievalEngine:
             "errors": self.errors,
             "read_gen": self.store.read_gen,
             "singleflight": self._flight.stats(),
-            "response_cache": ({"items": len(self._cache),
-                                "hits": self._cache.hits,
-                                "misses": self._cache.misses}
+            "response_cache": (self._cache.stats()
                                if self._cache is not None else {"disabled": True}),
             "workers": self._pool._max_workers,
             "verify": self.verify,
@@ -320,12 +382,14 @@ class StoreServer:
 
     def __init__(self, store, host: str = "127.0.0.1", port: int = 0,
                  *, max_concurrency: int = 8, cache_bytes: int = 128 << 20,
-                 verify: bool = True, idle_timeout: float = 30.0):
+                 spill_bytes: Optional[int] = None, verify: bool = True,
+                 idle_timeout: float = 30.0):
         self.router = (store if isinstance(store, StoreRouter)
                        else StoreRouter(store))
         self.engines: Dict[str, RetrievalEngine] = {
             name: RetrievalEngine(s, max_concurrency=max_concurrency,
-                                  cache_bytes=cache_bytes, verify=verify)
+                                  cache_bytes=cache_bytes,
+                                  spill_bytes=spill_bytes, verify=verify)
             for name, s in self.router.items()}
         # back-compat: the single-root engine (first root's under a router)
         self.engine = next(iter(self.engines.values()))
@@ -338,7 +402,10 @@ class StoreServer:
         # protocol surface: connections reused, ranges, zero-copy sends)
         self.http = {"connections": 0, "requests": 0, "range_requests": 0,
                      "sendfile_responses": 0, "put_uploads": 0,
-                     "put_bytes": 0}
+                     "put_bytes": 0,
+                     # conditional GETs: requests carrying If-None-Match,
+                     # and how many revalidated to a bodiless 304
+                     "conditional_requests": 0, "not_modified": 0}
         # live keep-alive connections: handler tasks park on readline
         # between requests, so shutdown must actively close their
         # transports or the loop teardown reports destroyed pending tasks
@@ -539,16 +606,41 @@ class StoreServer:
             elif url.path.startswith("/admin/"):
                 await self._admin(writer, req, url.path, qs)
             elif is_file_route:
-                repo_id = "/".join(segs[1:-2])
-                (data, sha), served_by = await self._with_failover(
-                    repo_id, segs[-1],
-                    lambda e: e.get_file_digest(repo_id, segs[-1]))
+                repo_id, filename = "/".join(segs[1:-2]), segs[-1]
+                inm = req.headers.get("if-none-match")
+                if inm:
+                    self.http["conditional_requests"] += 1
+
+                async def file_attempt(engine):
+                    # conditional evaluation FIRST (RFC 9110 §13.2.2:
+                    # If-None-Match precedes Range): a validator match
+                    # answers 304 with no decode at all — also on ranged
+                    # requests
+                    tag = engine.store.entity_tag(repo_id, filename)
+                    if tag is not None and if_none_match_hit(
+                            inm, quote_etag(tag)):
+                        return None, None, tag
+                    data, sha = await engine.get_file_digest(repo_id,
+                                                             filename)
+                    return data, sha, (engine.store.entity_tag(
+                        repo_id, filename) or tag)
+
+                (data, sha, tag), served_by = await self._with_failover(
+                    repo_id, filename, file_attempt)
                 engine = self.engines[served_by]
-                await self._respond_ranged(
-                    writer, req, data,
-                    [("x-content-sha256", sha),
-                     ("x-read-gen", str(engine.store.read_gen)),
-                     ("x-served-by", served_by)])
+                cond = self._etag_headers(tag)
+                if data is None:  # revalidated: bodiless 304
+                    self.http["not_modified"] += 1
+                    await self._write(
+                        writer, 304, b"", "application/octet-stream",
+                        cond + [("x-read-gen", str(engine.store.read_gen)),
+                                ("x-served-by", served_by)], req.keep)
+                else:
+                    await self._respond_ranged(
+                        writer, req, data,
+                        [("x-content-sha256", sha),
+                         ("x-read-gen", str(engine.store.read_gen)),
+                         ("x-served-by", served_by)] + cond)
             elif (len(segs) >= 3 and segs[0] == "repo" and segs[-1] == "tensor"
                   and "name" in qs):
                 # unambiguous form: /repo/<repo_id>/tensor?name=<tensor> —
@@ -608,8 +700,15 @@ class StoreServer:
         WITHOUT a health mark — the root is fine, that one object is not.
         Exhaustion re-raises the most specific failure: 410 when a healthy
         copy exists nowhere but a quarantined one does, 404 when no replica
-        knows the key, otherwise the last hard error."""
-        names = self.router.read_candidates(repo_id, filename)
+        knows the key, otherwise the last hard error.
+
+        Candidates come from the router's :meth:`read_plan`, which orders
+        the ready tier strongest-record-first, so a failover read never
+        serves a weaker validator while a stronger replica is ready. A
+        read that had to skip a replica — or whose group the plan saw
+        divergent — schedules an asynchronous per-repo read-repair on the
+        store's job worker instead of waiting for a full sweep."""
+        names, divergent = self.router.read_plan(repo_id, filename)
         if not names:
             raise QuorumError(f"no replica of {repo_id} is up")
         key_errors = 0
@@ -637,6 +736,12 @@ class StoreServer:
                 hard = e
                 continue
             self.router.note_success(name)
+            if divergent or key_errors or quarantined is not None \
+                    or hard is not None:
+                self.router.schedule_read_repair(
+                    repo_id,
+                    note=f"read-repair: {repo_id} served by {name}"
+                         f"{' (divergent group)' if divergent else ''}")
             return out, name
         if quarantined is not None and hard is None:
             raise quarantined
@@ -655,6 +760,21 @@ class StoreServer:
     async def _tensor_serve(self, writer, req: _Request,
                             engine: RetrievalEngine, repo_id: str,
                             tensor_name: str, filename: str) -> None:
+        # conditional evaluation FIRST (RFC 9110: If-None-Match precedes
+        # Range): tensors share the file's (key, gen) validator — a match
+        # revalidates without touching the span probe or the decode path.
+        inm = req.headers.get("if-none-match")
+        tag = engine.store.entity_tag(repo_id, filename)
+        if inm:
+            self.http["conditional_requests"] += 1
+            if tag is not None and if_none_match_hit(inm, quote_etag(tag)):
+                self.http["not_modified"] += 1
+                await self._write(
+                    writer, 304, b"", "application/octet-stream",
+                    self._etag_headers(tag)
+                    + [("x-read-gen", str(engine.store.read_gen))],
+                    req.keep)
+                return
         # zero-copy short-circuit: a `stored`-codec payload is a verbatim
         # on-disk span — full and ranged responses go through os.sendfile,
         # no decode, no userspace copy. Any irregularity (codec, race with
@@ -673,21 +793,34 @@ class StoreServer:
         elif span == "none":
             span = None
         if span is not None:
-            if await self._respond_sendfile(writer, req, engine, span):
+            if await self._respond_sendfile(writer, req, engine, span, tag):
                 return
         data, meta = await engine.get_tensor(repo_id, tensor_name, filename)
         await self._respond_ranged(writer, req, data,
-                                   self._tensor_headers(engine, meta))
+                                   self._tensor_headers(engine, meta, tag))
 
     @staticmethod
-    def _tensor_headers(engine: RetrievalEngine, meta: Dict) -> List[Tuple[str, str]]:
+    def _etag_headers(tag: Optional[str]) -> List[Tuple[str, str]]:
+        """ETag + revalidation policy. ``no-cache`` means "store, but
+        revalidate before reuse" — the right policy for immutable
+        generations behind a mutable key: revalidation is a free 304
+        until the key is re-registered, then the new bytes flow."""
+        if not tag:
+            return []
+        return [("etag", quote_etag(tag)), ("cache-control", "no-cache")]
+
+    @classmethod
+    def _tensor_headers(cls, engine: RetrievalEngine, meta: Dict,
+                        tag: Optional[str] = None) -> List[Tuple[str, str]]:
         return [("x-tensor-dtype", meta["dtype"]),
                 ("x-tensor-shape", json.dumps(meta["shape"])),
                 ("x-tensor-codec", meta["codec"]),
-                ("x-read-gen", str(engine.store.read_gen))]
+                ("x-read-gen", str(engine.store.read_gen))] \
+            + cls._etag_headers(tag)
 
     async def _respond_sendfile(self, writer, req: _Request,
-                                engine: RetrievalEngine, span) -> bool:
+                                engine: RetrievalEngine, span,
+                                tag: Optional[str] = None) -> bool:
         """Serve a stored-codec frame span with ``os.sendfile``; returns
         False (caller falls back to the decode path) when the container
         vanished between span resolution and open — the one benign race.
@@ -725,7 +858,7 @@ class StoreServer:
             status = 206 if rng is not None else 200
             if rng is not None:
                 self.http["range_requests"] += 1
-            extra = self._tensor_headers(engine, meta)
+            extra = self._tensor_headers(engine, meta, tag)
             extra.append(("x-zllm-sendfile", "1"))
             if status == 206:
                 extra.append(("content-range", f"bytes {start}-{end}/{size}"))
@@ -1125,6 +1258,10 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-workers", type=int, default=8,
                     help="concurrent retrieval executor size (per root)")
     ap.add_argument("--cache-mb", type=int, default=128)
+    ap.add_argument("--spill-mb", type=int, default=None,
+                    help="decoded-spill disk budget per root, MB "
+                         "(default: 4x --cache-mb; 0 disables the disk "
+                         "tier)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip sha256 verification of responses")
     ap.add_argument("--replicas", type=int, default=1,
@@ -1147,6 +1284,8 @@ def main(argv=None) -> int:
         server = StoreServer(router, args.host, args.port,
                              max_concurrency=args.serve_workers,
                              cache_bytes=args.cache_mb << 20,
+                             spill_bytes=(None if args.spill_mb is None
+                                          else args.spill_mb << 20),
                              verify=not args.no_verify)
         host, port = await server.start()
         roots = ", ".join(f"{n}={s.root}" for n, s in router.items())

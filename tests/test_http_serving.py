@@ -9,9 +9,11 @@ requests, PUT → spooled ingest job → ranged read-back against a routed
 aggregating per-root under a router.
 """
 
+import asyncio
 import json
 import http.client
 import os
+import threading
 import time
 from collections import OrderedDict
 
@@ -22,7 +24,9 @@ from repro.core.bitx import BitXReader
 from repro.core.pipeline import ZLLMStore
 from repro.formats import safetensors as st
 from repro.serve.router import StoreRouter
-from repro.serve.store_server import ServerThread, parse_byte_range
+from repro.serve.singleflight import TieredResponseCache
+from repro.serve.store_server import (RetrievalEngine, ServerThread,
+                                      parse_byte_range)
 
 
 def _write_model(path, rng, n_tensors=3, n=2048, scale=0.02, blob=False):
@@ -103,6 +107,21 @@ def family_store(tmp_path):
     ("bytes=5-2", 100, None),            # inverted -> full fallback
     ("bytes=abc", 100, None),
     ("chars=0-5", 100, None),
+    # RFC 9110 hardening (regression: int() is laxer than the ABNF's
+    # 1*DIGIT — it accepts "+5", "1_0", inner whitespace and unicode
+    # digits, so these grammar-invalid forms used to answer 206)
+    ("bytes=-1_0", 100, None),           # int("1_0") == 10 — not a DIGIT run
+    ("bytes=-+5", 100, None),            # int("+5") == 5 — sign not allowed
+    ("bytes=- 5", 100, None),            # int(" 5") == 5 — inner whitespace
+    ("bytes=-٥", 100, None),        # int("٥") == 5 — unicode digit
+    ("bytes=٠-٥", 100, None),  # \d matches unicode without re.ASCII
+    ("bytes=5 -9", 100, None),           # whitespace inside the spec
+    ("bytes=0- 5", 100, None),
+    ("bytes=-00", 100, "unsat"),         # zero-length suffix, padded form
+    ("bytes=00-05", 100, (0, 5)),        # leading zeros ARE valid 1*DIGIT
+    ("bytes=" + "9" * 30 + "-", 100, "unsat"),   # huge first-pos: past EOF
+    ("bytes=0-" + "9" * 30, 100, (0, 99)),       # huge last-pos clamps
+    ("bytes=-" + "9" * 30, 100, (0, 99)),        # huge suffix clamps to all
 ])
 def test_parse_byte_range(header, size, expect):
     assert parse_byte_range(header, size) == expect
@@ -520,3 +539,304 @@ def test_reregistration_routes_to_owning_root(two_root_router, tmp_path):
     # nothing on the placement root
     assert len(router.store(anti).lifecycle.versions) == 2
     assert not router.store("r0" if anti == "r1" else "r1").file_index
+
+
+# ---------------------------------------------------------------------------
+# Conditional GETs: ETag / If-None-Match vs the key lifecycle
+# ---------------------------------------------------------------------------
+
+def test_conditional_get_lifecycle(family_store, tmp_path):
+    """Tentpole acceptance: strong `key@gN` validators on files AND
+    tensors, 304 revalidation (also on ranged requests — If-None-Match
+    precedes Range per RFC 9110), gc leaving the validator alone, and a
+    re-registration (new generation) turning the old ETag back into a
+    200 with fresh bytes."""
+    store, originals = family_store
+    data = originals["org/base"]
+    with ServerThread(store, max_concurrency=4) as srv:
+        c = Client(srv)
+        try:
+            path = "/repo/org/base/file/model.safetensors"
+            status, h, body = c.get(path)
+            assert status == 200 and body == data
+            etag = h["etag"]
+            gen = store.file_index["org/base/model.safetensors"]["gen"]
+            assert etag == f'"org/base/model.safetensors@g{gen}"'
+            assert h["cache-control"] == "no-cache"
+
+            # revalidation: bodiless 304 echoing the validator
+            status, h2, b2 = c.get(path, {"If-None-Match": etag})
+            assert status == 304 and b2 == b"" and h2["etag"] == etag
+            # weak comparison, list members and * all match
+            assert c.get(path, {"If-None-Match": f'W/{etag}, "nope"'})[0] == 304
+            assert c.get(path, {"If-None-Match": "*"})[0] == 304
+            # a stale validator misses: full 200
+            status, _, b3 = c.get(
+                path, {"If-None-Match": '"org/base/model.safetensors@g999"'})
+            assert status == 200 and b3 == data
+
+            # If-None-Match is evaluated BEFORE Range: 304, never a 206
+            status, _, b4 = c.get(path, {"If-None-Match": etag,
+                                         "Range": "bytes=0-9"})
+            assert status == 304 and b4 == b""
+
+            # tensors share the file's (key, gen) validator — on the
+            # decode path and on the sendfile (stored-codec) path alike
+            status, th, _ = c.get("/repo/org/base/tensor/model.t0.weight")
+            assert status == 200 and th["etag"] == etag
+            assert c.get("/repo/org/base/tensor/model.t0.weight",
+                         {"If-None-Match": etag})[0] == 304
+            status, th2, _ = c.get("/repo/org/base/tensor/tok.table")
+            assert status == 200 and th2["etag"] == etag
+            status, th3, b5 = c.get("/repo/org/base/tensor/tok.table",
+                                    {"If-None-Match": etag,
+                                     "Range": "bytes=0-99"})
+            assert status == 304 and b5 == b""
+
+            # gc does not touch the record -> revalidation stays free
+            c.post("/admin/gc")
+            assert c.get(path, {"If-None-Match": etag})[0] == 304
+
+            # re-register the key: new generation, old validator dead
+            rng = np.random.RandomState(77)
+            p2 = str(tmp_path / "v2" / "model.safetensors")
+            _write_model(p2, rng, blob=True)
+            v2 = open(p2, "rb").read()
+            status, _, jb = c.put(path + "?sync=1", v2)
+            assert status == 200, jb
+            status, h5, b6 = c.get(path, {"If-None-Match": etag})
+            assert status == 200 and b6 == v2, \
+                "old ETag must MISS after re-registration"
+            assert h5["etag"] != etag
+            assert c.get(path, {"If-None-Match": h5["etag"]})[0] == 304
+            # ... and while gc reclaims the superseded generation
+            c.post("/admin/gc")
+            status, _, b7 = c.get(path, {"If-None-Match": etag})
+            assert status == 200 and b7 == v2
+
+            assert srv.server.http["conditional_requests"] >= 10
+            assert srv.server.http["not_modified"] >= 7
+        finally:
+            c.close()
+
+
+def test_delete_kills_the_validator(family_store):
+    """A deleted key stops emitting an ETag and stops revalidating."""
+    store, originals = family_store
+    with ServerThread(store, max_concurrency=2) as srv:
+        c = Client(srv)
+        try:
+            path = "/repo/u0/ft/file/model.safetensors"
+            status, h, _ = c.get(path)
+            assert status == 200
+            etag = h["etag"]
+            self_conn = c.conn  # DELETE via the same keep-alive connection
+            self_conn.request("DELETE", path)
+            r = self_conn.getresponse()
+            assert r.status == 200 and json.loads(r.read())["deleted"] == 1
+            status, h2, _ = c.get(path, {"If-None-Match": etag})
+            assert status == 404 and "etag" not in h2
+        finally:
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# Two-tier decoded cache
+# ---------------------------------------------------------------------------
+
+def test_tiered_cache_spill_promote_and_purge(tmp_path):
+    sd = str(tmp_path / "spill")
+    cache = TieredResponseCache(sd, max_bytes=150, spill_max_bytes=4096,
+                                max_items=8)
+    a, b, d = b"A" * 60, b"B" * 60, b"D" * 60
+    cache.put(("file", "r", "a"), "va", a, len(a))
+    cache.put(("file", "r", "b"), "vb", b, len(b))
+    cache.put(("file", "r", "d"), "vd", d, len(d))   # budget: evicts "a"
+    st1 = cache.stats()
+    assert st1["spilled_items"] >= 1 and cache.spill_bytes > 0
+    assert len(os.listdir(sd)) == st1["spilled_items"]
+
+    # disk hit promotes back into RAM and consumes the spill file
+    assert cache.get(("file", "r", "a"), "va") == a
+    st2 = cache.stats()
+    assert st2["disk_hits"] == 1 and st2["promotions"] == 1
+    assert cache.get(("file", "r", "a"), "va") == a   # now a RAM hit
+    assert cache.stats()["hits"] >= 1
+
+    # wrong validator is a miss on both tiers
+    assert cache.get(("file", "r", "a"), "OTHER") is None
+
+    # (bytes, meta) tuples — the tensor response shape — survive a
+    # spill/promote round trip intact
+    meta = {"dtype": "F32", "shape": [4, 2], "codec": "bitx"}
+    cache.put(("tensor", "r", "f", "t"), "vt", (b"\x07" * 64, meta), 64)
+    for i in range(4):  # push it out of RAM
+        cache.put(("file", "r", f"x{i}"), f"v{i}", bytes([i]) * 60, 60)
+    got = cache.get(("tensor", "r", "f", "t"), "vt")
+    assert got == (b"\x07" * 64, meta)
+
+    # purge drops dead entries from BOTH tiers without spilling them
+    n = cache.purge(lambda objkey, validator: False)
+    assert n >= 1 and len(cache) == 0
+    assert cache.ram_bytes == 0 and cache.spill_bytes == 0
+    assert os.listdir(sd) == []
+
+
+def test_tiered_cache_spill_budget_and_cold_start_wipe(tmp_path):
+    sd = str(tmp_path / "spill")
+    cache = TieredResponseCache(sd, max_bytes=100, spill_max_bytes=300,
+                                max_items=64)
+    for i in range(8):  # each insert evicts the previous entry to disk
+        cache.put(("file", "r", f"k{i}"), f"v{i}", bytes([i]) * 90, 90)
+    assert cache.spill_bytes <= 300  # disk tier holds its own budget
+    assert len(os.listdir(sd)) == cache.stats()["spilled_items"]
+    # a new cache over the same directory starts cold: stale spill files
+    # (another process's cache state) are wiped, not trusted
+    again = TieredResponseCache(sd, max_bytes=100)
+    assert os.listdir(sd) == [] and len(again) == 0
+
+
+def test_fsck_cleans_decoded_spill_debris(tmp_path):
+    """Crash debris contract: half-written `.part` temps under
+    `.decoded/` are fsck orphans (removed under repair=True); finished
+    spill files belong to a possibly-live engine and are left alone."""
+    store = ZLLMStore(str(tmp_path / "s"), workers=0)
+    droot = store.decoded_dir()
+    part = os.path.join(droot, "deadbeef.dec.part")
+    dec = os.path.join(droot, "cafecafe.dec")
+    for p in (part, dec):
+        with open(p, "wb") as f:
+            f.write(b"torn")
+    rep = store.fsck(repair=True, spot_check=0)
+    assert rep.ok  # orphan debris never fails the check
+    assert any(p.endswith(".part") for p in rep.orphans)
+    assert not os.path.exists(part), "crash debris survived repair"
+    assert os.path.exists(dec), "live spill file deleted by fsck"
+    store.close()
+
+
+def test_two_tier_cache_serves_spilled_tensor_byte_identical(family_store):
+    """Tentpole acceptance: a tensor evicted from the RAM tier comes back
+    from the decoded-spill tier byte-identical to `retrieve_tensor`,
+    without re-paying the decode (single-flight leader count frozen)."""
+    store, _ = family_store
+    rec = store.file_index["u0/ft/model.safetensors"]
+    reader = BitXReader.open(rec["path"])
+    bitx_names = [r.name for r in reader.records if r.codec == "bitx"]
+    reader.close()
+    name = bitx_names[0]
+    direct, _ = store.retrieve_tensor("u0/ft", "model.safetensors", name)
+
+    # RAM tier sized to hold the tensor but NOT the full file: the file
+    # GET must cascade the tensor entry onto the disk tier
+    with ServerThread(store, max_concurrency=4,
+                      cache_bytes=len(direct) + 1024,
+                      spill_bytes=64 << 20) as srv:
+        c = Client(srv)
+        try:
+            path = f"/repo/u0/ft/tensor/{name}"
+            status, _, b1 = c.get(path)
+            assert status == 200 and b1 == direct
+            status, _, full = c.get("/repo/u0/ft/file/model.safetensors")
+            assert status == 200
+            cache = srv.server.engine._cache
+            assert cache.stats()["spilled_items"] >= 1, \
+                "file GET should have spilled the tensor entry to disk"
+            leaders_before = srv.server.engine._flight.leaders
+            status, _, b2 = c.get(path)
+            assert status == 200 and b2 == direct == b1
+            st = cache.stats()
+            assert st["disk_hits"] >= 1 and st["promotions"] >= 1
+            assert srv.server.engine._flight.leaders == leaders_before, \
+                "promotion must not re-run the decode"
+        finally:
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: stale-generation cache leak
+# ---------------------------------------------------------------------------
+
+def test_slow_decode_outliving_its_generation_is_not_cached(tmp_path):
+    """Regression (failing-first against the read_gen-keyed cache): a
+    single-flight decode that completes AFTER its key is re-registered /
+    deleted used to insert its result under the dead key, where it could
+    never be hit and squatted on the byte budget until LRU pressure."""
+    rng = np.random.RandomState(9)
+    src = str(tmp_path / "hub" / "model.safetensors")
+    _write_model(src, rng)
+    blob = open(src, "rb").read()
+    store = ZLLMStore(str(tmp_path / "store"), workers=0)
+    store.ingest_file(src, "org/slow")
+
+    release = threading.Event()
+    in_flight = threading.Event()
+    real = store.retrieve_file_digest
+
+    def slow(repo_id, filename, verify=True):
+        out = real(repo_id, filename, verify=verify)  # gate released here
+        in_flight.set()
+        release.wait(30)  # hold the flight open past the mutation
+        return out
+
+    store.retrieve_file_digest = slow
+
+    async def scenario():
+        engine = RetrievalEngine(store, max_concurrency=2,
+                                 cache_bytes=1 << 20, spill_bytes=0)
+        try:
+            task = asyncio.ensure_future(
+                engine.get_file_digest("org/slow", "model.safetensors"))
+            await asyncio.get_running_loop().run_in_executor(
+                None, in_flight.wait, 30)
+            # the mutation lands mid-flight: key deleted, read_gen bumped
+            store.delete_file("org/slow", "model.safetensors")
+            release.set()
+            data, _ = await task
+            assert data == blob  # the in-flight caller still gets its bytes
+            st = engine._cache.stats()
+            assert st["items"] == 0 and st["ram_bytes"] == 0, \
+                f"dead-generation bytes squat on the budget: {st}"
+        finally:
+            await engine.aclose()
+
+    asyncio.run(scenario())
+    store.close()
+
+
+def test_gen_bump_purges_only_dead_entries(tmp_path):
+    """The purge-on-gen-bump half of the fix — and the improvement over
+    the old whole-cache wipe: a mutation of key A reclaims A's bytes
+    immediately while key B's hot entry survives."""
+    rng = np.random.RandomState(10)
+    store = ZLLMStore(str(tmp_path / "store"), workers=0)
+    blobs = {}
+    for repo in ("org/a", "org/b"):
+        p = str(tmp_path / repo.replace("/", "_") / "model.safetensors")
+        _write_model(p, rng)
+        store.ingest_file(p, repo)
+        blobs[repo] = open(p, "rb").read()
+
+    async def scenario():
+        engine = RetrievalEngine(store, max_concurrency=2,
+                                 cache_bytes=1 << 20, spill_bytes=0)
+        try:
+            for repo in blobs:
+                data, _ = await engine.get_file_digest(repo,
+                                                       "model.safetensors")
+                assert data == blobs[repo]
+            assert engine._cache.stats()["items"] == 2
+            both = engine._cache.ram_bytes
+            store.delete_file("org/a", "model.safetensors")  # bumps read_gen
+            # next access observes the bump and purges ONLY the dead entry
+            data, _ = await engine.get_file_digest("org/b",
+                                                   "model.safetensors")
+            assert data == blobs["org/b"]
+            st = engine._cache.stats()
+            assert st["purged"] == 1 and st["items"] == 1
+            assert engine._cache.ram_bytes == both - len(blobs["org/a"])
+        finally:
+            await engine.aclose()
+
+    asyncio.run(scenario())
+    store.close()

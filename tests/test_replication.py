@@ -12,8 +12,10 @@ live-tensor loss. This suite kills at each point in
 restarted node, and proves exactly that.
 """
 
+import http.client
 import os
 import struct
+import threading
 import time
 from collections import OrderedDict
 
@@ -25,6 +27,7 @@ from repro.core.pipeline import AutoCompactPolicy, ZLLMStore
 from repro.formats import safetensors as st
 from repro.serve.router import (REPLICATION_FAULT_POINTS, QuorumError,
                                 StoreRouter)
+from repro.serve.store_server import ServerThread
 
 N_ROOTS = 3
 FNAME = "model.safetensors"
@@ -471,3 +474,215 @@ def test_gc_fires_auto_compact_at_watermark(tmp_path):
     store.gc()
     assert store.stats.auto_compact_runs == 1
     store.close()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: probe thundering herd after the backoff expires
+# ---------------------------------------------------------------------------
+
+def test_probe_after_backoff_is_claimed_single_flight(tmp_path):
+    """Regression (failing-first): once a suspect root's backoff deadline
+    passed, `_probe_ok` used to return True for EVERY concurrent caller,
+    so all waiting reads led with the just-recovered root at once. The
+    probe is now claimed: exactly one concurrent read targets it, the
+    rest keep it as a last resort until the claimant's request resolves."""
+    router = _cluster(str(tmp_path))
+    try:
+        repo = "org/herd"
+        group = router.replica_roots(repo)
+        victim = group[0]
+        router.note_failure(victim)  # suspect, 0.5 s backoff
+        assert router.read_candidates(repo, FNAME)[-1] == victim
+        time.sleep(0.6)              # the probe deadline passes
+
+        n = 8
+        barrier = threading.Barrier(n)
+        leads, lock = [], threading.Lock()
+
+        def read():
+            barrier.wait()
+            cands = router.read_candidates(repo, FNAME)
+            with lock:
+                leads.append(cands[0])
+
+        threads = [threading.Thread(target=read) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert leads.count(victim) == 1, \
+            f"{leads.count(victim)}/{n} concurrent reads probed the " \
+            f"recovering root (thundering herd)"
+        # the claimant's outcome resolves the probe either way
+        router.note_success(victim)
+        assert router.read_candidates(repo, FNAME)[0] == victim
+        router.note_failure(victim)  # failed probe: suspect again, longer
+        assert router.read_candidates(repo, FNAME)[-1] == victim
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# read-repair: a failover read off a divergent replica converges the group
+# ---------------------------------------------------------------------------
+
+class _Client:
+    """Minimal HTTP client for the read-repair tests."""
+
+    def __init__(self, srv):
+        self.conn = http.client.HTTPConnection(srv.host, srv.port, timeout=60)
+
+    def get(self, path, headers=None):
+        self.conn.request("GET", path, headers=headers or {})
+        r = self.conn.getresponse()
+        return r.status, dict(r.getheaders()), r.read()
+
+    def close(self):
+        self.conn.close()
+
+
+def _diverge(router, tmp, repo_id, seed):
+    """Down the repo's first replica, advance the others one generation,
+    bring it back: the group now disagrees on (key, gen)."""
+    victim = router.replica_roots(repo_id)[0]
+    router.set_root_down(victim)
+    blob, _ = _put(router, tmp, repo_id, seed)
+    _drain_workers(router)  # incl. the automatic straggler repair, which
+    # cannot reach the down root and leaves the divergence in place
+    router.set_root_down(victim, down=False)
+    return victim, blob
+
+
+def test_failover_read_schedules_scoped_read_repair(tmp_path):
+    """Tentpole acceptance: a read off a divergent group serves the
+    strongest validator, schedules an asynchronous per-repo repair that
+    converges the group — and does NOT run a full sweep (an unrelated
+    divergent repo stays divergent until its own repair)."""
+    tmp = str(tmp_path)
+    router = _cluster(tmp)
+    router.READ_REPAIR_COOLDOWN_S = 0.0
+    try:
+        blob1, _ = _put(router, tmp, "org/rr", seed=60)
+        _put(router, tmp, "org/other", seed=61)
+        _drain_workers(router)
+        victim, blob2 = _diverge(router, tmp, "org/rr", seed=62)
+        _, blob_o2 = _diverge(router, tmp, "org/other", seed=63)
+        assert router.replica_index_diff(repos=["org/rr"]) != {}
+        key = f"org/rr/{FNAME}"
+
+        with ServerThread(router, max_concurrency=2) as srv:
+            c = _Client(srv)
+            try:
+                newest = max(r.file_index[key]["gen"]
+                             for r in router.roots.values())
+                status, h, body = c.get(f"/repo/org/rr/file/{FNAME}")
+                # the plan orders strongest-record-first: the stale
+                # replica never wins, a failover read never serves a
+                # weaker validator
+                assert status == 200 and body == blob2
+                assert h["etag"] == f'"{key}@g{newest}"'
+                # the stale generation's validator misses; the current
+                # one revalidates — even across failover ordering
+                s2, _, b2 = c.get(f"/repo/org/rr/file/{FNAME}",
+                                  {"If-None-Match": f'"{key}@g{newest - 1}"'})
+                assert s2 == 200 and b2 == blob2
+                assert c.get(f"/repo/org/rr/file/{FNAME}",
+                             {"If-None-Match":
+                              f'"{key}@g{newest}"'})[0] == 304
+                deadline = time.monotonic() + 30
+                while router.replica_index_diff(repos=["org/rr"]) \
+                        and time.monotonic() < deadline:
+                    time.sleep(0.05)
+            finally:
+                c.close()
+
+        assert router.read_repairs >= 1
+        assert router.replica_index_diff(repos=["org/rr"]) == {}, \
+            "read-repair never converged the group"
+        assert router.roots[victim].retrieve_file("org/rr", FNAME) == blob2
+        # scoped, not a sweep: the other divergent repo was left alone
+        assert router.replica_index_diff(repos=["org/other"]) != {}
+        # end state: one explicit sweep, full convergence, byte oracle
+        router.anti_entropy()
+        _drain_workers(router)
+        _assert_converged(router, {"org/rr": blob2, "org/other": blob_o2})
+    finally:
+        router.close()
+
+
+def test_read_repair_killed_mid_copy_retriggers_and_heals(tmp_path):
+    """Fault-injection harness over the read-repair path: the first
+    repair job dies at `anti_entropy.mid_copy` (error recorded, no
+    convergence); the next failover read schedules a fresh repair that
+    heals the group. Idempotent adoption makes the retry safe."""
+    tmp = str(tmp_path)
+    router = _cluster(tmp)
+    router.READ_REPAIR_COOLDOWN_S = 0.0
+    try:
+        _put(router, tmp, "org/rk", seed=70)
+        _drain_workers(router)
+        victim, blob2 = _diverge(router, tmp, "org/rk", seed=71)
+        fired = []
+
+        def hook(point):
+            if point == "anti_entropy.mid_copy" and not fired:
+                fired.append(point)
+                raise RuntimeError(f"injected fault: {point}")
+
+        router.fault_hook = hook
+        with ServerThread(router, max_concurrency=2) as srv:
+            c = _Client(srv)
+            try:
+                status, _, body = c.get(f"/repo/org/rk/file/{FNAME}")
+                assert status == 200 and body == blob2
+                _drain_workers(router)
+                assert fired == ["anti_entropy.mid_copy"]
+                # poisoned repair: the group is still divergent
+                assert router.replica_index_diff(repos=["org/rk"]) != {}
+                # the next read re-triggers; this repair completes
+                status, _, body = c.get(f"/repo/org/rk/file/{FNAME}")
+                assert status == 200 and body == blob2
+                deadline = time.monotonic() + 30
+                while router.replica_index_diff(repos=["org/rk"]) \
+                        and time.monotonic() < deadline:
+                    time.sleep(0.05)
+            finally:
+                c.close()
+        router.fault_hook = None
+        assert router.read_repairs >= 2
+        assert router.replica_index_diff(repos=["org/rk"]) == {}
+        _drain_workers(router)
+        _assert_converged(router, {"org/rk": blob2})
+    finally:
+        router.close()
+
+
+def test_read_repair_is_deduped_and_cooled_down(tmp_path):
+    """One in-flight repair per repo, plus a completion cooldown: a
+    persistently divergent group must not enqueue one job per read."""
+    tmp = str(tmp_path)
+    router = _cluster(tmp)
+    try:
+        _put(router, tmp, "org/cd", seed=80)
+        _drain_workers(router)
+        victim = router.replica_roots("org/cd")[0]
+        router.set_root_down(victim)  # keep one root down: repair cannot
+        # converge the group, so every read sees the same divergence
+        blob2, _ = _put(router, tmp, "org/cd", seed=81)
+        _drain_workers(router)
+        before = router.read_repairs
+        first = router.schedule_read_repair("org/cd")
+        assert first is not None
+        # in-flight dedupe: an immediate reschedule is dropped
+        assert router.schedule_read_repair("org/cd") is None
+        _drain_workers(router)
+        # cooldown (default 5 s): a repair that JUST finished is not
+        # rescheduled on the next read either
+        assert router.schedule_read_repair("org/cd") is None
+        assert router.read_repairs == before + 1
+        # zero cooldown (test override): reschedules immediately
+        router.READ_REPAIR_COOLDOWN_S = 0.0
+        assert router.schedule_read_repair("org/cd") is not None
+        _drain_workers(router)
+    finally:
+        router.close()
