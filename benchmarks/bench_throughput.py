@@ -413,11 +413,18 @@ def replication_bench(ctx: Ctx) -> dict:
     throughput through failover with one root down, and the wall time of
     the anti-entropy sweep that converges the restarted root. The leg's
     correctness assertions (zero failed reads, byte-identity, empty index
-    diff) must hold or the bench aborts."""
-    from benchmarks.server_smoke import replica_leg
+    diff) must hold or the bench aborts. The peer chaos leg then runs the
+    same coordinator against two HTTP peers behind a chaos proxy and
+    folds in the cross-process figures — targeted hint-drain wall time
+    and the anti-entropy wire-shipping throughput of a dead-node swap
+    (``hint_drain_s``, ``peer_ship_MBps``)."""
+    from benchmarks.server_smoke import peer_chaos_leg, replica_leg
 
     failures, metrics = replica_leg(ctx)
     assert not failures, f"replica leg failed: {failures[:3]}"
+    p_failures, p_metrics = peer_chaos_leg(ctx)
+    assert not p_failures, f"peer chaos leg failed: {p_failures[:3]}"
+    metrics.update(p_metrics)
     return metrics
 
 

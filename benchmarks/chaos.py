@@ -1,0 +1,134 @@
+"""Chaos TCP proxy: a live-settable fault injector for the peer wire.
+
+Sits between a :class:`repro.serve.peer.PeerStore` client and a real
+store server so chaos suites and benches can fail the NETWORK without
+touching either process. One proxy fronts one upstream; ``mode`` is read
+per accepted connection, so a test flips it mid-run to partition, heal,
+or kill transfers mid-body:
+
+* ``pass``      — byte-for-byte forwarding (the healthy wire).
+* ``drop``      — accept, then close immediately: the client sees a
+                  reset/EOF at once (a fast partition — no timeouts).
+* ``blackhole`` — accept and swallow bytes, never answer: the client
+                  hangs until its own socket timeout (a slow partition).
+* ``delay``     — forward after ``delay_s`` of added one-way latency.
+* ``truncate``  — forward only the first ``truncate_after`` client->
+                  upstream bytes of each connection, then sever both
+                  sides: an upload dies mid-body, the server keeps a
+                  ``.part``, the client must resume or fail.
+
+Used by ``tests/test_peer_replication.py`` and the ``peer_chaos_leg``
+bench in ``benchmarks/server_smoke.py``.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+
+def _close(sock: socket.socket) -> None:
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass
+
+
+class ChaosProxy:
+    """TCP forwarder with live-settable failure modes (see module doc)."""
+
+    def __init__(self, upstream_host: str, upstream_port: int,
+                 host: str = "127.0.0.1"):
+        self.upstream = (upstream_host, upstream_port)  # settable: a test
+        # may re-point the proxy at a restarted upstream on a new port
+        self.host = host
+        self.port: int = 0
+        self.mode = "pass"
+        self.delay_s = 0.2
+        self.truncate_after = 1500  # client->upstream bytes per connection
+        self.conns = 0
+        self._lsock: socket.socket = None
+        self._stop = threading.Event()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "ChaosProxy":
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((self.host, 0))
+        self._lsock.listen(64)
+        self.port = self._lsock.getsockname()[1]
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"chaos-proxy:{self.port}").start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._lsock is not None:
+            _close(self._lsock)
+
+    # -- internals ---------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                client, _ = self._lsock.accept()
+            except OSError:
+                return
+            self.conns += 1
+            threading.Thread(target=self._handle, args=(client, self.mode),
+                             daemon=True).start()
+
+    def _handle(self, client: socket.socket, mode: str) -> None:
+        if mode == "drop":
+            _close(client)
+            return
+        if mode == "blackhole":
+            try:  # swallow everything, answer nothing: the client's own
+                # socket timeout is the only way out
+                while client.recv(1 << 16):
+                    pass
+            except OSError:
+                pass
+            _close(client)
+            return
+        try:
+            up = socket.create_connection(self.upstream, timeout=10)
+        except OSError:
+            _close(client)
+            return
+        if mode == "delay":
+            time.sleep(self.delay_s)
+        budget = self.truncate_after if mode == "truncate" else None
+        t = threading.Thread(target=self._pump, args=(up, client, None),
+                             daemon=True)
+        t.start()
+        self._pump(client, up, budget)
+        t.join(timeout=10)
+
+    def _pump(self, src: socket.socket, dst: socket.socket,
+              budget) -> None:
+        """Forward src -> dst; with a byte ``budget``, sever both sides
+        the moment it is spent (the truncate-mid-body kill)."""
+        try:
+            while True:
+                data = src.recv(1 << 16)
+                if not data:
+                    break
+                if budget is not None:
+                    data = data[:budget]
+                    budget -= len(data)
+                dst.sendall(data)
+                if budget is not None and budget <= 0:
+                    break
+        except OSError:
+            pass
+        finally:
+            _close(src)
+            _close(dst)

@@ -63,7 +63,7 @@ from typing import Dict, List, Tuple
 # could silently gate unrelated cache counters.
 GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
                   "compaction_reclaimed_bytes", "keepalive_reqs_per_s",
-                  "range_read_MBps", "failover_read_MBps",
+                  "range_read_MBps", "failover_read_MBps", "peer_ship_MBps",
                   "xor_split_MBps", "merge_xor_MBps", "byte_planes_MBps",
                   "device_batched_MBps",
                   "cluster.family_f1", "reduction.ratio",
@@ -85,6 +85,13 @@ GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
 # on stragglers (or the retry/backoff path engaged on healthy roots); a
 # repair-time blow-up means anti-entropy stopped diffing per-key state and
 # went back to shipping everything.
+# hint_drain_s is the peer chaos leg's targeted hinted-handoff drain: a
+# blow-up means the drain stopped shipping exactly the hinted keys and
+# regressed into a full diff-everything sweep (its floor matches
+# anti_entropy_repair_s — any drain inside 5 s is fine on a tiny
+# baseline). peer_ship_MBps above is its drop-gated dual: the verbatim
+# container throughput of a dead-node re-ship over the chaos-proxied
+# HTTP wire.
 # serving.p99_ms is the loadgen leg's per-request p99 (cold decodes
 # included): a blow-up means the read path's tail regressed — conditional
 # fast path gone, response cache thrashing, or single-flight decodes
@@ -94,13 +101,14 @@ GATED_SUFFIXES = ("ingest_MBps", "retrieve_MBps", "concurrent_retrieve_MBps",
 # floor (like incremental_gc_max_pause_ms), so scheduler noise on a
 # millisecond-scale localhost baseline cannot fail CI.
 GATED_INVERSE_SUFFIXES = ("incremental_gc_max_pause_ms", "quorum_put_p99_ms",
-                          "anti_entropy_repair_s", "serving.p99_ms")
+                          "anti_entropy_repair_s", "hint_drain_s",
+                          "serving.p99_ms")
 INVERSE_FAIL_FLOOR = 250.0  # ms: rises that stay under this never fail
 # Per-suffix absolute fail floors, in each key's OWN unit (the gc pause and
 # quorum p99 are milliseconds; the anti-entropy repair is wall seconds —
 # a sweep that finishes inside 5 s is fine at any multiplier on a tiny
 # baseline). Suffixes not listed here use INVERSE_FAIL_FLOOR.
-INVERSE_FAIL_FLOORS = {"anti_entropy_repair_s": 5.0}
+INVERSE_FAIL_FLOORS = {"anti_entropy_repair_s": 5.0, "hint_drain_s": 5.0}
 
 
 def _flatten(d: Dict, prefix: str = "") -> Dict:

@@ -673,6 +673,11 @@ class ZLLMStore:
         # incremental GC: resumable sweep cursor (last retired vid; persisted
         # in the v3 index so a restarted store continues where it left off)
         self._gc_cursor = ""
+        # hinted-handoff log (replication): appends/rewrites of
+        # ``<root>/hints.jsonl`` serialize on this lock, independent of the
+        # admin lock — recording a hint must not wait on a running gc
+        self._hints_lock = threading.Lock()
+        self._hint_seq = 0
         # automatic compaction: None keeps compact() admin-only (the
         # pre-existing behavior); a policy makes every completed gc sweep
         # evaluate the superseded-bytes watermark and chain into compact()
@@ -2508,6 +2513,102 @@ class ZLLMStore:
             self.save_index()
             return True
 
+    # -- hinted handoff log ------------------------------------------------
+    # A quorum write that lands below full fan-out owes the missed replica
+    # its bytes. The router records that debt here — one JSON line per
+    # hint in ``<root>/hints.jsonl``, beside the index it must survive
+    # with — and a background drainer re-ships exactly the hinted keys
+    # when the peer's health probe recovers, so a brief outage never
+    # requires a full anti-entropy sweep.
+
+    def hints_path(self) -> str:
+        return os.path.join(self.root, "hints.jsonl")
+
+    def record_hint(self, peer: str, repo_id: str, filename: str,
+                    spool_ref: Optional[str] = None,
+                    base: Optional[str] = None) -> str:
+        """Durably append one handoff hint (fsync'd before returning: a
+        hint that vanished in a crash would silently strand the replica
+        until the next full sweep). ``spool_ref`` names a spooled copy of
+        the written bytes owned by this hint — dropped with it."""
+        with self._hints_lock:
+            self._hint_seq += 1
+            hid = f"h{os.getpid():x}-{self._hint_seq:x}-{time.time_ns():x}"
+            row = {"id": hid, "peer": peer, "repo_id": repo_id,
+                   "filename": filename, "spool_ref": spool_ref,
+                   "base": base, "ts": time.time()}
+            with open(self.hints_path(), "a", encoding="utf-8") as f:
+                f.write(json.dumps(row) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            return hid
+
+    def pending_hints(self, peer: Optional[str] = None) -> List[Dict]:
+        """All recorded hints (optionally for one peer), oldest first. A
+        torn final line (crash mid-append) is skipped, not fatal — the
+        write that owned it never got its hint id back."""
+        out: List[Dict] = []
+        with self._hints_lock:
+            try:
+                with open(self.hints_path(), "r", encoding="utf-8") as f:
+                    lines = f.readlines()
+            except OSError:
+                return out
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except ValueError:
+                continue  # torn tail from a crash mid-append
+            if peer is None or row.get("peer") == peer:
+                out.append(row)
+        return out
+
+    def drop_hints(self, hint_ids: Sequence[str]) -> int:
+        """Atomically rewrite the log without ``hint_ids`` (tmp+replace,
+        same discipline as the index) and delete their spooled copies.
+        Returns how many hints were actually dropped."""
+        drop = set(hint_ids)
+        if not drop:
+            return 0
+        dropped = 0
+        refs: List[str] = []
+        with self._hints_lock:
+            try:
+                with open(self.hints_path(), "r", encoding="utf-8") as f:
+                    lines = f.readlines()
+            except OSError:
+                return 0
+            keep: List[str] = []
+            for line in lines:
+                s = line.strip()
+                if not s:
+                    continue
+                try:
+                    row = json.loads(s)
+                except ValueError:
+                    continue
+                if row.get("id") in drop:
+                    dropped += 1
+                    if row.get("spool_ref"):
+                        refs.append(row["spool_ref"])
+                else:
+                    keep.append(s)
+            tmp = self.hints_path() + TMP_SUFFIX
+            with open(tmp, "w", encoding="utf-8") as f:
+                f.write("".join(k + "\n" for k in keep))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.hints_path())
+        for ref in refs:
+            try:
+                os.remove(ref)
+            except OSError:
+                pass
+        return dropped
+
     def _fault(self, point: str) -> None:
         """Crash-injection boundary: the recovery harness installs
         ``fault_hook`` and raises from it to simulate a kill at ``point``.
@@ -3196,6 +3297,30 @@ class ZLLMStore:
                     else:
                         report.repaired.append(
                             (p, "decoded-spill temp deleted"))
+
+        # spool transfer debris: peer replication stages shipped container
+        # bytes as ``.spool/*.part`` (resumable adopt/fetch uploads). A
+        # surviving ``.part`` there is a transfer killed mid-body — nothing
+        # references it, and the shipping protocol restarts from offset 0
+        # after a 409 re-sync, so deleting it only costs the resume.
+        # Finished spool files (fan-out copies, pending ingests) are owned
+        # by their enqueue jobs and stay untouched.
+        sroot = self.spool_dir()
+        if os.path.isdir(sroot):
+            for fn in sorted(os.listdir(sroot)):
+                if not fn.endswith(TMP_SUFFIX):
+                    continue
+                p = os.path.abspath(os.path.join(sroot, fn))
+                report.orphans.append(p)
+                if repair:
+                    try:
+                        os.remove(p)
+                    except OSError as e:
+                        report.dangling.append(
+                            (p, f"orphan delete failed: {e}"))
+                    else:
+                        report.repaired.append(
+                            (p, "spool transfer temp deleted"))
         return report
 
     def _hash_resolves(self, thash: str) -> bool:

@@ -58,11 +58,18 @@ from repro.core.pipeline import ZLLMStore
 __all__ = ["StoreRouter", "RootDownError", "QuorumError",
            "REPLICATION_FAULT_POINTS"]
 
-# Fault points the replication crash harness (tests/test_replication.py)
-# may kill the router at, via ``router.fault_hook`` — same contract as the
-# store's COMPACT/GC fault points: no cleanup runs when the hook raises.
+# Fault points the replication crash harness (tests/test_replication.py,
+# tests/test_peer_replication.py) may kill the router at, via
+# ``router.fault_hook`` — same contract as the store's COMPACT/GC fault
+# points: no cleanup runs when the hook raises. The ``peer.*`` points fire
+# on the wire protocol (``peer.ship_mid_body`` from the shipping client
+# after the first body chunk, ``peer.adopt_pre_persist`` on the receiving
+# server between adopt and index persist); ``hint.pre_drain_persist``
+# fires after a hinted re-ship lands but before the hint log drops it.
 REPLICATION_FAULT_POINTS = ("put.mid_fanout", "put.post_quorum",
-                            "anti_entropy.mid_copy", "restore.mid_copy")
+                            "anti_entropy.mid_copy", "restore.mid_copy",
+                            "peer.ship_mid_body", "peer.adopt_pre_persist",
+                            "hint.pre_drain_persist")
 
 
 class RootDownError(ConnectionError):
@@ -119,6 +126,11 @@ class StoreRouter:
     # previous one finishing (a persistently-down replica would otherwise
     # enqueue one repair job per failover read)
     READ_REPAIR_COOLDOWN_S = 5.0
+    # repair-pending backlog bound: entries expire after the TTL (a sweep
+    # covers everything anyway) and the newest-first cap stops a
+    # permanently-down replica from growing the set without limit
+    REPAIR_PENDING_TTL_S = 3600.0
+    REPAIR_PENDING_MAX = 4096
 
     def __init__(self, stores: Union[Dict[str, ZLLMStore],
                                      Sequence[ZLLMStore], ZLLMStore],
@@ -150,19 +162,77 @@ class StoreRouter:
                                                 for n in self.roots}
         self._health_lock = threading.Lock()
         self._ae_lock = threading.Lock()  # one anti-entropy sweep at a time
-        self._repair_pending: Set[str] = set()
+        # repos owed a repair pass, with the monotonic stamp they were
+        # queued at: TTL-expired and size-capped (REPAIR_PENDING_*) so a
+        # permanently-down replica cannot grow the backlog forever
+        self._repair_pending: "OrderedDict[str, float]" = OrderedDict()
         # read-repair bookkeeping: one in-flight repair per repo, plus a
         # completion stamp for the reschedule cooldown
         self._read_repair_inflight: Set[str] = set()
         self._read_repair_done: Dict[str, float] = {}
         self.read_repairs = 0  # repairs actually scheduled (stats)
+        # replication counters (stats + the hinted-handoff "no full sweep"
+        # assertion): sweeps run, hints recorded / drained
+        self.anti_entropy_sweeps = 0
+        self.hints_recorded = 0
+        self.hints_drained = 0
+        self._hint_drain_inflight = False
         # crash-injection hook (REPLICATION_FAULT_POINTS), mirroring
         # store.fault_hook; never set in production
         self.fault_hook = None
+        # remote peers route their wire-protocol fault points (e.g.
+        # peer.ship_mid_body) through this router's hook
+        for s in self.roots.values():
+            if self._is_peer(s) and getattr(s, "fault_hook", None) is None:
+                s.fault_hook = self._fault
 
     def _fault(self, point: str) -> None:
         if self.fault_hook is not None:
             self.fault_hook(point)
+
+    # -- topology kinds ---------------------------------------------------
+    @staticmethod
+    def _is_peer(store) -> bool:
+        """Remote :class:`repro.serve.peer.PeerStore` roots mark themselves
+        with ``is_peer`` — they take ships/adopts over the wire but have no
+        local bytes, job workers, or hint log of their own."""
+        return bool(getattr(store, "is_peer", False))
+
+    def local_items(self) -> List[Tuple[str, ZLLMStore]]:
+        return [(n, s) for n, s in self.roots.items() if not self._is_peer(s)]
+
+    def peer_names(self) -> List[str]:
+        return [n for n, s in self.roots.items() if self._is_peer(s)]
+
+    def _first_local_up(self, prefer: Iterable[str] = ()) -> Optional[str]:
+        """First healthy local root, preferring ``prefer`` order — the
+        host for background jobs and the hint log."""
+        for name in list(prefer) + [n for n, _ in self.local_items()]:
+            store = self.roots.get(name)
+            if store is not None and not self._is_peer(store) \
+                    and self.is_up(name):
+                return name
+        return None
+
+    # -- repair-pending backlog (TTL + cap) --------------------------------
+    def _note_repair_pending(self, repo_id: str) -> None:
+        with self._health_lock:
+            self._repair_pending.pop(repo_id, None)
+            self._repair_pending[repo_id] = time.monotonic()
+            while len(self._repair_pending) > self.REPAIR_PENDING_MAX:
+                self._repair_pending.popitem(last=False)  # oldest out
+
+    def _pending_repairs(self) -> Set[str]:
+        """Live (non-expired) repair-pending repos; prunes expired entries
+        in place. Expiry is safe — the periodic full sweep covers every
+        repo regardless; the backlog only prioritizes."""
+        cutoff = time.monotonic() - self.REPAIR_PENDING_TTL_S
+        with self._health_lock:
+            expired = [r for r, ts in self._repair_pending.items()
+                       if ts < cutoff]
+            for r in expired:
+                del self._repair_pending[r]
+            return set(self._repair_pending)
 
     # -- health tracking --------------------------------------------------
     def set_root_down(self, name: str, down: bool = True) -> None:
@@ -193,8 +263,16 @@ class StoreRouter:
     def note_success(self, name: str) -> None:
         with self._health_lock:
             h = self._health[name]
+            recovered = h.fails > 0
             h.fails = 0
             h.suspect_until = 0.0
+        # organic recovery (the health probe just cleared a suspect root):
+        # if this root is owed hinted handoffs, schedule their drain now —
+        # targeted re-ship instead of waiting for a full sweep. Manual
+        # set_root_down(False) deliberately does NOT trigger this: chaos
+        # tests heal topology without implying the hints should move.
+        if recovered and self._has_hints_for(name):
+            self.schedule_hint_drain(peer=name)
 
     def _probe_ok(self, name: str) -> bool:
         """True when the root may be tried: up, and either healthy or past
@@ -403,8 +481,7 @@ class StoreRouter:
                     < self.READ_REPAIR_COOLDOWN_S:
                 return None
             self._read_repair_inflight.add(repo_id)
-        healthy = next((n for n in self.replica_roots(repo_id)
-                        if self.is_up(n)), None)
+        healthy = self._first_local_up(prefer=self.replica_roots(repo_id))
         if healthy is None:
             with self._health_lock:
                 self._read_repair_inflight.discard(repo_id)
@@ -497,20 +574,31 @@ class StoreRouter:
                                            filename, base)
             if jid is None:
                 failed.append(name)
-                try:  # the staged copy has no owner now
-                    os.remove(staged[name])
-                except OSError:
-                    pass
             else:
                 jobs[name] = jid
         if failed and jobs:
-            with self._health_lock:
-                self._repair_pending.add(repo_id)
-            healthy = next(iter(jobs))
-            self.roots[healthy].enqueue_repair(
-                lambda rid=repo_id: self.anti_entropy(repos=[rid]),
-                note=f"straggler repair: {repo_id} missed "
-                     f"{','.join(failed)}")
+            # hinted handoff: each missed replica gets a durable per-peer
+            # hint (key + the staged spool copy) on a healthy local root;
+            # the drainer re-ships exactly these keys when the replica's
+            # health probe recovers — no full sweep needed for a blip.
+            # Recording falls back to the repair-pending backlog (next
+            # sweep) when no local root can host the hint log.
+            for name in failed:
+                if self._record_hint(name, repo_id, filename,
+                                     staged.get(name), base) is None:
+                    self._note_repair_pending(repo_id)
+            healthy = self._first_local_up(prefer=list(jobs))
+            if healthy is not None:
+                self.roots[healthy].enqueue_repair(
+                    lambda rid=repo_id: self.anti_entropy(repos=[rid]),
+                    note=f"straggler repair: {repo_id} missed "
+                         f"{','.join(failed)}")
+        elif failed:
+            for name in failed:  # no quorum: the staged copies have no owner
+                try:
+                    os.remove(staged[name])
+                except OSError:
+                    pass
         if len(jobs) < self.write_quorum:
             raise QuorumError(
                 f"write quorum not met for {repo_id}/{filename}: "
@@ -589,10 +677,220 @@ class StoreRouter:
                 self.note_failure(name)
                 failed.append(name)
         if failed:
-            with self._health_lock:
-                self._repair_pending.add(repo_id)
+            self._note_repair_pending(repo_id)
         return {"deleted": max(counts.values(), default=0),
                 "roots": counts, "failed": failed}
+
+    # -- hinted handoff ----------------------------------------------------
+    # A quorum write below full fan-out owes the missed replica its bytes.
+    # Rather than waiting for a full anti-entropy sweep, the router records
+    # a durable per-peer hint (key + staged spool bytes) on a healthy local
+    # root (``ZLLMStore.record_hint`` — fsync'd JSONL beside the index) and
+    # re-ships exactly the hinted keys once the peer's health probe
+    # recovers (``note_success`` after a suspect streak).
+
+    def _record_hint(self, peer: str, repo_id: str, filename: str,
+                     staged: Optional[str],
+                     base: Optional[str]) -> Optional[str]:
+        """Durably record one handoff hint; the staged fan-out copy moves
+        into the hint host's spool so it survives until the drain. Returns
+        ``None`` (caller falls back to the repair-pending backlog) when no
+        local root can host the log."""
+        host_name = self._first_local_up()
+        if host_name is None:
+            if staged:
+                try:
+                    os.remove(staged)
+                except OSError:
+                    pass
+            return None
+        host = self.roots[host_name]
+        ref: Optional[str] = None
+        if staged and os.path.exists(staged):
+            ref = os.path.join(host.spool_dir(),
+                               f"hint-{os.getpid()}-"
+                               f"{os.path.basename(staged)}")
+            if os.path.abspath(ref) == os.path.abspath(staged):
+                ref = staged
+            else:
+                try:
+                    os.replace(staged, ref)
+                except OSError:
+                    try:  # cross-filesystem staging (a peer's tempdir)
+                        with open(staged, "rb") as fin, \
+                                open(ref, "wb") as fout:
+                            while True:
+                                chunk = fin.read(1 << 20)
+                                if not chunk:
+                                    break
+                                fout.write(chunk)
+                        os.remove(staged)
+                    except OSError:
+                        ref = None
+        hid = host.record_hint(peer, repo_id, filename, ref, base=base)
+        self.hints_recorded += 1
+        return hid
+
+    def _has_hints_for(self, peer: str) -> bool:
+        for _, host in self.local_items():
+            try:
+                if host.pending_hints(peer):
+                    return True
+            except Exception:
+                continue
+        return False
+
+    def pending_hint_count(self, peer: Optional[str] = None) -> int:
+        return sum(len(host.pending_hints(peer))
+                   for _, host in self.local_items())
+
+    def _peer_alive(self, name: str) -> bool:
+        """Is the replica actually reachable right now? Local roots are
+        alive when up; a remote peer gets a real ``/healthz`` probe —
+        draining hints into a half-recovered peer would just re-fail."""
+        if not self.is_up(name):
+            return False
+        store = self.roots[name]
+        if self._is_peer(store):
+            return bool(store.probe())
+        return True
+
+    def schedule_hint_drain(self, peer: Optional[str] = None,
+                            note: str = "") -> Optional[str]:
+        """Run :meth:`drain_hints` on a healthy local root's background
+        job worker (single-flight — recovery storms collapse into one
+        drain). Returns the job id, or ``None`` when deduped or no local
+        root is up."""
+        with self._health_lock:
+            if self._hint_drain_inflight:
+                return None
+            self._hint_drain_inflight = True
+        host_name = self._first_local_up()
+        if host_name is None:
+            with self._health_lock:
+                self._hint_drain_inflight = False
+            return None
+
+        def run(p=peer):
+            try:
+                return self.drain_hints(peer=p)
+            finally:
+                with self._health_lock:
+                    self._hint_drain_inflight = False
+
+        try:
+            return self.roots[host_name].enqueue_repair(
+                run, note=note or f"hint drain: {peer or 'all peers'}")
+        except Exception:
+            with self._health_lock:
+                self._hint_drain_inflight = False
+            raise
+
+    def drain_hints(self, peer: Optional[str] = None) -> Dict:
+        """Re-ship every recorded hint (optionally one peer's) whose
+        target is reachable: exactly the hinted keys move — by closure
+        ship from the strongest live source, falling back to re-ingesting
+        the staged spool bytes — and drained hints leave the log
+        atomically. Unreachable targets keep their hints for the next
+        recovery. This is the targeted alternative to a full sweep: it
+        never diffs, never touches unhinted keys, and does not bump
+        ``anti_entropy_sweeps``."""
+        report = {"drained": 0, "kept": 0, "requeued": 0,
+                  "shipped_versions": 0, "shipped_bytes": 0,
+                  "records_updated": 0, "errors": []}
+        alive: Dict[str, bool] = {}
+        for host_name, host in self.local_items():
+            hints = host.pending_hints(peer)
+            if not hints:
+                continue
+            done: List[str] = []
+            for h in hints:
+                tgt = h.get("peer")
+                if tgt not in self.roots:
+                    done.append(h["id"])  # replica left the topology
+                    continue
+                if tgt not in alive:
+                    alive[tgt] = self._peer_alive(tgt)
+                if not alive[tgt]:
+                    report["kept"] += 1
+                    continue
+                try:
+                    ok = self._drain_one_hint(h, report)
+                except Exception as e:
+                    report["errors"].append(
+                        f"hint {h.get('id')} -> {tgt}: "
+                        f"{type(e).__name__}: {e}")
+                    report["kept"] += 1
+                    alive[tgt] = self._peer_alive(tgt)  # it may have died
+                    continue
+                if ok:
+                    done.append(h["id"])
+                else:
+                    report["kept"] += 1
+            if done:
+                # crash window under test: the re-ship landed but the log
+                # has not dropped the hint — recovery re-drains; shipping
+                # is idempotent, so the replay converges to the same state
+                self._fault("hint.pre_drain_persist")
+                dropped = host.drop_hints(done)
+                self.hints_drained += dropped
+                report["drained"] += dropped
+        return report
+
+    def _drain_one_hint(self, h: Dict, report: Dict) -> bool:
+        """Converge one hinted key on its target. True == the debt is
+        settled (shipped, already converged, deletion won, or re-queued
+        into the target's own ingest) and the hint may drop."""
+        tgt = h["peer"]
+        repo_id, filename = h["repo_id"], h["filename"]
+        key = f"{repo_id}/{filename}"
+        t_store = self.roots[tgt]
+        if self._is_peer(t_store):
+            t_store.refresh_snapshot()
+        tgt_state = self._key_state(tgt, key)
+        sources = {}
+        for n, s in self.local_items():
+            if n != tgt and self.is_up(n):
+                st = self._key_state(n, key)
+                if st[0] != "gone":
+                    sources[n] = st
+        if sources:
+            src = max(sources, key=lambda n: self._state_rank(sources[n]))
+            if sources[src] == tgt_state:
+                return True  # a sweep or earlier drain got there first
+            src_rec = self.roots[src].file_index.get(key)
+            if src_rec is None:
+                return False
+            if tgt_state[0] == "gone" and self._tombstone_wins(
+                    t_store, key, src_rec):
+                return True  # the write was deleted meanwhile: debt void
+            self._ship_key(src, tgt, key, src_rec, report)
+            return True
+        # no live local source. A local tombstone means the hinted write
+        # was deleted meanwhile — re-ingesting the staged bytes would
+        # mint a generation ABOVE the marker's and resurrect the key on
+        # the next sweep, so the debt is void instead.
+        for n, s in self.local_items():
+            if self.is_up(n) and key in s.lifecycle.tombstones:
+                return True
+        # otherwise the local job is likely still in flight: if the
+        # staged bytes survive, hand them to the target's own ingest
+        # pipeline; failing that keep the hint for the next pass
+        ref = h.get("spool_ref")
+        if ref and os.path.exists(ref):
+            dst = os.path.join(t_store.spool_dir(),
+                               f"hintship-{os.path.basename(ref)}")
+            with open(ref, "rb") as fin, open(dst, "wb") as fout:
+                while True:
+                    chunk = fin.read(1 << 20)
+                    if not chunk:
+                        break
+                    fout.write(chunk)
+            t_store.enqueue_ingest(
+                [(dst, repo_id, filename, h.get("base"))], cleanup=True)
+            report["requeued"] += 1
+            return True
+        return False
 
     # -- anti-entropy -----------------------------------------------------
     def _all_repos(self) -> Set[str]:
@@ -623,12 +921,12 @@ class StoreRouter:
         Touched roots persist their index and take a light structural
         ``fsck`` at the end. Sweeps serialize on a router-level lock."""
         with self._ae_lock:
+            self.anti_entropy_sweeps += 1
             report = {"repos": 0, "tombstones_applied": 0, "restored": 0,
                       "shipped_versions": 0, "shipped_bytes": 0,
                       "records_updated": 0, "skipped_roots": [],
                       "errors": []}
-            with self._health_lock:
-                pending = set(self._repair_pending)
+            pending = self._pending_repairs()
             todo = sorted(set(repos) if repos is not None
                           else self._all_repos() | pending)
             for repo in todo:
@@ -638,12 +936,20 @@ class StoreRouter:
                     report["errors"].append(f"{repo}: {type(e).__name__}: {e}")
                 report["repos"] += 1
             with self._health_lock:
-                self._repair_pending -= set(todo)
+                for repo in todo:
+                    self._repair_pending.pop(repo, None)
             touched = report.pop("_touched", set())
             for name in touched:
                 store = self.roots[name]
-                store.save_index()
-                rep = store.fsck(repair=True, spot_check=0)
+                try:  # a peer may die between its adopt and this persist
+                    store.save_index()
+                    rep = store.fsck(repair=True, spot_check=0)
+                except Exception as e:
+                    self.note_failure(name)
+                    report["errors"].append(
+                        f"post-repair persist on {name}: "
+                        f"{type(e).__name__}: {e}")
+                    continue
                 if not rep.ok:
                     report["errors"].append(
                         f"post-repair fsck on {name}: "
@@ -654,6 +960,20 @@ class StoreRouter:
     def _anti_entropy_repo(self, repo_id: str, report: Dict) -> None:
         group = self.replica_roots(repo_id)
         up = [n for n in group if self.is_up(n)]
+        # remote peers must be diffed against LIVE state, not a cached
+        # snapshot: refresh over the wire, and treat an unreachable peer
+        # exactly like a down root (skip; it converges once back)
+        live = []
+        for n in up:
+            store = self.roots[n]
+            if self._is_peer(store):
+                try:
+                    store.refresh_snapshot()
+                except Exception:
+                    self.note_failure(n)
+                    continue
+            live.append(n)
+        up = live
         skipped = [n for n in group if n not in up]
         for n in skipped:
             if n not in report["skipped_roots"]:
@@ -691,17 +1011,9 @@ class StoreRouter:
                     if not dstore.lifecycle.exists(v.key, v.gen):
                         continue
                     digest = dstore.container_digest(v.key, v.gen)
-                    src_path = dstore.lifecycle.version_path(v.key, v.gen)
-                    staged = os.path.join(
-                        store.spool_dir(),
+                    staged = self._stage_version(
+                        dstore, v.key, v.gen, store.spool_dir(),
                         f"restore-{v.vid.replace('/', '__')}")
-                    with open(src_path, "rb") as fin, \
-                            open(staged, "wb") as fout:
-                        while True:
-                            chunk = fin.read(1 << 20)
-                            if not chunk:
-                                break
-                            fout.write(chunk)
                     self._fault("restore.mid_copy")
                     if store.restore_version(v.key, v.gen, staged,
                                              expected_sha256=digest):
@@ -763,11 +1075,31 @@ class StoreRouter:
         return (rec["kind"], rec.get("ref", ""), int(rec.get("ref_gen", 0)),
                 rec.get("file_hash", ""))
 
+    def _stage_version(self, src_store, key: str, gen: int, dst_dir: str,
+                       name: str) -> str:
+        """Materialize one container version's verbatim bytes as a local
+        file in ``dst_dir``: a local source is copied, a remote peer's is
+        fetched over the wire (resumable, sha256-verified)."""
+        if self._is_peer(src_store):
+            return src_store.fetch_container(key, gen, dst_dir)
+        src_path = src_store.lifecycle.version_path(key, gen)
+        staged = os.path.join(dst_dir, name)
+        with open(src_path, "rb") as fin, open(staged, "wb") as fout:
+            while True:
+                chunk = fin.read(1 << 20)
+                if not chunk:
+                    break
+                fout.write(chunk)
+        return staged
+
     def _ship_key(self, src: str, tgt: str, key: str, rec: Dict,
                   report: Dict) -> None:
         """Re-ship one key from ``src`` to ``tgt``: the pinned generation's
         dependency closure as verbatim container bytes (dependencies first,
-        adoption is idempotent), then the index record."""
+        adoption is idempotent), then the index record. Either side may be
+        a remote peer — a local source ships its container file directly, a
+        peer source is first staged locally; ``adopt_container`` is the
+        polymorphic seam (in-process temp+rename vs. resumable upload)."""
         s_store, t_store = self.roots[src], self.roots[tgt]
         if rec.get("kind") == "container":
             anchor = make_vid(key, int(rec.get("gen", 0)))
@@ -782,11 +1114,25 @@ class StoreRouter:
             if t_store.lifecycle.get(vkey, vgen) is not None:
                 continue
             digest = s_store.container_digest(vkey, vgen)
+            if self._is_peer(s_store):
+                src_path = self._stage_version(
+                    s_store, vkey, vgen, t_store.spool_dir(),
+                    f"ship-{vid.replace('/', '__')}")
+                cleanup = True
+            else:
+                src_path, cleanup = v.path, False
             self._fault("anti_entropy.mid_copy")
-            if t_store.adopt_container(vkey, vgen, v.path,
-                                       expected_sha256=digest):
-                report["shipped_versions"] += 1
-                report["shipped_bytes"] += v.nbytes
+            try:
+                if t_store.adopt_container(vkey, vgen, src_path,
+                                           expected_sha256=digest):
+                    report["shipped_versions"] += 1
+                    report["shipped_bytes"] += v.nbytes
+            finally:
+                if cleanup:
+                    try:
+                        os.remove(src_path)
+                    except OSError:
+                        pass
         t_store.adopt_index_record(key, rec)
         report["records_updated"] += 1
 
@@ -865,7 +1211,12 @@ class StoreRouter:
                               "write_quorum": self.write_quorum,
                               "health": self.health(),
                               "repair_pending": pending,
-                              "read_repairs": self.read_repairs}
+                              "read_repairs": self.read_repairs,
+                              "anti_entropy_sweeps": self.anti_entropy_sweeps,
+                              "hints_recorded": self.hints_recorded,
+                              "hints_drained": self.hints_drained,
+                              "hints_pending": self.pending_hint_count(),
+                              "peers": self.peer_names()}
         return agg
 
     def ingest_jobs(self, limit: int = 64) -> List[Dict]:
@@ -946,13 +1297,26 @@ class StoreRouter:
     @staticmethod
     def open_roots(paths: Sequence[str], *, workers: int = 2,
                    replicas: int = 1,
-                   write_quorum: Optional[int] = None) -> "StoreRouter":
+                   write_quorum: Optional[int] = None,
+                   peers: Sequence[str] = ()) -> "StoreRouter":
         """CLI helper: open one store per path (index loaded when present),
-        named ``r0..rN`` with the path recorded for display."""
+        named ``r0..rN`` with the path recorded for display. ``peers`` are
+        remote replica URLs, mounted as ``p0..pN``
+        :class:`repro.serve.peer.PeerStore` roots behind the same
+        interface — replica groups may then span server processes."""
         stores: "OrderedDict[str, ZLLMStore]" = OrderedDict()
         for i, path in enumerate(paths):
             store = ZLLMStore(path, workers=workers)
             store.load_index()
             stores[f"r{i}"] = store
-        return StoreRouter(stores, replicas=replicas,
-                           write_quorum=write_quorum)
+        if peers:
+            from repro.serve.peer import PeerStore
+            for i, url in enumerate(peers):
+                stores[f"p{i}"] = PeerStore(url)
+        router = StoreRouter(stores, replicas=replicas,
+                             write_quorum=write_quorum)
+        # wire-protocol fault points fire through the router's hook
+        for s in stores.values():
+            if getattr(s, "is_peer", False):
+                s.fault_hook = router._fault
+        return router

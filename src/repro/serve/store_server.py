@@ -77,6 +77,8 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, unquote, urlsplit
 
+from repro.core.bitx import TMP_SUFFIX
+from repro.core.lifecycle import make_vid
 from repro.core.pipeline import ZLLMStore, _LRUCache
 from repro.serve.router import QuorumError, StoreRouter
 from repro.serve.singleflight import SingleFlight, TieredResponseCache
@@ -86,7 +88,7 @@ __all__ = ["RetrievalEngine", "StoreServer", "ServerThread", "ROUTES", "main"]
 _REASONS = {200: "OK", 202: "Accepted", 206: "Partial Content",
             304: "Not Modified",
             400: "Bad Request", 404: "Not Found", 405: "Method Not Allowed",
-            410: "Gone", 411: "Length Required",
+            409: "Conflict", 410: "Gone", 411: "Length Required",
             416: "Range Not Satisfiable", 500: "Internal Server Error",
             503: "Service Unavailable"}
 
@@ -116,6 +118,14 @@ ROUTES: Tuple[Tuple[str, str, str], ...] = (
      "integrity check; ?repair=1&spot_check=; per root or all"),
     ("GET|POST", "/admin/anti_entropy",
      "replica repair sweep: tombstones, quarantine-restore, re-ship diffs"),
+    ("GET", "/peer/index_digest",
+     "replication snapshot: per-key records, tombstones, version graph"),
+    ("GET", "/peer/container/{key@gN}",
+     "one container version's verbatim bytes (?digest=1 for sha256 only)"),
+    ("POST", "/peer/adopt",
+     "adopt shipped bytes: resumable container/restore upload or index record"),
+    ("POST", "/peer/tombstones",
+     "union a batch of (key, gen, ts) tombstones into the local store"),
     ("DELETE", "/repo/{repo_id}/file/{filename}",
      "tombstoned delete of one file on every replica (idempotent)"),
     ("DELETE", "/repo/{repo_id}",
@@ -386,11 +396,18 @@ class StoreServer:
                  idle_timeout: float = 30.0):
         self.router = (store if isinstance(store, StoreRouter)
                        else StoreRouter(store))
+        # engines decode from LOCAL stores only: a PeerStore root (remote
+        # replica) holds no mmap-able containers here — its own server
+        # decodes for its own clients
         self.engines: Dict[str, RetrievalEngine] = {
             name: RetrievalEngine(s, max_concurrency=max_concurrency,
                                   cache_bytes=cache_bytes,
                                   spill_bytes=spill_bytes, verify=verify)
-            for name, s in self.router.items()}
+            for name, s in self.router.items()
+            if not getattr(s, "is_peer", False)}
+        if not self.engines:
+            raise ValueError("StoreServer needs at least one local "
+                             "(non-peer) store root to serve from")
         # back-compat: the single-root engine (first root's under a router)
         self.engine = next(iter(self.engines.values()))
         self.idle_timeout = idle_timeout
@@ -571,14 +588,20 @@ class StoreServer:
             if req.method == "POST":
                 if url.path == "/ingest_repo":
                     await self._ingest_repo(writer, req)
+                elif url.path == "/peer/adopt":
+                    # streams its own body (resumable ship): NOT pre-drained
+                    await self._peer_adopt(writer, req, qs)
+                elif url.path == "/peer/tombstones":
+                    await self._peer_tombstones(writer, req)
                 elif url.path.startswith("/admin/"):
                     await self._drain_body(req)
                     await self._admin(writer, req, url.path, qs)
                 else:
                     await self._drain_body(req)
                     await self._respond(writer, 405,
-                                        {"error": "POST only on /ingest_repo "
-                                         "and /admin/*"}, keep=req.keep)
+                                        {"error": "POST only on /ingest_repo, "
+                                         "/peer/*, and /admin/*"},
+                                        keep=req.keep)
                 return
             if req.method != "GET":
                 await self._drain_body(req)
@@ -603,6 +626,10 @@ class StoreServer:
                                     keep=req.keep)
             elif url.path == "/stats":
                 await self._stats(writer, req)
+            elif url.path == "/peer/index_digest":
+                await self._peer_index_digest(writer, req)
+            elif len(segs) >= 3 and segs[0] == "peer" and segs[1] == "container":
+                await self._peer_container(writer, req, "/".join(segs[2:]), qs)
             elif url.path.startswith("/admin/"):
                 await self._admin(writer, req, url.path, qs)
             elif is_file_route:
@@ -714,8 +741,12 @@ class StoreServer:
         key_errors = 0
         quarantined: Optional[Exception] = None
         hard: Optional[Exception] = None
+        skipped_peers = 0
         for name in names:
-            engine = self.engines[name]
+            engine = self.engines.get(name)
+            if engine is None:  # remote peer replica: no local bytes to
+                skipped_peers += 1  # decode — its own server serves reads
+                continue
             try:
                 out = await attempt(engine)
             except KeyError as e:
@@ -747,6 +778,10 @@ class StoreServer:
             raise quarantined
         if hard is not None:
             raise hard
+        if key_errors == 0:
+            raise QuorumError(
+                f"no local replica of {repo_id} can serve reads "
+                f"({skipped_peers} remote peer(s) skipped)")
         raise last_key  # every replica answered KeyError -> 404
 
     async def _tensor_get(self, writer, req: _Request, repo_id: str,
@@ -1143,6 +1178,310 @@ class StoreServer:
                                 {"error": f"no admin route for {path}"},
                                 keep=req.keep)
 
+    # -- peer replication protocol --------------------------------------------
+    # The wire form of the in-process ship/adopt primitives: a remote
+    # StoreRouter's PeerStore client (repro.serve.peer) drives these four
+    # routes to diff index state, pull/push verbatim container bytes
+    # (sha256-authenticated, resumable via .part staging), adopt index
+    # records dependencies-first, and union tombstones.
+
+    def _local_stores(self) -> List[ZLLMStore]:
+        return [s for _, s in self.router.items()
+                if not getattr(s, "is_peer", False)]
+
+    def _peer_store(self, key: str) -> ZLLMStore:
+        """The local store that owns ``key`` (``repo_id/filename``) on this
+        node — peer adopts always land on local storage."""
+        single = self.router.single
+        if single is not None and not getattr(single, "is_peer", False):
+            return single
+        repo_id, _, filename = key.rpartition("/")
+        s = self.router.store(self.router.locate(repo_id, filename or key))
+        if not getattr(s, "is_peer", False):
+            return s
+        return self._local_stores()[0]  # placement named a remote replica
+
+    def _peer_snapshot_sync(self) -> Dict:
+        """Build the full replication snapshot (runs on the executor):
+        per-key index records sans local paths, the tombstone union, and
+        the container version graph (nbytes / quarantined / dedup edges) —
+        everything a remote anti-entropy pass needs to diff without
+        touching container bytes. ``digest`` summarizes the whole snapshot
+        so equal replicas can short-circuit on one string compare."""
+        keys: Dict[str, Dict] = {}
+        tombs: Dict[str, List] = {}
+        versions: Dict[str, Dict] = {}
+        bases: set = set()
+        read_gen = 0
+        for s in self._local_stores():
+            for k, rec in s.file_index.items():
+                keys[k] = {a: b for a, b in rec.items() if a != "path"}
+            for k, (g, ts) in s.lifecycle.tombstones.items():
+                cur = tombs.get(k)
+                if cur is None or (g, ts) > (cur[0], cur[1]):
+                    tombs[k] = [int(g), float(ts)]
+            edges = s.lifecycle.edges
+            for vid, v in s.lifecycle.versions.items():
+                versions[vid] = {"nbytes": v.nbytes,
+                                 "quarantined": bool(v.quarantined),
+                                 "edges": sorted(edges.get(vid, ()))}
+            bases.update(s.base_paths.keys())
+            read_gen = max(read_gen, s.read_gen)
+        payload = {"keys": keys, "tombstones": tombs, "versions": versions,
+                   "base_paths": sorted(bases), "read_gen": read_gen}
+        payload["digest"] = hashlib.sha256(
+            json.dumps(payload, sort_keys=True).encode()).hexdigest()
+        return payload
+
+    async def _peer_index_digest(self, writer, req: _Request) -> None:
+        snap = await asyncio.get_running_loop().run_in_executor(
+            self.engine._pool, self._peer_snapshot_sync)
+        await self._respond(writer, 200, snap, keep=req.keep)
+
+    async def _peer_container(self, writer, req: _Request, vid: str,
+                              qs: Dict[str, List[str]]) -> None:
+        """Serve one container version's verbatim bytes (``?digest=1`` for
+        its sha256 only). Range requests resume a killed download; the
+        ``x-zllm-sha256`` header always carries the FULL file's digest so
+        the fetcher verifies the assembled result, not the fragment."""
+        key, sep, gen_s = vid.rpartition("@g")
+        if not sep or not gen_s.isdigit():
+            await self._respond(writer, 400,
+                                {"error": f"bad container version id {vid!r} "
+                                 "(want <key>@g<N>)"}, keep=req.keep)
+            return
+        gen = int(gen_s)
+        store = self._peer_store(key)
+        loop = asyncio.get_running_loop()
+        allow_q = qs.get("allow_quarantined", ["0"])[0] not in ("0", "false", "")
+        # KeyError -> 404 and RuntimeError("quarantined") -> 410 in _route
+        digest = await loop.run_in_executor(
+            self.engine._pool,
+            lambda: store.container_digest(key, gen,
+                                           allow_quarantined=allow_q))
+        v = store.lifecycle.get(key, gen)
+        if qs.get("digest", ["0"])[0] not in ("0", "false", ""):
+            await self._respond(writer, 200,
+                                {"sha256": digest, "nbytes": v.nbytes},
+                                keep=req.keep)
+            return
+        with open(v.path, "rb") as f:  # immutable: safe to slurp + serve
+            data = await loop.run_in_executor(None, f.read)
+        await self._respond_ranged(writer, req, data,
+                                   [("x-zllm-sha256", digest)])
+
+    async def _read_json_body(self, writer, req: _Request) -> Optional[Dict]:
+        """Read a bounded JSON control-plane body; answers the error
+        response itself and returns None when the body is unusable."""
+        te = req.headers.get("transfer-encoding", "").lower()
+        try:
+            length = int(req.headers.get("content-length", "0"))
+        except ValueError:
+            length = -1
+        if "chunked" in te or length <= 0 or length > _MAX_JSON_BODY:
+            req.keep = False
+            await self._respond(writer, 411,
+                                {"error": "JSON body with content-length "
+                                 f"<= {_MAX_JSON_BODY} required"}, keep=False)
+            return None
+        body = await asyncio.wait_for(req.reader.readexactly(length),
+                                      timeout=60)
+        try:
+            return json.loads(body)
+        except ValueError:
+            await self._respond(writer, 400, {"error": "malformed JSON body"},
+                                keep=req.keep)
+            return None
+
+    async def _peer_adopt(self, writer, req: _Request,
+                          qs: Dict[str, List[str]]) -> None:
+        """Adopt shipped replica state. Three kinds:
+
+        - ``kind=container`` (default): a resumable byte upload. The body
+          appends to ``<spool>/adopt-<vid>.part`` at the offset declared in
+          ``x-zllm-offset`` — a mismatch answers ``409 {"offset": N}`` so a
+          killed transfer re-syncs instead of restarting; ``?stat=1`` asks
+          for the current offset without sending bytes. Once the declared
+          ``total`` is present the bytes are sha256-verified and adopted
+          via the store's temp+rename ``adopt_container``; the ``.part``
+          stage is then deleted (fsck sweeps any crash leftovers).
+        - ``kind=restore``: same upload discipline, but the bytes heal a
+          *quarantined* version via ``restore_version``.
+        - ``kind=record``: JSON ``{"key":..., "rec":...}`` adopted via
+          ``adopt_index_record``; a missing ref closure answers 409 (ship
+          the dependency containers first).
+        """
+        kind = qs.get("kind", ["container"])[0]
+        loop = asyncio.get_running_loop()
+        if kind == "record":
+            spec = await self._read_json_body(writer, req)
+            if spec is None:
+                return
+            try:
+                key, rec = spec["key"], dict(spec["rec"])
+            except (KeyError, TypeError):
+                await self._respond(writer, 400,
+                                    {"error": 'body must be {"key": ..., '
+                                     '"rec": {...}}'}, keep=req.keep)
+                return
+            store = self._peer_store(key)
+            try:
+                await loop.run_in_executor(
+                    self.engine._pool,
+                    lambda: store.adopt_index_record(key, rec))
+            except KeyError as e:  # ref target not live here yet
+                await self._respond(writer, 409, {"error": str(e)},
+                                    keep=req.keep)
+                return
+            await loop.run_in_executor(self.engine._pool, store.save_index)
+            await self._respond(writer, 200, {"adopted": True}, keep=req.keep)
+            return
+        if kind not in ("container", "restore"):
+            await self._drain_body(req)
+            await self._respond(writer, 400,
+                                {"error": f"unknown adopt kind {kind!r}"},
+                                keep=req.keep)
+            return
+        key = qs.get("key", [None])[0]
+        sha = qs.get("sha256", [""])[0]
+        try:
+            gen = int(qs.get("gen", ["-1"])[0])
+            total = int(qs.get("total", ["-1"])[0])
+        except ValueError:
+            gen = total = -1
+        if not key or gen < 0 or total < 0 or not sha:
+            req.keep = False
+            await self._respond(writer, 400,
+                                {"error": "adopt needs key, gen, sha256 and "
+                                 "total query params"}, keep=False)
+            return
+        store = self._peer_store(key)
+        vid = make_vid(key, gen)
+        part = os.path.join(store.spool_dir(),
+                            "adopt-" + vid.replace("/", "__") + TMP_SUFFIX)
+        have = os.path.getsize(part) if os.path.exists(part) else 0
+        already = store.lifecycle.exists(key, gen) and not store.lifecycle.get(
+            key, gen).quarantined
+        if qs.get("stat", ["0"])[0] not in ("0", "false", ""):
+            await self._drain_body(req)
+            await self._respond(writer, 200,
+                                {"offset": have, "adopted": already},
+                                keep=req.keep)
+            return
+        if already and kind == "container":
+            # idempotent short-circuit: the version is live here already
+            await self._drain_body(req)
+            try:
+                os.remove(part)
+            except OSError:
+                pass
+            await self._respond(writer, 200, {"adopted": False}, keep=req.keep)
+            return
+        try:
+            offset = int(req.headers.get("x-zllm-offset", "0"))
+            length = int(req.headers["content-length"])
+        except (KeyError, ValueError):
+            req.keep = False
+            await self._respond(writer, 411,
+                                {"error": "content-length and x-zllm-offset "
+                                 "required"}, keep=False)
+            return
+        if offset != have or offset + length != total:
+            # stale offset (e.g. the .part outlived a crashed transfer):
+            # tell the shipper where to resume; its body goes unread, so
+            # this connection cannot be reused
+            req.keep = False
+            await self._respond(writer, 409, {"offset": have}, keep=False)
+            return
+        received = 0
+        with open(part, "ab") as f:
+            while received < length:
+                chunk = await asyncio.wait_for(
+                    req.reader.read(min(_UPLOAD_CHUNK, length - received)),
+                    timeout=120)
+                if not chunk:
+                    # killed mid-ship: keep the .part for resume, drop conn
+                    raise ConnectionError("peer client closed mid-ship")
+                await loop.run_in_executor(None, f.write, chunk)
+                received += len(chunk)
+            f.flush()
+            os.fsync(f.fileno())
+        if kind == "restore":
+            try:
+                ok = await loop.run_in_executor(
+                    self.engine._pool,
+                    lambda: store.restore_version(key, gen, part,
+                                                  expected_sha256=sha))
+            except ValueError as e:  # sha mismatch: corrupt ship, restart
+                try:
+                    os.remove(part)
+                except OSError:
+                    pass
+                await self._respond(writer, 400, {"error": str(e)},
+                                    keep=req.keep)
+                return
+            if not ok:  # not quarantined: nothing to heal, stage is debris
+                try:
+                    os.remove(part)
+                except OSError:
+                    pass
+            await self._respond(writer, 200, {"restored": bool(ok)},
+                                keep=req.keep)
+            return
+        try:
+            adopted = await loop.run_in_executor(
+                self.engine._pool,
+                lambda: store.adopt_container(key, gen, part,
+                                              expected_sha256=sha))
+        except ValueError as e:  # sha mismatch: corrupt ship, restart clean
+            try:
+                os.remove(part)
+            except OSError:
+                pass
+            await self._respond(writer, 400, {"error": str(e)}, keep=req.keep)
+            return
+        # crash window under test: the version is live in memory + on disk
+        # but the index is not yet persisted — recovery is reopen + fsck +
+        # the next sweep's idempotent re-ship
+        store._fault("peer.adopt_pre_persist")
+        await loop.run_in_executor(self.engine._pool, store.save_index)
+        try:
+            os.remove(part)  # adopt copied the bytes: the stage is debris
+        except OSError:
+            pass
+        await self._respond(writer, 200, {"adopted": bool(adopted)},
+                            keep=req.keep)
+
+    async def _peer_tombstones(self, writer, req: _Request) -> None:
+        spec = await self._read_json_body(writer, req)
+        if spec is None:
+            return
+        batch = spec.get("tombstones")
+        if not isinstance(batch, list):
+            await self._respond(writer, 400,
+                                {"error": 'body must be {"tombstones": '
+                                 '[[key, gen, ts], ...]}'}, keep=req.keep)
+            return
+
+        def apply() -> int:
+            n = 0
+            touched = []
+            for key, gen, ts in batch:
+                store = self._peer_store(key)
+                if store.apply_tombstone(str(key), int(gen), float(ts)):
+                    n += 1
+                if store not in touched:
+                    touched.append(store)
+            for store in touched:
+                store.save_index()
+            return n
+
+        applied = await asyncio.get_running_loop().run_in_executor(
+            self.engine._pool, apply)
+        await self._respond(writer, 200,
+                            {"applied": applied, "batch": len(batch)},
+                            keep=req.keep)
+
     # -- response plumbing ----------------------------------------------------
     async def _respond(self, writer, status: int, obj: Dict, *,
                        keep: bool = False,
@@ -1270,11 +1609,16 @@ def main(argv=None) -> int:
     ap.add_argument("--write-quorum", type=int, default=None,
                     help="write acks required before a PUT succeeds "
                          "(default: majority of --replicas)")
+    ap.add_argument("--peer", action="append", default=[],
+                    help="remote peer URL (host:port; repeatable) mounted "
+                         "as a replica root behind the /peer/* protocol — "
+                         "replica groups then span server processes")
     args = ap.parse_args(argv)
 
     router = StoreRouter.open_roots(args.root, workers=args.store_workers,
                                     replicas=args.replicas,
-                                    write_quorum=args.write_quorum)
+                                    write_quorum=args.write_quorum,
+                                    peers=args.peer)
     for name, store in router.items():
         if not store.file_index:
             print(f"store_server: no index under {store.root} "

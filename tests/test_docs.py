@@ -108,9 +108,21 @@ def test_every_documented_route_is_served(live_server):
         ("POST", "/ingest_repo"):
             json.dumps({"dir": repo_dir, "repo_id": "org/doc2",
                         "sync": True}).encode(),
+        ("POST", "/peer/tombstones"):
+            json.dumps({"tombstones":
+                        [["org/gone/model.safetensors", 0, 1.0]]}).encode(),
+    }
+    # routes whose well-formed probe needs query parameters: the adopt
+    # route is polled with a ?stat=1 offset probe (mutates nothing but
+    # exercises the real parameter validation + spool stat path)
+    query_for = {
+        ("POST", "/peer/adopt"):
+            "?stat=1&key=org/doc/model.safetensors&gen=0&total=1&sha256="
+            + "0" * 64,
     }
     fill = {"{repo_id}": "org/doc", "{filename}": "model.safetensors",
-            "{tensor_name}": "t.weight"}
+            "{tensor_name}": "t.weight",
+            "{key@gN}": "org/doc/model.safetensors@g0"}
     conn = http.client.HTTPConnection(srv.host, srv.port, timeout=60)
     try:
         for methods, path, _ in ROUTES:
@@ -118,9 +130,10 @@ def test_every_documented_route_is_served(live_server):
             for k, v in fill.items():
                 concrete = concrete.replace(k, v)
             for method in methods.split("|"):
+                query = query_for.get((method, path), "")
                 if method == "PUT":
-                    concrete += "?sync=1"
-                conn.request(method, concrete,
+                    query = "?sync=1"
+                conn.request(method, concrete + query,
                              body=body_for.get((method, path)))
                 r = conn.getresponse()
                 payload = r.read()

@@ -477,6 +477,44 @@ def test_gc_fires_auto_compact_at_watermark(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Bugfix regression: the repair-pending backlog is capped and TTL-pruned
+# ---------------------------------------------------------------------------
+
+def test_repair_pending_backlog_caps_and_expires(tmp_path):
+    """Regression (failing-first): the backlog of repos awaiting a sweep
+    used to be a bare set — a flapping replica could grow it without
+    bound, and an entry whose sweep never came lived forever. It is now
+    an insertion-ordered, re-stampable map with a hard cap (oldest
+    evicted first) and a TTL prune on read."""
+    router = _cluster(str(tmp_path))
+    try:
+        router.REPAIR_PENDING_MAX = 4
+        for i in range(10):
+            router._note_repair_pending(f"org/bl{i}")
+        assert len(router._repair_pending) == 4
+        assert router._pending_repairs() == {f"org/bl{i}" for i in range(6, 10)}
+        # re-stamping refreshes an entry instead of duplicating it; the
+        # next insert evicts the oldest UN-refreshed repo
+        router._note_repair_pending("org/bl6")
+        router._note_repair_pending("org/new")
+        pending = router._pending_repairs()
+        assert "org/bl6" in pending and "org/new" in pending
+        assert "org/bl7" not in pending and len(router._repair_pending) == 4
+        # TTL prune: an expired backlog drains to empty on read
+        router.REPAIR_PENDING_TTL_S = 0.05
+        time.sleep(0.06)
+        assert router._pending_repairs() == set()
+        assert not router._repair_pending
+        # a sweep consumes what it swept, even for a vanished repo
+        router.REPAIR_PENDING_TTL_S = 3600.0
+        router._note_repair_pending("org/gone")
+        router.anti_entropy()
+        assert "org/gone" not in router._repair_pending
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
 # Bugfix regression: probe thundering herd after the backoff expires
 # ---------------------------------------------------------------------------
 
